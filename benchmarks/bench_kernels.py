@@ -1,0 +1,69 @@
+"""Kernel-level benchmark: memory-movement model + jitted-path timing.
+
+The fused kernel's claim (§3.2) is REDUCED MEMORY MOVEMENT: no COO
+intermediate write+read, no conversion re-sort, no recount.  We report the
+bytes-touched model per sampling level for both paths (exact, shape-derived)
+plus the jitted jnp wall-clock of each pipeline stage on this host.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.sampler import (build_indptr, relabel, sample_neighbors,
+                                unfused_coo_csc_pass)
+from repro.data.synthetic_graph import papers_like
+
+
+def bytes_model(S, F):
+    """Bytes written+read by intermediates of each path, per level."""
+    i4 = 4
+    samples = S * F * i4
+    # fused: write samples once, write R once (built in-loop)
+    fused = samples + (S + 1) * i4
+    # unfused: COO write (dst+src), COO read for sort, sorted write, read for
+    # recount, R write, scatter-back write+read
+    unfused = (2 * samples                # COO materialize (dst_pos + src)
+               + 2 * samples              # sort read + write
+               + samples                  # recount read
+               + (S + 1) * i4             # R write
+               + 2 * samples)             # inverse-permutation scatter
+    return fused, unfused
+
+
+def main() -> None:
+    ds = papers_like(scale=2)
+    g = ds.graph
+    rng = np.random.default_rng(0)
+
+    for S, F in ((1024, 5), (1024, 15), (4096, 10), (10240, 15)):
+        fused_b, unfused_b = bytes_model(S, F)
+        emit(f"kernels/bytes_model/S{S}_F{F}/fused_bytes", fused_b, "")
+        emit(f"kernels/bytes_model/S{S}_F{F}/unfused_bytes", unfused_b, "")
+        emit(f"kernels/bytes_model/S{S}_F{F}/movement_ratio",
+             unfused_b / fused_b, "x")
+
+    # jitted stage timing on host
+    seeds = jnp.asarray(rng.choice(g.num_nodes, 4096, replace=False)
+                        .astype(np.int32))
+
+    @jax.jit
+    def fused_path(seeds, salt):
+        samples, valid = sample_neighbors(g, seeds, 10, salt)
+        return relabel(seeds, samples, valid)[1], build_indptr(valid)
+
+    @jax.jit
+    def unfused_path(seeds, salt):
+        samples, valid = sample_neighbors(g, seeds, 10, salt)
+        s2, v2, indptr = unfused_coo_csc_pass(samples, valid)
+        return relabel(seeds, s2, v2)[1], indptr
+
+    t_f = timeit(fused_path, seeds, jnp.uint32(1))
+    t_u = timeit(unfused_path, seeds, jnp.uint32(1))
+    emit("kernels/level_path/fused_us", t_f * 1e6, "")
+    emit("kernels/level_path/unfused_us", t_u * 1e6, "")
+    emit("kernels/level_path/speedup", t_u / t_f, "x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Fig. 4: storage breakdown — topology vs node features.
+
+The observation motivating hybrid partitioning: features dominate, so
+replicating topology is cheap.  Reported analytically for the paper's
+full-scale graphs (int32 indptr/indices vs fp32/fp16 features) and
+measured on our synthetic datasets.
+"""
+from repro.data.synthetic_graph import (PAPER_TABLE1, papers_like,
+                                        products_like)
+from benchmarks.common import emit
+
+
+def analytic(name, nodes, edges, feat_dim, feat_bytes=4):
+    topo = 4 * (nodes + 1) + 4 * edges              # CSC int32
+    feats = nodes * feat_dim * feat_bytes
+    emit(f"fig4/{name}/topology_gb", topo / 1e9, "analytic")
+    emit(f"fig4/{name}/features_gb", feats / 1e9, "analytic")
+    emit(f"fig4/{name}/feature_fraction", 100.0 * feats / (feats + topo),
+         "percent")
+
+
+def main() -> None:
+    for name, d in PAPER_TABLE1.items():
+        fb = 2 if name in ("MAG240M", "IGBH-full") else 4   # fp16 features
+        analytic(name, d["nodes"], d["edges"], d["features"], fb)
+    for mk, tag in ((products_like, "products-like"),
+                    (papers_like, "papers-like")):
+        ds = mk()
+        stats = ds.storage_bytes()
+        emit(f"fig4/{tag}/topology_gb", stats["topology"] / 1e9, "measured")
+        emit(f"fig4/{tag}/features_gb", stats["features"] / 1e9, "measured")
+        emit(f"fig4/{tag}/feature_fraction",
+             100.0 * stats["feature_fraction"], "percent")
+
+
+if __name__ == "__main__":
+    main()

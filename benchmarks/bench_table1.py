@@ -1,0 +1,27 @@
+"""Paper Table 1: graph dataset statistics.
+
+Reports the paper's published numbers alongside our synthetic stand-ins
+(matched feature widths / class counts, CPU-tractable node counts).
+"""
+from repro.data.synthetic_graph import (PAPER_TABLE1, papers_like,
+                                        products_like)
+from benchmarks.common import emit
+
+
+def main() -> None:
+    for name, d in PAPER_TABLE1.items():
+        emit(f"table1/{name}/nodes", d["nodes"], "paper")
+        emit(f"table1/{name}/edges", d["edges"], "paper")
+        emit(f"table1/{name}/features", d["features"], "paper")
+        emit(f"table1/{name}/classes", d["classes"], "paper")
+    for mk, tag in ((products_like, "products-like"),
+                    (papers_like, "papers-like")):
+        ds = mk()
+        emit(f"table1/{tag}/nodes", ds.graph.num_nodes, "synthetic")
+        emit(f"table1/{tag}/edges", ds.graph.num_edges, "synthetic")
+        emit(f"table1/{tag}/features", ds.features.shape[1], "synthetic")
+        emit(f"table1/{tag}/classes", ds.num_classes, "synthetic")
+
+
+if __name__ == "__main__":
+    main()

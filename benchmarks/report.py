@@ -1,0 +1,95 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md roofline
+tables.
+
+  PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(dir_):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def dryrun_table(recs, mesh):
+    rows = ["| arch | shape | status | per-dev peak mem | collectives "
+            "(AR/AG/RS/A2A/CP) | compile |",
+            "|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP "
+                        f"({r['reason'][:42]}…) | - | - | - |")
+            continue
+        mem = r.get("memory", {})
+        cs = r.get("collective_schedule_counts", {})
+        coll = "/".join(str(cs.get(k, 0)) for k in
+                        ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['status']} "
+            f"| {fmt_bytes(mem.get('peak_estimate_bytes'))} "
+            f"| {coll} | {r.get('compile_s', '-')}s |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh="pod"):
+    rows = ["| arch | shape | t_compute | t_memory (adj) | t_collective "
+            "| dominant | MODEL/HLO flops |",
+            "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh or r["status"] != "ok" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        adj = rf.get("t_memory_adjusted_s")
+        adj_s = f" ({fmt_s(adj)})" if adj is not None else ""
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['t_compute_s'])} "
+            f"| {fmt_s(rf['t_memory_s'])}{adj_s} "
+            f"| {fmt_s(rf['t_collective_s'])} "
+            f"| **{rf['dominant']}** "
+            f"| {rf['useful_flops_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(f"## Dry-run ({args.mesh})\n")
+    print(dryrun_table(recs, args.mesh))
+    print(f"\n## Roofline ({args.mesh})\n")
+    print(roofline_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

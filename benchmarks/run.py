@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * bench_table1   — Table 1 dataset statistics
+  * bench_storage  — Fig. 4 topology-vs-features storage breakdown
+  * bench_sampling — Fig. 5 fused vs two-step sampling sweep + train step
+  * bench_epoch    — Fig. 6 vanilla / hybrid / hybrid+fused epoch times
+  * bench_kernels  — §3.2 memory-movement model + level-path timing
+"""
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_cache, bench_epoch, bench_kernels,
+                            bench_sampling, bench_storage, bench_table1)
+    mods = {
+        "table1": bench_table1,
+        "storage": bench_storage,
+        "sampling": bench_sampling,
+        "epoch": bench_epoch,
+        "kernels": bench_kernels,
+        "cache": bench_cache,
+    }
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in mods.items():
+        if only and name != only:
+            continue
+        mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""The paper's experiment in miniature: distributed GNN training with the
+three Fig. 6 scenarios (vanilla / hybrid / hybrid+fused) on 8 workers.
+
+Verifies the 2L -> 2 communication-round reduction, the identical loss
+trajectories, and reports per-scheme step times and communicated bytes.
+
+  PYTHONPATH=src python examples/distributed_hybrid.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dist
+from repro.core.partition import (build_layout, build_vanilla, edge_cut,
+                                  partition_graph, seeds_per_worker)
+from repro.data.synthetic_graph import make_power_law_graph
+from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+from repro.optim import apply_updates, init_opt_state
+
+P = 8
+
+
+def main():
+    ds = make_power_law_graph(30_000, 10, num_features=100, num_classes=47,
+                              seed=0)
+    assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
+    vplan = build_vanilla(layout)
+    print(f"{P} workers, edge-cut "
+          f"{edge_cut(ds.graph, assign)/ds.graph.num_edges:.1%}")
+
+    cfg = GNNConfig(in_dim=100, hidden_dim=128, num_classes=47,
+                    num_layers=3, fanouts=(8, 5, 5), dropout=0.0)
+    shards = dist.WorkerShard(features=layout.features, labels=layout.labels,
+                              local_indptr=vplan.local_indptr,
+                              local_indices=vplan.local_indices)
+
+    def loss_fn(p, mfgs, h_src, labels, valid):
+        return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
+
+    results = {}
+    for scheme in ("vanilla", "hybrid", "hybrid+fused"):
+        counter = dist.RoundCounter()
+        from repro.core.sampler import sample_level, sample_level_unfused
+        level_fn = (sample_level if scheme == "hybrid+fused"
+                    else sample_level_unfused)
+        step = dist.make_worker_step(
+            graph_replicated=(layout.graph if scheme.startswith("hybrid")
+                              else None),
+            offsets=layout.offsets, num_parts=P, fanouts=cfg.fanouts,
+            scheme="hybrid" if scheme.startswith("hybrid") else "vanilla",
+            loss_fn=loss_fn, level_fn=level_fn, counter=counter)
+
+        params = init_gnn_params(jax.random.key(0), cfg)
+        opt_state = init_opt_state(params)
+
+        @jax.jit
+        def train(params, opt_state, seeds, salt):
+            loss, grads = dist.run_stacked(step, params, shards, seeds, salt)
+            params, opt_state = apply_updates(params, grads, opt_state,
+                                              lr=0.006)     # paper's lr
+            return params, opt_state, loss
+
+        losses = []
+        seeds = seeds_per_worker(layout, 128, epoch_salt=0)
+        jax.block_until_ready(train(params, opt_state, seeds, jnp.uint32(0)))
+
+        t0 = time.time()
+        for s in range(6):
+            seeds = seeds_per_worker(layout, 128, epoch_salt=s)
+            params, opt_state, loss = train(params, opt_state, seeds,
+                                            jnp.uint32(s))
+            losses.append(round(float(loss), 6))
+        dt = (time.time() - t0) / 6
+        results[scheme] = losses
+        print(f"{scheme:13s} rounds/step={counter.rounds:2d} "
+              f"bytes/step={sum(counter.bytes_per_round):>12,} "
+              f"step={dt*1e3:7.1f}ms losses={losses[:3]}...")
+
+    assert results["vanilla"] == results["hybrid"] == \
+        results["hybrid+fused"], "schemes must be mathematically equivalent"
+    print("\nall three schemes produced IDENTICAL loss trajectories "
+          "(paper §4.2) ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Quickstart: single-machine sampling-based GNN training with FastSample.
+
+Builds a synthetic ogbn-products-shaped graph, samples mini-batches with the
+fused path, and trains a 2-layer GraphSAGE for a few epochs.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampler import sample_mfgs, sample_level
+from repro.data.synthetic_graph import make_power_law_graph
+from repro.models.gnn import (GNNConfig, gnn_accuracy, gnn_loss,
+                              init_gnn_params)
+from repro.optim import apply_updates, init_opt_state
+
+
+def main():
+    ds = make_power_law_graph(20_000, 10, num_features=100, num_classes=47,
+                              seed=0)
+    g = ds.graph
+    print(f"graph: {g.num_nodes:,} nodes, {g.num_edges:,} edges; "
+          f"storage {ds.storage_bytes()['feature_fraction']:.0%} features")
+
+    cfg = GNNConfig(in_dim=100, hidden_dim=128, num_classes=47,
+                    num_layers=2, fanouts=(10, 5), dropout=0.0)
+    params = init_gnn_params(jax.random.key(0), cfg)
+    opt_state = init_opt_state(params)
+    feats = jnp.asarray(ds.features)
+    labels = jnp.asarray(ds.labels)
+    labeled = np.nonzero(ds.labels >= 0)[0]
+
+    @jax.jit
+    def train_step(params, opt_state, seeds, salt):
+        mfgs = sample_mfgs(g, seeds, cfg.fanouts, salt,
+                           level_fn=sample_level)
+        src = mfgs[-1].src_nodes
+        h0 = feats[jnp.clip(src, 0)] * (src >= 0)[:, None]
+        lab = labels[jnp.clip(seeds, 0)]
+        loss, grads = jax.value_and_grad(gnn_loss)(
+            params, mfgs, h0, lab, seeds >= 0, cfg)
+        params, opt_state = apply_updates(params, grads, opt_state, lr=0.01)
+        return params, opt_state, loss
+
+    @jax.jit
+    def eval_acc(params, seeds, salt):
+        mfgs = sample_mfgs(g, seeds, cfg.fanouts, salt)
+        src = mfgs[-1].src_nodes
+        h0 = feats[jnp.clip(src, 0)] * (src >= 0)[:, None]
+        lab = labels[jnp.clip(seeds, 0)]
+        return gnn_accuracy(params, mfgs, h0, lab, seeds >= 0, cfg)
+
+    rng = np.random.default_rng(0)
+    B = 512
+    for epoch in range(5):
+        t0 = time.time()
+        losses = []
+        for step in range(8):
+            seeds = jnp.asarray(rng.choice(labeled, B, replace=False)
+                                .astype(np.int32))
+            params, opt_state, loss = train_step(
+                params, opt_state, seeds, jnp.uint32(epoch * 100 + step))
+            losses.append(float(loss))
+        seeds = jnp.asarray(rng.choice(labeled, B, replace=False)
+                            .astype(np.int32))
+        acc = float(eval_acc(params, seeds, jnp.uint32(9999)))
+        print(f"epoch {epoch}: loss {np.mean(losses):.3f} "
+              f"sample-acc {acc:.1%} ({time.time()-t0:.2f}s)")
+    assert acc > 0.3, "should beat 47-class chance comfortably"
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

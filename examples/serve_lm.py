@@ -1,0 +1,61 @@
+"""Batched-serving example over the assigned-arch model zoo: prefill a
+prompt batch and decode continuations with the KV/SSM caches, for one arch
+of each cache family.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.data.tokens import MarkovTokenSource
+from repro.models import lm
+
+
+def serve(arch: str, batch=4, prompt_len=16, gen=12):
+    cfg = get_reduced(arch)
+    params = lm.init_model(jax.random.key(0), cfg)
+    src = MarkovTokenSource(cfg.vocab_size, seed=1)
+    prompts = jnp.asarray(src.batch(batch, prompt_len - 1))
+
+    state = lm.init_decode_state(cfg, batch, prompt_len + gen + 1)
+
+    @jax.jit
+    def step(params, state, tok):
+        logits, state = lm.decode_step(params, state, {"tokens": tok}, cfg)
+        return jnp.argmax(logits[:, -1], axis=-1)[:, None], state
+
+    # prefill = batched decode over the prompt (cache-populating)
+    t0 = time.time()
+    tok = prompts[:, :1]
+    for t in range(prompts.shape[1]):
+        tok, state = step(params, state, prompts[:, t:t + 1])
+    prefill_t = time.time() - t0
+
+    t0 = time.time()
+    outs = []
+    for _ in range(gen):
+        tok, state = step(params, state, tok)
+        outs.append(tok)
+    dt = time.time() - t0
+    gen_toks = np.asarray(jnp.concatenate(outs, 1))
+    print(f"{arch:16s} prefill {prefill_t:5.2f}s  "
+          f"decode {gen * batch / dt:7.1f} tok/s  "
+          f"sample: {gen_toks[0][:8].tolist()}")
+    assert np.isfinite(gen_toks).all()
+
+
+def main():
+    for arch in ("stablelm_1p6b",      # dense GQA cache
+                 "mixtral_8x22b",      # MoE + SWA ring buffer
+                 "mamba2_130m",        # SSM O(1) state
+                 "zamba2_1p2b"):       # hybrid: SSM + shared-attn KV
+        serve(arch)
+    print("serving OK across cache families")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,324 @@
+"""Distributed sampling-based training step (§3.3, Fig. 3).
+
+One per-worker program, written against a named worker axis with
+``jax.lax`` collectives only (the paper likewise uses exclusively synchronous
+collectives).  The same function runs:
+
+  * under ``jax.vmap(..., axis_name=AXIS)``      — single-device simulation
+    (CPU container), bit-identical collective semantics;
+  * under ``jax.shard_map`` on a real mesh       — production path.
+
+Communication schemes (paper's accounting):
+
+  * vanilla  : topology + features partitioned.  Top level samples locally;
+               each of the L-1 lower levels needs a request round and a reply
+               round; feature fetch needs 2 more.           -> 2L rounds.
+  * hybrid   : topology replicated, features partitioned.   -> 2 rounds.
+
+Every ``exchange`` call increments a trace-time round counter so tests can
+assert the 2L -> 2 reduction structurally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.graph import CSCGraph
+from repro.core.mfg import MFG
+from repro.core.sampler import (build_indptr, hash_u32, relabel,
+                                sample_level, sample_mfgs)
+
+AXIS = "data"
+
+
+class RoundCounter:
+    """Counts communication rounds at trace time (program structure)."""
+
+    def __init__(self):
+        self.rounds = 0
+        self.bytes_per_round: list[int] = []
+
+    def tick(self, buf) -> None:
+        self.rounds += 1
+        self.bytes_per_round.append(
+            sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(buf)))
+
+
+def exchange(buf: jnp.ndarray, counter: RoundCounter | None) -> jnp.ndarray:
+    """One all_to_all communication round over the worker axis.
+
+    Per-worker ``buf`` has shape (P, cap, ...): row q is the payload destined
+    for worker q.  Returns the same layout where row q is the payload
+    *received from* worker q.
+    """
+    if counter is not None:
+        counter.tick(buf)
+    return lax.all_to_all(buf, AXIS, split_axis=0, concat_axis=0)
+
+
+# --------------------------------------------------------------------------
+# owner-based packing
+# --------------------------------------------------------------------------
+
+def owner_of(offsets: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return (jnp.searchsorted(offsets, ids, side="right") - 1).astype(jnp.int32)
+
+
+def pack_by_owner(ids: jnp.ndarray, owner: jnp.ndarray, num_parts: int):
+    """Group ``ids`` into per-peer request buffers of static capacity N.
+
+    Returns (buf (P, N) int32 padded -1, owner_idx (N,), slot_idx (N,)) such
+    that element i of ``ids`` sits at buf[owner_idx[i], slot_idx[i]].
+    """
+    N = ids.shape[0]
+    key = jnp.where(ids >= 0, owner, num_parts)
+    order = jnp.argsort(key, stable=True)
+    ids_s = ids[order]
+    key_s = key[order]
+    seg_start = jnp.searchsorted(key_s, jnp.arange(num_parts))
+    slot = (jnp.arange(N) - seg_start[jnp.clip(key_s, 0, num_parts - 1)]
+            ).astype(jnp.int32)
+
+    buf = jnp.full((num_parts, N), -1, jnp.int32)
+    row = jnp.where(key_s < num_parts, key_s, 0)
+    col = jnp.where(key_s < num_parts, slot, N)       # N -> dropped
+    buf = buf.at[row, col].set(jnp.where(key_s < num_parts, ids_s, -1),
+                               mode="drop")
+
+    owner_idx = jnp.zeros(N, jnp.int32).at[order].set(
+        jnp.clip(key_s, 0, num_parts - 1))
+    slot_idx = jnp.zeros(N, jnp.int32).at[order].set(jnp.clip(slot, 0, N - 1))
+    return buf, owner_idx, slot_idx
+
+
+# --------------------------------------------------------------------------
+# local-CSC sampling (vanilla workers only store their partition's in-edges)
+# --------------------------------------------------------------------------
+
+def sample_neighbors_local(local_indptr: jnp.ndarray,
+                           local_indices: jnp.ndarray,
+                           my_offset: jnp.ndarray,
+                           n_local: jnp.ndarray,
+                           ids: jnp.ndarray, fanout: int,
+                           salt) -> jnp.ndarray:
+    """Sample neighbors of (globally-identified) ``ids`` this worker owns.
+
+    Identical draw semantics and hash stream as
+    ``sampler.sample_neighbors`` — the property that makes vanilla and hybrid
+    schemes produce bit-identical minibatches (paper §4.2).
+    Returns samples (N, F) int32 global ids, -1 where invalid / not owned.
+    """
+    local = ids - my_offset
+    owned = (ids >= 0) & (local >= 0) & (local < n_local)
+    lrow = jnp.clip(local, 0)
+    start = local_indptr[lrow]
+    deg = jnp.where(owned, local_indptr[lrow + 1] - start, 0)
+
+    slots = jnp.arange(fanout, dtype=jnp.uint32)[None, :]
+    v = jnp.clip(ids, 0)
+    bits = hash_u32(v[:, None].astype(jnp.uint32) * jnp.uint32(2654435761)
+                    + slots, salt)
+    rand_idx = (bits % jnp.maximum(deg, 1)[:, None].astype(jnp.uint32)
+                ).astype(jnp.int32)
+    take_all = (deg <= fanout)[:, None]
+    col = jnp.where(take_all, jnp.arange(fanout, dtype=jnp.int32)[None, :],
+                    rand_idx)
+    valid = (jnp.arange(fanout)[None, :]
+             < jnp.minimum(deg, fanout)[:, None]) & owned[:, None]
+    samples = local_indices[start[:, None] + col]
+    return jnp.where(valid, samples, -1)
+
+
+# --------------------------------------------------------------------------
+# per-worker state
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class WorkerShard:
+    """Per-worker slice of the partitioned data (leading P axis when stacked).
+
+    Vanilla workers use local_indptr/local_indices; hybrid workers ignore
+    them (topology is a replicated closure constant instead).
+    """
+    features: jnp.ndarray       # (n_max, D)
+    labels: jnp.ndarray         # (n_max,)
+    local_indptr: jnp.ndarray   # (n_max + 1,)
+    local_indices: jnp.ndarray  # (nnz_max,)
+
+    def tree_flatten(self):
+        return (self.features, self.labels, self.local_indptr,
+                self.local_indices), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+# --------------------------------------------------------------------------
+# the two sampling schemes (per-worker programs)
+# --------------------------------------------------------------------------
+
+def hybrid_sample(graph: CSCGraph, seeds: jnp.ndarray,
+                  fanouts: Sequence[int], salt,
+                  level_fn=sample_level) -> list[MFG]:
+    """Topology replicated -> sampling is entirely local (0 rounds)."""
+    return sample_mfgs(graph, seeds, fanouts, salt, level_fn=level_fn)
+
+
+def vanilla_sample(shard: WorkerShard, offsets: jnp.ndarray,
+                   num_parts: int, seeds: jnp.ndarray,
+                   fanouts: Sequence[int], salt,
+                   counter: RoundCounter | None,
+                   fused: bool = False) -> list[MFG]:
+    """Topology partitioned -> 2 rounds per level below the top (Fig. 3).
+
+    fused=False additionally pays the DGL-style COO->CSC conversion per
+    level (paper Fig. 6 'vanilla' scenario); fused=True composes the
+    partitioned protocol with fused level construction (an ablation the
+    paper doesn't run but our harness can).
+    """
+    me = lax.axis_index(AXIS)
+    my_offset = offsets[me]
+    n_local = offsets[me + 1] - my_offset
+
+    def level_salt(depth):
+        return jnp.uint32(salt) * jnp.uint32(1000003) + depth
+
+    mfgs = []
+    frontier = seeds
+    for depth, fanout in enumerate(fanouts):
+        fanout = int(fanout)
+        if depth == 0:
+            # top level: seeds are local labeled nodes -> no communication
+            samples = sample_neighbors_local(
+                shard.local_indptr, shard.local_indices, my_offset, n_local,
+                frontier, fanout, level_salt(depth))
+        else:
+            own = owner_of(offsets, frontier)
+            buf, oidx, sidx = pack_by_owner(frontier, own, num_parts)
+            reqs = exchange(buf, counter)                       # round: ids
+            flat = reqs.reshape(-1)
+            got = sample_neighbors_local(
+                shard.local_indptr, shard.local_indices, my_offset, n_local,
+                flat, fanout, level_salt(depth))
+            reply = exchange(got.reshape(num_parts, -1, fanout),
+                             counter)                           # round: nbrs
+            samples = reply[oidx, sidx]
+            samples = jnp.where((frontier >= 0)[:, None], samples, -1)
+        valid = samples >= 0
+        if fused:
+            indptr = build_indptr(valid)
+        else:
+            from repro.core.sampler import unfused_coo_csc_pass
+            samples, valid, indptr = unfused_coo_csc_pass(samples, valid)
+        edges, src_nodes, num_src = relabel(frontier, samples, valid)
+        mfgs.append(MFG(dst_nodes=frontier, src_nodes=src_nodes,
+                        num_src=num_src, edges=edges, edge_mask=valid,
+                        indptr=indptr))
+        frontier = src_nodes
+    return mfgs
+
+
+def fetch_features(src_nodes: jnp.ndarray, offsets: jnp.ndarray,
+                   num_parts: int, features_local: jnp.ndarray,
+                   counter: RoundCounter | None) -> jnp.ndarray:
+    """The 2 feature rounds shared by both schemes (ids out, rows back)."""
+    me = lax.axis_index(AXIS)
+    my_offset = offsets[me]
+    n_local = features_local.shape[0]
+
+    own = owner_of(offsets, src_nodes)
+    buf, oidx, sidx = pack_by_owner(src_nodes, own, num_parts)
+    reqs = exchange(buf, counter)                               # round: ids
+    local = reqs - my_offset
+    ok = (reqs >= 0) & (local >= 0) & (local < n_local)
+    rows = features_local[jnp.clip(local, 0, n_local - 1)]
+    rows = rows * ok[..., None].astype(rows.dtype)
+    reps = exchange(rows, counter)                              # round: rows
+    h = reps[oidx, sidx]
+    return h * (src_nodes >= 0)[:, None].astype(h.dtype)
+
+
+# --------------------------------------------------------------------------
+# full distributed train step
+# --------------------------------------------------------------------------
+
+def make_worker_step(*, graph_replicated: CSCGraph | None,
+                     offsets: jnp.ndarray, num_parts: int,
+                     fanouts: Sequence[int], scheme: str,
+                     loss_fn: Callable, level_fn=sample_level,
+                     counter: RoundCounter | None = None,
+                     vanilla_fused: bool = False):
+    """Build the per-worker train step.
+
+    loss_fn(params, mfgs, h_src, seed_labels, seed_valid) -> scalar loss.
+    Returns step(params, shard, seeds, salt) -> (loss, grads), with grads
+    already pmean-ed over the worker axis.
+
+    scheme: "vanilla" | "hybrid" (hybrid also covers hybrid+fused via
+    level_fn=repro.kernels.ops.fused_sample_level).
+    """
+    if scheme not in ("vanilla", "hybrid"):
+        raise ValueError(scheme)
+    if scheme == "hybrid" and graph_replicated is None:
+        raise ValueError("hybrid scheme needs the replicated topology")
+
+    def step(params, shard: WorkerShard, seeds, salt):
+        if scheme == "hybrid":
+            mfgs = hybrid_sample(graph_replicated, seeds, fanouts, salt,
+                                 level_fn=level_fn)
+        else:
+            mfgs = vanilla_sample(shard, offsets, num_parts, seeds,
+                                  fanouts, salt, counter,
+                                  fused=vanilla_fused)
+
+        h_src = fetch_features(mfgs[-1].src_nodes, offsets, num_parts,
+                               shard.features, counter)
+
+        me = lax.axis_index(AXIS)
+        local_seed = jnp.clip(seeds - offsets[me], 0,
+                              shard.labels.shape[0] - 1)
+        seed_labels = shard.labels[local_seed]
+        seed_valid = seeds >= 0
+
+        def objective(p):
+            return loss_fn(p, mfgs, h_src, seed_labels, seed_valid)
+
+        loss, grads = jax.value_and_grad(objective)(params)
+        grads = lax.pmean(grads, AXIS)
+        loss = lax.pmean(loss, AXIS)
+        return loss, grads
+
+    return step
+
+
+def run_stacked(step, params, shards: WorkerShard, seeds, salt):
+    """Single-device simulation: vmap over the stacked worker axis."""
+    vstep = jax.vmap(step, in_axes=(None, 0, 0, None), axis_name=AXIS)
+    loss, grads = vstep(params, shards, seeds, salt)
+    # pmean makes every worker's copy identical; take worker 0's
+    return loss[0], jax.tree.map(lambda g: g[0], grads)
+
+
+def make_shard_map_step(step, mesh, params_spec, shard_spec, seeds_spec):
+    """Production path: the same per-worker program under shard_map."""
+    from jax.sharding import PartitionSpec as P
+
+    def wrapper(params, shards, seeds, salt):
+        squeeze = lambda a: a[0]
+        shards1 = jax.tree.map(squeeze, shards)
+        seeds1 = seeds[0]
+        loss, grads = step(params, shards1, seeds1, salt)
+        return loss, grads
+
+    return jax.shard_map(
+        wrapper, mesh=mesh,
+        in_specs=(params_spec, shard_spec, seeds_spec, P()),
+        out_specs=(P(), params_spec),
+        check_vma=False)

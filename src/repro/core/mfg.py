@@ -1,0 +1,71 @@
+"""Message Flow Graphs (MFGs): the padded bipartite graphs of §3.1.
+
+For an L-layer GNN, sampling yields L bipartite graphs G^l = (V^{l-1}, V^l,
+E^{l-1}).  On TPU everything is fixed-shape, so an MFG holds:
+
+  dst_nodes   (S,)       global ids of the target nodes V^l (= the seeds)
+  src_nodes   (S + S*F,) global ids of V^{l-1}, padded with -1.  The first S
+                         entries are exactly ``dst_nodes`` (DGL's prefix
+                         convention: a target node is also a source so that
+                         h^l(i) can read h^{l-1}(i)).
+  num_src     ()         number of valid entries in src_nodes
+  edges       (S, F)     *local* src index per sampled edge, -1 when invalid
+  edge_mask   (S, F)     validity mask
+  indptr      (S + 1,)   the fused-CSC row pointer R_l of Algorithm 1
+                         (cumsum of per-seed valid-edge counts)
+
+``edges``/``edge_mask`` are the padded equivalent of the C_l vector; ``indptr``
+is carried verbatim so kernel and reference agree with the paper's output.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class MFG:
+    dst_nodes: jnp.ndarray
+    src_nodes: jnp.ndarray
+    num_src: jnp.ndarray
+    edges: jnp.ndarray
+    edge_mask: jnp.ndarray
+    indptr: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.dst_nodes, self.src_nodes, self.num_src, self.edges,
+                self.edge_mask, self.indptr), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def num_dst(self) -> int:
+        return self.dst_nodes.shape[0]
+
+    @property
+    def src_capacity(self) -> int:
+        return self.src_nodes.shape[0]
+
+    @property
+    def fanout(self) -> int:
+        return self.edges.shape[1]
+
+
+def mean_aggregate(mfg: MFG, h_src: jnp.ndarray) -> jnp.ndarray:
+    """Masked mean of sampled-neighbor features per target node.
+
+    h_src: (src_capacity, D) features aligned with ``mfg.src_nodes``.
+    Returns (num_dst, D).  Pure-jnp reference; the Pallas hot-spot kernel in
+    ``repro.kernels.sage_aggregate`` computes the same quantity.
+    """
+    idx = jnp.clip(mfg.edges, 0)
+    gathered = h_src[idx]                                    # (S, F, D)
+    mask = mfg.edge_mask[..., None].astype(h_src.dtype)
+    total = jnp.sum(gathered * mask, axis=1)
+    count = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    return total / count

@@ -1,0 +1,58 @@
+"""Jit'd public wrappers dispatching to the Pallas kernels.
+
+On this CPU container kernels run with ``interpret=True`` (the kernel body
+executed exactly as written); on TPU the same pallas_calls compile natively.
+Set ``REPRO_KERNEL_INTERPRET=0`` in a TPU deployment.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import CSCGraph
+from repro.core.mfg import MFG
+from repro.core.sampler import build_indptr, relabel
+from repro.kernels import fused_sample as _fs
+from repro.kernels import sage_aggregate as _agg
+
+INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
+
+
+def fused_sample(graph: CSCGraph, seeds: jnp.ndarray, fanout: int, salt,
+                 window: int = _fs.MAX_DEG_WINDOW):
+    """Kernel-backed neighbor sampling emitting CSC directly (Algorithm 1)."""
+    return _fs.fused_sample(graph.indptr, graph.indices, seeds,
+                            jnp.asarray(salt, jnp.uint32), fanout=fanout,
+                            window=window, interpret=INTERPRET)
+
+
+def fused_sample_level(graph: CSCGraph, seeds: jnp.ndarray, fanout: int,
+                       salt) -> MFG:
+    """Drop-in ``level_fn`` for ``sample_mfgs`` backed by the fused kernel.
+
+    The kernel emits (samples, R); the sort-based relabel (Algorithm 1's
+    second loop, DESIGN.md §2) finishes the MFG.
+    """
+    samples, indptr = fused_sample(graph, seeds, fanout, salt)
+    valid = samples >= 0
+    edges, src_nodes, num_src = relabel(seeds, samples, valid)
+    return MFG(dst_nodes=seeds, src_nodes=src_nodes, num_src=num_src,
+               edges=edges, edge_mask=valid, indptr=indptr)
+
+
+def sage_aggregate(mfg: MFG, h_src: jnp.ndarray, *, tile_s: int = 128,
+                   tile_n: int = 128) -> jnp.ndarray:
+    """Kernel-backed masked neighbor-mean (same contract as
+    ``repro.core.mfg.mean_aggregate``)."""
+    return _agg.sage_aggregate(mfg.edges, h_src, tile_s=tile_s,
+                               tile_n=tile_n, interpret=INTERPRET)
+
+
+def feature_gather(ids: jnp.ndarray, table: jnp.ndarray, *,
+                   tile_i: int = 128, tile_t: int = 128) -> jnp.ndarray:
+    """Kernel-backed row gather (hybrid feature-fetch payload hot-spot)."""
+    from repro.kernels import feature_gather as _fg
+    return _fg.feature_gather(ids, table, tile_i=tile_i, tile_t=tile_t,
+                              interpret=INTERPRET)

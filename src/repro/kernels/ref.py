@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth).
+
+Each kernel in this package has its exact reference here; tests sweep shapes
+and dtypes and assert the kernel (interpret=True on CPU) matches.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.graph import CSCGraph
+from repro.core.mfg import MFG, mean_aggregate
+from repro.core.sampler import build_indptr, sample_neighbors
+
+
+def ref_fused_sample(graph: CSCGraph, seeds: jnp.ndarray, fanout: int,
+                     salt) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for kernels.fused_sample: (samples (S,F) int32, R (S+1,) int32).
+
+    Matches Algorithm 1's outputs: per-seed neighbor draws in CSC order plus
+    the row-pointer vector R_l.
+    """
+    samples, valid = sample_neighbors(graph, seeds, fanout, salt)
+    return samples, build_indptr(valid)
+
+
+def ref_feature_gather(ids: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.feature_gather: table[ids], zero rows for -1."""
+    rows = table[jnp.clip(ids, 0)]
+    return rows * (ids >= 0)[:, None].astype(table.dtype)
+
+
+def ref_mean_aggregate(edges: jnp.ndarray, h_src: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.sage_aggregate.
+
+    edges: (S, F) int32 local src ids, -1 invalid.  h_src: (N, D).
+    Returns (S, D) masked mean.
+    """
+    mask = edges >= 0
+    idx = jnp.clip(edges, 0)
+    gathered = h_src[idx]                                  # (S, F, D)
+    m = mask[..., None].astype(h_src.dtype)
+    total = jnp.sum(gathered * m, axis=1)
+    count = jnp.maximum(jnp.sum(m, axis=1), jnp.asarray(1, h_src.dtype))
+    return total / count

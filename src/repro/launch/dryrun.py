@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the dry-run (and only the dry-run) needs 512 placeholder devices.
+
+For each combo this produces:
+  * the REAL module (scan-over-layers, remat): compile success proof +
+    memory_analysis (bytes per device),
+  * two UNROLLED depth probes (1 and 2 depth units, no remat):
+    cost_analysis FLOPs/bytes + HLO-parsed collective bytes, extrapolated
+    to full depth (see repro.roofline),
+  * the roofline terms + dominant bottleneck.
+
+Results are printed and appended as JSON lines to
+``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_ALIASES, ModelConfig, SHAPES, ShapeConfig,
+                           get_config, get_shape)
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro import roofline
+from repro.models import lm
+from repro.optim import apply_updates
+from repro.optim.optimizers import clip_by_global_norm
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention arch: 512k decode requires "
+                       "sub-quadratic attention (DESIGN.md §5 skip)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, *, remat: bool, unroll: bool):
+    mdt = S.moment_dtype_for(cfg)
+
+    def train_step(params, opt_state, batch):
+        def objective(p):
+            loss, m = lm.lm_loss(p, batch, cfg, remat=remat, unroll=unroll)
+            return loss, m
+        (loss, metrics), grads = jax.value_and_grad(
+            objective, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = apply_updates(params, grads, opt_state,
+                                          kind="adamw", lr=1e-4,
+                                          moment_dtype=mdt)
+        return params, opt_state, loss
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, *, remat: bool, unroll: bool):
+    def prefill_step(params, batch):
+        logits, _ = lm.forward(params, batch, cfg, remat=remat,
+                               unroll=unroll,
+                               last_only=cfg.prefill_last_only)
+        # score-only prefill output: next-token logits
+        return logits[:, -1, :]
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, *, unroll: bool):
+    def serve_step(params, state, batch):
+        logits, new_state = lm.decode_step(params, state, batch, cfg,
+                                           unroll=unroll)
+        return jnp.argmax(logits[:, -1, :], axis=-1), new_state
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# lower + compile one configuration
+# ---------------------------------------------------------------------------
+
+def lower_combo(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                remat: bool = True, unroll: bool = False,
+                donate: bool = True):
+    """Returns (lowered, meta) for the given combo on the given mesh."""
+    params_struct = S.abstract_params(cfg)
+    pshard = S.param_shardings_tree(params_struct, mesh)
+    batch_struct = S.input_specs(cfg, shape)
+    bshard = S.batch_shardings(batch_struct, mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            opt_struct = S.abstract_opt_state(cfg, params_struct)
+            oshard = S.opt_shardings_tree(opt_struct, params_struct, mesh)
+            fn = build_train_step(cfg, remat=remat, unroll=unroll)
+            jf = jax.jit(fn,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard,
+                                        NamedSharding(mesh, P())),
+                         donate_argnums=(0, 1) if donate else ())
+            lowered = jf.lower(params_struct, opt_struct, batch_struct)
+        elif shape.kind == "prefill":
+            fn = build_prefill_step(cfg, remat=remat, unroll=unroll)
+            jf = jax.jit(fn, in_shardings=(pshard, bshard))
+            lowered = jf.lower(params_struct, batch_struct)
+        else:  # decode
+            state_struct = S.abstract_decode_state(cfg, shape)
+            sshard = S.decode_state_shardings(state_struct, mesh)
+            fn = build_serve_step(cfg, unroll=unroll)
+            jf = jax.jit(fn, in_shardings=(pshard, sshard, bshard),
+                         out_shardings=(
+                             NamedSharding(mesh, P()), sshard),
+                         donate_argnums=(1,) if donate else ())
+            lowered = jf.lower(params_struct, state_struct, batch_struct)
+    return lowered
+
+
+def depth_units(cfg: ModelConfig) -> tuple[int, ModelConfig, ModelConfig]:
+    """(units, cfg@1unit, cfg@2units) for the cost probes."""
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        every = cfg.shared_attn_every
+        units = cfg.num_layers / every          # fractional remainder ok
+        c1 = dataclasses.replace(cfg, num_layers=every)
+        c2 = dataclasses.replace(cfg, num_layers=2 * every)
+        return units, c1, c2
+    if cfg.is_encdec:
+        units = cfg.num_layers
+        c1 = dataclasses.replace(cfg, num_layers=1, encoder_layers=1)
+        c2 = dataclasses.replace(cfg, num_layers=2, encoder_layers=2)
+        return units, c1, c2
+    units = cfg.num_layers
+    c1 = dataclasses.replace(cfg, num_layers=1)
+    c2 = dataclasses.replace(cfg, num_layers=2)
+    return units, c1, c2
+
+
+def probe_costs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    """Compile unrolled 1- and 2-unit modules, extrapolate to full depth."""
+    from repro.models import attention as attn_mod
+    units, c1, c2 = depth_units(cfg)
+    metrics = []
+    attn_mod.PROBE_UNROLL = True          # count chunked-attention blocks
+    try:
+        for c in (c1, c2):
+            lowered = lower_combo(c, shape, mesh, remat=False, unroll=True,
+                                  donate=False)
+            compiled = lowered.compile()
+            ca = compiled.cost_analysis() or {}
+            txt = compiled.as_text()
+            coll = roofline.collective_bytes(txt)
+            metrics.append({
+                "flops": float(ca.get("flops", 0.0)),
+                "hbm_bytes": float(ca.get("bytes accessed", 0.0)),
+                "coll_bytes": float(coll["total_bytes"]),
+                "fusable": float(roofline.fusable_bytes(txt)),
+            })
+    finally:
+        attn_mod.PROBE_UNROLL = False
+    return roofline.extrapolate(metrics[0], metrics[1], units)
+
+
+def run_combo(arch: str, shape_name: str, mesh_name: str,
+              *, skip_probes: bool = False, out_dir: str | None = None,
+              param_overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if param_overrides:
+        cfg = dataclasses.replace(cfg, **param_overrides)
+    shape = get_shape(shape_name)
+    tp = 16
+    if "_tp" in mesh_name:
+        tp = int(mesh_name.split("_tp")[1])
+    mesh = make_production_mesh(
+        multi_pod=mesh_name.startswith("multipod"), model_parallel=tp)
+    chips = mesh.devices.size
+
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": chips}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _emit(rec, out_dir)
+        return rec
+
+    t0 = time.time()
+    try:
+        # 1) the REAL module: scan + remat, full depth
+        lowered = lower_combo(cfg, shape, mesh, remat=(shape.kind == "train"))
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        rec["compile_s"] = round(time.time() - t0, 1)
+        rec["memory"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+        }
+        coll_sched = roofline.collective_bytes(compiled.as_text())
+        rec["collective_schedule_counts"] = coll_sched["counts"]
+
+        # 2) depth probes -> roofline terms
+        if not skip_probes:
+            costs = probe_costs(cfg, shape, mesh)
+            terms = roofline.RooflineTerms(
+                flops=costs["flops"], hbm_bytes=costs["hbm_bytes"],
+                coll_bytes=costs["coll_bytes"],
+                fusable=costs.get("fusable", 0.0),
+                model_flops_global=roofline.model_flops(cfg, shape),
+                chips=chips)
+            rec["roofline"] = terms.as_dict()
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — a failure IS the result here
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    _emit(rec, out_dir)
+    return rec
+
+
+def _emit(rec: dict, out_dir: str | None):
+    line = {k: v for k, v in rec.items() if k != "traceback"}
+    print(json.dumps(line))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch id (e.g. qwen2-7b); omit with --all")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="pod",
+                    help="pod | multipod | both | pod_tpN | multipod_tpN "
+                         "(N-way model parallelism over the same chips)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-probes", action="store_true",
+                    help="compile-only (no roofline probes)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--opt", default="",
+                    help="comma list of beyond-paper optimizations: "
+                         "prefill_last,moe_shard,attn_chunk[:N]")
+    args = ap.parse_args()
+
+    overrides = {}
+    for o in filter(None, args.opt.split(",")):
+        if o == "prefill_last":
+            overrides["prefill_last_only"] = True
+        elif o == "moe_shard":
+            overrides["moe_shard_constraints"] = True
+        elif o.startswith("moe_group"):
+            overrides["moe_num_groups"] = int(o.split(":")[1]) \
+                if ":" in o else 32
+        elif o.startswith("attn_chunk"):
+            overrides["attn_chunk"] = int(o.split(":")[1]) \
+                if ":" in o else 1024
+        elif o.startswith("ce_chunk"):
+            overrides["ce_seq_chunk"] = int(o.split(":")[1]) \
+                if ":" in o else 512
+        elif o == "ssm_shard":
+            overrides["ssm_state_constraints"] = True
+
+    archs = list(ARCH_ALIASES) if args.all else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                rec = run_combo(arch, shape, mesh,
+                                skip_probes=args.skip_probes,
+                                out_dir=args.out,
+                                param_overrides=overrides or None)
+                n_fail += rec["status"] == "fail"
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""ShapeDtypeStruct stand-ins + sharding trees for every (arch x shape).
+
+Nothing here allocates device memory: params, optimizer state, caches and
+batches are built with ``jax.eval_shape`` and sharded by the rules in
+``repro.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.optim import init_opt_state
+from repro.sharding import (batch_spec, cache_spec, dp_axes, param_specs)
+
+VLM_PATCH_FRACTION = 4      # n_patches = seq_len // 4 for vlm shapes
+
+
+def moment_dtype_for(cfg: ModelConfig):
+    """bf16 Adam moments for >=100B-param configs (documented trade-off)."""
+    return jnp.bfloat16 if cfg.param_count() > 100e9 else jnp.float32
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: lm.init_model(k, cfg), jax.random.key(0))
+
+
+def abstract_opt_state(cfg: ModelConfig, params_struct):
+    return jax.eval_shape(
+        partial(init_opt_state, kind="adamw",
+                moment_dtype=moment_dtype_for(cfg)), params_struct)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model-input ShapeDtypeStructs for one input shape."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        return batch
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        n_patch = S // VLM_PATCH_FRACTION
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, n_patch, cfg.d_model), jnp.bfloat16)
+        batch["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    if cfg.is_encdec:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def abstract_decode_state(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: lm.init_decode_state(cfg, shape.global_batch, shape.seq_len))
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_struct: dict, mesh: Mesh):
+    def one(name, s):
+        if name == "positions":                       # (3, B, S)
+            dp = dp_axes(mesh)
+            ax = dp if len(dp) > 1 else dp[0]
+            sp = P(None, ax, None) \
+                if s.shape[1] % _prod(mesh, dp) == 0 else P()
+            return NamedSharding(mesh, sp)
+        return NamedSharding(mesh, batch_spec(s.shape, mesh))
+    return {k: one(k, v) for k, v in batch_struct.items()}
+
+
+def _prod(mesh, axes):
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def decode_state_shardings(state_struct, mesh: Mesh):
+    def rule(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        shp = leaf.shape
+        if len(shp) == 0:
+            return NamedSharding(mesh, P())
+        if "ssm" in name and len(shp) == 5:           # (L,B,H,P,N)
+            return NamedSharding(mesh, cache_spec(shp, mesh, kv_head_dim=2))
+        if len(shp) == 5:                              # kv caches (L,B,C,H,D)
+            return NamedSharding(mesh, cache_spec(shp, mesh, kv_head_dim=3))
+        if len(shp) >= 2:                              # conv buffers etc.
+            sp = [None] * len(shp)
+            dp = dp_axes(mesh)
+            ax = dp if len(dp) > 1 else dp[0]
+            if shp[1] % _prod(mesh, dp) == 0:
+                sp[1] = ax
+            return NamedSharding(mesh, P(*sp))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(rule, state_struct)
+
+
+def param_shardings_tree(params_struct, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_struct, mesh))
+
+
+def opt_shardings_tree(opt_struct, params_struct, mesh: Mesh):
+    pspecs = param_specs(params_struct, mesh)
+    return type(opt_struct)(
+        step=NamedSharding(mesh, P()),
+        mu=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
+        nu=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
+    )

@@ -1,0 +1,251 @@
+"""GQA attention: training (full-sequence), prefill, and cached decode.
+
+Supports grouped KV heads, QKV bias (Qwen2), sliding-window masks (Mixtral /
+Danube), M-RoPE (Qwen2-VL), and cross-attention (Whisper).  Decode keeps a
+functional KV cache; sliding-window archs use a ring buffer of size
+``window`` so a 512k context costs O(window) memory (the long_500k
+requirement).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models.layers import apply_rope, dense_init, dtype_of
+
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False):
+    dt = dtype_of(cfg.param_dtype)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dt),
+        "wk": dense_init(ks[1], d, Hkv * hd, dt),
+        "wv": dense_init(ks[2], d, Hkv * hd, dt),
+        "wo": dense_init(ks[3], H * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((Hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((Hkv * hd,), jnp.float32)
+    return p
+
+
+def _project_q(p, x, cfg):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+    return q.reshape(B, S, cfg.num_heads, cfg.resolved_head_dim)
+
+
+def _project_kv(p, x, cfg):
+    B, S, _ = x.shape
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    hd = cfg.resolved_head_dim
+    return (k.reshape(B, S, cfg.num_kv_heads, hd),
+            v.reshape(B, S, cfg.num_kv_heads, hd))
+
+
+def _gqa_scores(q, k):
+    """q (B,Sq,H,Dh), k (B,Sk,Hkv,Dh) -> (B,Hkv,G,Sq,Sk) grouped scores."""
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / (Dh ** 0.5)
+
+
+def _gqa_out(probs, v, B, Sq, H, Dh):
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, H * Dh)
+
+
+def attend(p, x, positions, cfg: ModelConfig, *, causal: bool = True,
+           kv_x: jnp.ndarray | None = None,
+           kv_positions: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    B, S, _ = x.shape
+    H, Dh = cfg.num_heads, cfg.resolved_head_dim
+
+    q = _project_q(p, x, cfg)
+    src = kv_x if kv_x is not None else x
+    k, v = _project_kv(p, src, cfg)
+
+    is_self = kv_x is None
+    if is_self:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+
+    if is_self and causal and cfg.attn_chunk and S % cfg.attn_chunk == 0 \
+            and S > cfg.attn_chunk:
+        out = _chunked_causal_attention(q, k, v, cfg)
+        return out.reshape(B, S, H * Dh) @ p["wo"]
+
+    scores = _gqa_scores(q, k).astype(jnp.float32)
+
+    Sk = k.shape[1]
+    if is_self and causal:
+        qi = jnp.arange(S)[:, None]
+        ki = jnp.arange(Sk)[None, :]
+        mask = ki <= qi
+        if cfg.window:
+            mask &= ki > qi - cfg.window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v, B, S, H, Dh)
+    return out @ p["wo"]
+
+
+# Set True by dryrun cost probes: fully unrolls the chunk loops so XLA's
+# cost analysis (which counts a while body once) sees every block.
+PROBE_UNROLL = False
+
+
+def _chunked_causal_attention(q, k, v, cfg: ModelConfig):
+    """Flash-style online-softmax attention over KV chunks (§Perf #3).
+
+    Never materializes the (S, S) score matrix: a lax.scan over KV chunks
+    carries the running max / denominator / weighted sum, so HBM traffic per
+    layer drops from O(S^2) score bytes to O(S * Dh).  Numerically identical
+    to the naive path (same f32 softmax accumulation; verified in
+    tests/test_models_extra.py).
+    """
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    C = cfg.attn_chunk
+    n = S // C
+    qg = q.reshape(B, n, C, Hkv, G, Dh)
+    kc = k.reshape(B, n, C, Hkv, Dh)
+    vc = v.reshape(B, n, C, Hkv, Dh)
+    qi_base = jnp.arange(n) * C
+
+    def process_q_chunk(qi, q_blk):
+        # q_blk: (B, C, Hkv, G, Dh); scan over kv chunks j <= qi
+        def kv_step(carry, j):
+            m, den, acc = carry
+            k_blk = kc[:, j]                     # (B, C, Hkv, Dh)
+            v_blk = vc[:, j]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk
+                           ).astype(jnp.float32) / (Dh ** 0.5)
+            qpos = qi * C + jnp.arange(C)[:, None]
+            kpos = j * C + jnp.arange(C)[None, :]
+            mask = kpos <= qpos
+            if cfg.window:
+                mask &= kpos > qpos - cfg.window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            scale = jnp.exp(m - m_new)
+            p_blk = jnp.exp(s - m_new[..., None])
+            den = den * scale + jnp.sum(p_blk, axis=-1)
+            acc = acc * scale[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p_blk, v_blk.astype(jnp.float32))
+            return (m_new, den, acc), None
+
+        m0 = jnp.full((B, Hkv, G, C), -jnp.inf, jnp.float32)
+        d0 = jnp.zeros((B, Hkv, G, C), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, C, Dh), jnp.float32)
+        (m, den, acc), _ = jax.lax.scan(
+            lambda c, j: kv_step(c, j), (m0, d0, a0),
+            jnp.arange(n), unroll=n if PROBE_UNROLL else 1)
+        # causal: chunks j > qi contributed -1e30 rows -> exp ~ 0; safe
+        out = acc / jnp.maximum(den[..., None], 1e-30)
+        return out                                # (B,Hkv,G,C,Dh)
+
+    _, outs = jax.lax.scan(
+        lambda _, args: (None, process_q_chunk(*args)),
+        None, (jnp.arange(n), jnp.moveaxis(qg, 1, 0)),
+        unroll=n if PROBE_UNROLL else 1)
+    # outs: (n, B, Hkv, G, C, Dh) -> (B, S, H, Dh)
+    out = jnp.moveaxis(outs, 0, 1)                # (B,n,Hkv,G,C,Dh)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, S, H, Dh)
+    return out.astype(q.dtype)
+
+
+# -- cached decode -----------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class KVCache:
+    """Functional KV cache; ring buffer when cache_len < context length."""
+    k: jnp.ndarray        # (B, C, Hkv, Dh)
+    v: jnp.ndarray        # (B, C, Hkv, Dh)
+
+    def tree_flatten(self):
+        return (self.k, self.v), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def cache_len(self) -> int:
+        return self.k.shape[1]
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, context: int,
+                  dtype=None) -> KVCache:
+    """Cache sized min(window, context) — the sub-quadratic carve-out."""
+    C = min(cfg.window, context) if cfg.window else context
+    dt = dtype or dtype_of(cfg.compute_dtype)
+    shape = (batch, C, cfg.num_kv_heads, cfg.resolved_head_dim)
+    return KVCache(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt))
+
+
+def decode_attend(p, x, pos, cache: KVCache, cfg: ModelConfig):
+    """One-token decode: x (B, 1, d); pos () current position.
+
+    Returns (out (B, 1, d), new_cache).  Ring-buffer indexing when the cache
+    is a sliding window.
+    """
+    B = x.shape[0]
+    H, Dh = cfg.num_heads, cfg.resolved_head_dim
+    C = cache.cache_len
+
+    q = _project_q(p, x, cfg)
+    k_new, v_new = _project_kv(p, x, cfg)
+
+    pos_b = jnp.broadcast_to(pos, (B, 1))
+    if cfg.mrope_sections:
+        pos_b = jnp.broadcast_to(pos, (3, B, 1))
+    q = apply_rope(q, pos_b, cfg.rope_theta, cfg.mrope_sections)
+    k_new = apply_rope(k_new, pos_b, cfg.rope_theta, cfg.mrope_sections)
+
+    slot = jnp.mod(pos, C)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, slot, 0, 0))
+
+    scores = _gqa_scores(q, k).astype(jnp.float32)   # (B,Hkv,G,1,C)
+    idx = jnp.arange(C)
+    if cfg.window and C < cfg.window + 1:
+        # ring buffer: every live slot is within the window
+        live = (idx <= pos) | (pos >= C)             # pre-fill vs wrapped
+        mask = live
+    else:
+        mask = idx <= pos
+    scores = jnp.where(mask[None, None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v, B, 1, H, Dh)
+    return out @ p["wo"], KVCache(k=k, v=v)
+
+
+def cross_attend_cached(p, x, k, v, cfg: ModelConfig):
+    """Cross-attention against precomputed encoder K/V (whisper decode)."""
+    B, S, _ = x.shape
+    q = _project_q(p, x, cfg)
+    scores = _gqa_scores(q, k).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v, B, S, cfg.num_heads, cfg.resolved_head_dim)
+    return out @ p["wo"]

@@ -1,0 +1,125 @@
+"""Shared transformer building blocks: norms, MLPs, embeddings, RoPE/M-RoPE.
+
+Parameters are plain nested dicts (pytrees); initializers take an explicit
+key.  Compute dtype is configurable per config; matmuls accumulate in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:                                          # rmsnorm
+        ms = jnp.mean(xf * xf, -1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# -- MLP ---------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d=None, f=None):
+    d = d or cfg.d_model
+    f = f or cfg.d_ff
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], d, f, dt),
+         "w2": dense_init(ks[1], f, d, dt)}
+    if cfg.act == "swiglu":
+        p["w3"] = dense_init(ks[2], d, f, dt)
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    h = x @ p["w1"]
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w2"]
+
+
+# -- embeddings --------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig):
+    dt = dtype_of(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"tokens": dense_init(k1, cfg.vocab_size, cfg.d_model, dt, scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, cfg.d_model, cfg.vocab_size, dt)
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    return jnp.take(p["tokens"], tokens, axis=0)
+
+
+def unembed(p, h, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        # tied head: rescale so init logits match the untied 1/sqrt(d) head
+        return (h @ p["tokens"].T).astype(jnp.float32) / (cfg.d_model ** 0.5)
+    return (h @ p["head"]).astype(jnp.float32)
+
+
+# -- RoPE --------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope_sections: tuple[int, ...] = ()) -> jnp.ndarray:
+    """Rotary embedding.
+
+    x: (B, S, H, Dh).  positions: (B, S) for standard RoPE or (3, B, S) for
+    M-RoPE (Qwen2-VL), where the head-dim halves are split into
+    ``mrope_sections`` groups rotated by the t/h/w coordinate respectively.
+    """
+    half = x.shape[-1] // 2
+    inv = rope_freqs(x.shape[-1], theta)            # (half,)
+    if mrope_sections:
+        assert positions.ndim == 3 and sum(mrope_sections) == half
+        # pick which coordinate (t/h/w) drives each frequency slot
+        sect = jnp.repeat(jnp.arange(len(mrope_sections)),
+                          jnp.array(mrope_sections),
+                          total_repeat_length=half)   # (half,)
+        pos = positions[sect, :, :]                   # (half, B, S)
+        ang = jnp.einsum("hbs,h->bsh", pos.astype(jnp.float32), inv)
+    else:
+        assert positions.ndim == 2
+        ang = positions[..., None].astype(jnp.float32) * inv   # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,462 @@
+"""Model assembly for every assigned architecture family.
+
+One parameter tree + three entry points:
+
+  * ``forward(params, batch, cfg)``      -> logits (train / prefill)
+  * ``init_decode_state(cfg, batch, ctx)``-> per-layer caches + position
+  * ``decode_step(params, state, batch)`` -> (logits, new state)   [1 token]
+
+Per-layer parameters are STACKED along a leading L axis and consumed with
+``lax.scan`` — one layer is traced once, keeping HLO size and 512-device
+SPMD-partitioning time flat in depth.  Train scans are wrapped in
+``jax.checkpoint`` (remat) by default.
+
+Families:
+  dense        pre-norm GQA attention + MLP
+  moe          attention + top-k expert FFN (repro.models.moe)
+  ssm          Mamba2 SSD blocks (repro.models.ssm), optional MLP
+  hybrid       Mamba2 backbone + ONE weight-shared attention+MLP block
+               applied every ``shared_attn_every`` layers (Zamba2)
+  vlm          dense + M-RoPE positions + stubbed patch embeddings
+  audio        whisper-style encoder-decoder (stubbed conv frontend)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_mlp, apply_norm, dtype_of, embed,
+                                 init_embedding, init_mlp, init_norm, unembed)
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _scan(body, init, xs, unroll: bool):
+    """lax.scan, or a Python unroll (used by the roofline's depth probes:
+    XLA's cost analysis counts a while body once, so per-layer costs are
+    measured on unrolled 1- and 2-deep modules and extrapolated)."""
+    if not unroll:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, outs = init, []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda x: x[i], xs))
+        outs.append(y)
+    if outs and outs[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _stack_layers(init_one, key, n):
+    keys = jax.random.split(key, n)
+    layers = [init_one(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def _init_decoder_block(key, cfg: ModelConfig, *, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p = {"ln1": init_norm(cfg)}
+    if cfg.family in ("ssm", "hybrid"):
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg)
+    else:
+        p["attn"] = attn.init_attention(ks[0], cfg)
+    if cross:
+        p["ln_cross"] = init_norm(cfg)
+        p["cross"] = attn.init_attention(ks[1], cfg, cross=True)
+    if cfg.num_experts and cfg.family == "moe":
+        p["ln2"] = init_norm(cfg)
+        p["moe"] = moe_mod.init_moe(ks[2], cfg)
+    elif cfg.d_ff and cfg.family != "hybrid":
+        p["ln2"] = init_norm(cfg)
+        p["mlp"] = init_mlp(ks[2], cfg)
+    return p
+
+
+def _init_shared_block(key, cfg: ModelConfig):
+    """Zamba2's weight-shared attention+MLP block (one param set)."""
+    ks = jax.random.split(key, 2)
+    return {"ln1": init_norm(cfg),
+            "attn": attn.init_attention(ks[0], cfg),
+            "ln2": init_norm(cfg),
+            "mlp": init_mlp(ks[1], cfg)}
+
+
+def init_model(key, cfg: ModelConfig):
+    k_emb, k_blocks, k_shared, k_enc, k_final = jax.random.split(key, 5)
+    params = {
+        "embed": init_embedding(k_emb, cfg),
+        "blocks": _stack_layers(
+            lambda k: _init_decoder_block(k, cfg, cross=cfg.is_encdec),
+            k_blocks, cfg.num_layers),
+        "final_norm": init_norm(cfg),
+    }
+    if cfg.family == "hybrid":
+        params["shared"] = _init_shared_block(k_shared, cfg)
+    if cfg.is_encdec:
+        params["enc_blocks"] = _stack_layers(
+            lambda k: _init_encoder_block(k, cfg), k_enc, cfg.encoder_layers)
+        params["enc_norm"] = init_norm(cfg)
+    return params
+
+
+def _init_encoder_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {"ln1": init_norm(cfg),
+            "attn": attn.init_attention(ks[0], cfg),
+            "ln2": init_norm(cfg),
+            "mlp": init_mlp(ks[1], cfg)}
+
+
+# ===========================================================================
+# forward (train / prefill)
+# ===========================================================================
+
+def _dense_block_fwd(blk, h, positions, cfg, enc_out=None):
+    a = attn.attend(blk["attn"], apply_norm(blk["ln1"], h, cfg), positions,
+                    cfg, causal=True)
+    h = h + a
+    aux = jnp.zeros((), jnp.float32)
+    if "cross" in blk:
+        c = attn.attend(blk["cross"], apply_norm(blk["ln_cross"], h, cfg),
+                        positions, cfg, kv_x=enc_out)
+        h = h + c
+    if "moe" in blk:
+        m, aux = moe_mod.apply_moe(blk["moe"],
+                                   apply_norm(blk["ln2"], h, cfg), cfg)
+        h = h + m
+    elif "mlp" in blk:
+        h = h + apply_mlp(blk["mlp"], apply_norm(blk["ln2"], h, cfg), cfg)
+    return h, aux
+
+
+def _ssm_block_fwd(blk, h, cfg):
+    h = h + ssm_mod.apply_ssm(blk["ssm"], apply_norm(blk["ln1"], h, cfg), cfg)
+    if "mlp" in blk:
+        h = h + apply_mlp(blk["mlp"], apply_norm(blk["ln2"], h, cfg), cfg)
+    return h
+
+
+def _shared_block_fwd(shared, h, positions, cfg):
+    a = attn.attend(shared["attn"], apply_norm(shared["ln1"], h, cfg),
+                    positions, cfg, causal=True)
+    h = h + a
+    h = h + apply_mlp(shared["mlp"], apply_norm(shared["ln2"], h, cfg), cfg)
+    return h
+
+
+def _encode(params, frames, cfg, *, unroll: bool = False):
+    """Whisper encoder over stubbed frame embeddings (B, S_enc, d)."""
+    h = frames.astype(dtype_of(cfg.compute_dtype))
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+
+    def body(h, blk):
+        a = attn.attend(blk["attn"], apply_norm(blk["ln1"], h, cfg),
+                        positions, cfg, causal=False)
+        h = h + a
+        h = h + apply_mlp(blk["mlp"], apply_norm(blk["ln2"], h, cfg), cfg)
+        return h, None
+
+    h, _ = _scan(body, h, params["enc_blocks"], unroll)
+    return apply_norm(params["enc_norm"], h, cfg)
+
+
+def forward(params, batch: dict, cfg: ModelConfig, *, remat: bool = True,
+            unroll: bool = False, last_only: bool = False):
+    """Returns (logits (B, S, V) float32, aux_loss scalar).
+
+    last_only=True slices the hidden state to the final position BEFORE the
+    unembedding matmul — prefill only needs next-token logits, and the full
+    (B, S, V) f32 logit tensor is by far the largest intermediate at 32k+
+    context (§Perf hillclimb #2).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = embed(params["embed"], tokens, cfg)
+    h = h.astype(dtype_of(cfg.compute_dtype))
+
+    if cfg.family == "vlm":
+        # stubbed vision frontend: patch embeddings occupy the prompt prefix
+        vis = batch["vision_embeds"].astype(h.dtype)
+        n_patch = vis.shape[1]
+        h = jnp.concatenate([vis, h[:, n_patch:, :]], axis=1)
+        positions = batch["positions"]                  # (3, B, S) M-RoPE
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encode(params, batch["frames"], cfg, unroll=unroll)
+
+    if cfg.family in ("ssm", "hybrid"):
+        h, aux = _forward_ssm_stack(params, h, positions, cfg, remat, unroll)
+    else:
+        def body(h, blk):
+            return _dense_block_fwd(blk, h, positions, cfg, enc_out)
+        if remat:
+            body = jax.checkpoint(body)
+        h, auxs = _scan(body, h, params["blocks"], unroll)
+        aux = jnp.sum(auxs)
+
+    h = apply_norm(params["final_norm"], h, cfg)
+    if last_only:
+        h = h[:, -1:, :]
+    if batch.get("__return_hidden__"):
+        return h, aux
+    return unembed(params["embed"], h, cfg), aux
+
+
+def _forward_ssm_stack(params, h, positions, cfg, remat, unroll=False):
+    every = cfg.shared_attn_every
+
+    def ssm_body(h, blk):
+        return _ssm_block_fwd(blk, h, cfg), None
+    if remat:
+        ssm_body = jax.checkpoint(ssm_body)
+
+    if cfg.family == "ssm" or not every:
+        h, _ = _scan(ssm_body, h, params["blocks"], unroll)
+        return h, jnp.zeros((), jnp.float32)
+
+    # hybrid: groups of `every` ssm layers, shared attn block after each
+    L = cfg.num_layers
+    G, r = divmod(L, every)
+    blocks = params["blocks"]
+    main = jax.tree.map(lambda x: x[:G * every].reshape(
+        (G, every) + x.shape[1:]), blocks)
+    rest = jax.tree.map(lambda x: x[G * every:], blocks)
+
+    def group_body(h, grp):
+        h, _ = jax.lax.scan(ssm_body, h, grp)
+        h = _shared_block_fwd(params["shared"], h, positions, cfg)
+        return h, None
+    if remat:
+        group_body = jax.checkpoint(group_body)
+
+    h, _ = _scan(group_body, h, main, unroll)
+    if r:
+        h, _ = _scan(ssm_body, h, rest, unroll)
+        h = _shared_block_fwd(params["shared"], h, positions, cfg)
+    return h, jnp.zeros((), jnp.float32)
+
+
+# ===========================================================================
+# loss
+# ===========================================================================
+
+def lm_loss(params, batch: dict, cfg: ModelConfig, *, remat: bool = True,
+            aux_weight: float = 0.01, unroll: bool = False):
+    labels = batch["labels"]
+    valid = labels >= 0
+
+    if cfg.ce_seq_chunk and labels.shape[1] % cfg.ce_seq_chunk == 0 \
+            and labels.shape[1] > cfg.ce_seq_chunk:
+        # §Perf: never materialize the (B, S, V) f32 logits — unembed and
+        # CE per sequence chunk.  Mathematically identical to the flat path.
+        h, aux = forward(params, dict(batch, __return_hidden__=True), cfg,
+                         remat=remat, unroll=unroll)
+        Ck = cfg.ce_seq_chunk
+        n = labels.shape[1] // Ck
+        hc = h.reshape(h.shape[0], n, Ck, h.shape[-1]).swapaxes(0, 1)
+        lc = labels.reshape(labels.shape[0], n, Ck).swapaxes(0, 1)
+
+        def chunk_nll(_, xs):
+            hb, lb = xs
+            logits = unembed(params["embed"], hb, cfg)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            nll = -jnp.take_along_axis(logp, jnp.clip(lb, 0)[..., None],
+                                       axis=-1)[..., 0]
+            return None, jnp.sum(jnp.where(lb >= 0, nll, 0.0))
+
+        from repro.models import attention as _attn
+        _, sums = jax.lax.scan(chunk_nll, None, (hc, lc),
+                               unroll=n if _attn.PROBE_UNROLL else 1)
+        loss = jnp.sum(sums) / jnp.maximum(jnp.sum(valid), 1)
+        return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+    logits, aux = forward(params, batch, cfg, remat=remat, unroll=unroll)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, jnp.clip(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    nll = jnp.where(valid, nll, 0.0)
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# ===========================================================================
+# decode (serve_step)
+# ===========================================================================
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DecodeState:
+    pos: jnp.ndarray                   # () int32, next position to write
+    kv: object = None                  # stacked KVCache or None
+    ssm: object = None                 # stacked SSMCache or None
+    shared_kv: object = None           # hybrid: stacked KVCache per app
+    cross_kv: object = None            # encdec: (k, v) per layer stacked
+
+    def tree_flatten(self):
+        return (self.pos, self.kv, self.ssm, self.shared_kv,
+                self.cross_kv), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _stacked_cache(make_one, n):
+    caches = [make_one() for _ in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def num_shared_apps(cfg: ModelConfig) -> int:
+    G, r = divmod(cfg.num_layers, cfg.shared_attn_every)
+    return G + (1 if r else 0)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, context: int,
+                      enc_out=None, params=None) -> DecodeState:
+    dt = dtype_of(cfg.compute_dtype)
+    kv = ssm = shared = cross = None
+    if cfg.family in ("ssm", "hybrid"):
+        ssm = _stacked_cache(
+            lambda: ssm_mod.init_ssm_cache(cfg, batch, jnp.float32),
+            cfg.num_layers)
+        if cfg.family == "hybrid":
+            shared = _stacked_cache(
+                lambda: attn.init_kv_cache(cfg, batch, context, dt),
+                num_shared_apps(cfg))
+    else:
+        kv = _stacked_cache(
+            lambda: attn.init_kv_cache(cfg, batch, context, dt),
+            cfg.num_layers)
+    if cfg.is_encdec:
+        if enc_out is not None and params is not None:
+            # precompute cross K/V per decoder layer from encoder output
+            def kv_of_layer(blk):
+                k, v = attn._project_kv(blk["cross"], enc_out, cfg)
+                return k.astype(dt), v.astype(dt)
+            cross = jax.vmap(kv_of_layer)(params["blocks"])
+        else:
+            S_enc = cfg.encoder_seq
+            hd = cfg.resolved_head_dim
+            shape = (cfg.num_layers, batch, S_enc, cfg.num_kv_heads, hd)
+            cross = (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+    return DecodeState(pos=jnp.zeros((), jnp.int32), kv=kv, ssm=ssm,
+                       shared_kv=shared, cross_kv=cross)
+
+
+def decode_step(params, state: DecodeState, batch: dict, cfg: ModelConfig,
+                *, unroll: bool = False):
+    """One token for the whole batch: batch['tokens'] (B, 1).
+
+    Returns (logits (B, 1, V) float32, new DecodeState).
+    """
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    h = embed(params["embed"], tokens, cfg).astype(dtype_of(cfg.compute_dtype))
+    pos = state.pos
+
+    if cfg.family in ("ssm", "hybrid"):
+        h, new_ssm, new_shared = _decode_ssm_stack(params, h, state, cfg,
+                                                   unroll=unroll)
+        new_state = dataclasses.replace(state, pos=pos + 1, ssm=new_ssm,
+                                        shared_kv=new_shared)
+    else:
+        def body(h, xs):
+            blk, cache, cross = xs
+            a, new_cache = attn.decode_attend(
+                blk["attn"], apply_norm(blk["ln1"], h, cfg), pos, cache, cfg)
+            h = h + a
+            if "cross" in blk:
+                ck, cv = cross
+                c = attn.cross_attend_cached(
+                    blk["cross"], apply_norm(blk["ln_cross"], h, cfg),
+                    ck, cv, cfg)
+                h = h + c
+            if "moe" in blk:
+                m, _ = moe_mod.apply_moe(blk["moe"],
+                                         apply_norm(blk["ln2"], h, cfg), cfg)
+                h = h + m
+            elif "mlp" in blk:
+                h = h + apply_mlp(blk["mlp"],
+                                  apply_norm(blk["ln2"], h, cfg), cfg)
+            return h, new_cache
+
+        cross = state.cross_kv
+        if cross is None:
+            cross = (jnp.zeros((cfg.num_layers, 0)),) * 2   # placeholder
+        h, new_kv = _scan(body, h, (params["blocks"], state.kv, cross),
+                          unroll)
+        new_state = dataclasses.replace(state, pos=pos + 1, kv=new_kv)
+
+    h = apply_norm(params["final_norm"], h, cfg)
+    return unembed(params["embed"], h, cfg), new_state
+
+
+def _decode_ssm_stack(params, h, state, cfg, *, unroll: bool = False):
+    pos = state.pos
+
+    def ssm_body(h, xs):
+        blk, cache = xs
+        out, new_cache = ssm_mod.decode_ssm(
+            blk["ssm"], apply_norm(blk["ln1"], h, cfg), cache, cfg)
+        h = h + out
+        if "mlp" in blk:
+            h = h + apply_mlp(blk["mlp"], apply_norm(blk["ln2"], h, cfg), cfg)
+        return h, new_cache
+
+    if cfg.family == "ssm" or not cfg.shared_attn_every:
+        h, new_ssm = _scan(ssm_body, h, (params["blocks"], state.ssm),
+                           unroll)
+        return h, new_ssm, state.shared_kv
+
+    every = cfg.shared_attn_every
+    L = cfg.num_layers
+    G, r = divmod(L, every)
+    blocks, caches = params["blocks"], state.ssm
+    take = lambda t, lo, hi: jax.tree.map(lambda x: x[lo:hi], t)
+
+    def shared_decode(h, kv_cache):
+        a, new_kv = attn.decode_attend(
+            params["shared"]["attn"],
+            apply_norm(params["shared"]["ln1"], h, cfg), pos, kv_cache, cfg)
+        h = h + a
+        h = h + apply_mlp(params["shared"]["mlp"],
+                          apply_norm(params["shared"]["ln2"], h, cfg), cfg)
+        return h, new_kv
+
+    take1 = lambda t, i: jax.tree.map(lambda x: x[i], t)
+
+    new_ssm_parts, new_shared_parts = [], []
+    for g in range(G):
+        h, ns = jax.lax.scan(ssm_body, h,
+                             (take(blocks, g * every, (g + 1) * every),
+                              take(caches, g * every, (g + 1) * every)))
+        new_ssm_parts.append(ns)
+        h, nk = shared_decode(h, take1(state.shared_kv, g))
+        new_shared_parts.append(nk)
+    if r:
+        h, ns = jax.lax.scan(ssm_body, h, (take(blocks, G * every, L),
+                                           take(caches, G * every, L)))
+        new_ssm_parts.append(ns)
+        h, nk = shared_decode(h, take1(state.shared_kv, G))
+        new_shared_parts.append(nk)
+
+    cat = lambda *xs: jnp.concatenate(xs, axis=0)
+    stk = lambda *xs: jnp.stack(xs, axis=0)
+    new_ssm = jax.tree.map(cat, *new_ssm_parts) if len(new_ssm_parts) > 1 \
+        else new_ssm_parts[0]
+    new_shared = jax.tree.map(stk, *new_shared_parts)
+    return h, new_ssm, new_shared

@@ -1,0 +1,206 @@
+"""Mixture-of-Experts FFN with top-k routing and sort-based dispatch.
+
+Dispatch strategy (DESIGN.md §5): tokens are routed to (expert, slot)
+positions via an argsort over expert assignments — the same static-capacity
+packing idiom as the distributed sampler's ``pack_by_owner`` — then the
+expert FFNs run as one batched einsum over the (E, C, d) buffer.  Static
+capacity C = ceil(cf * T * k / E); overflow tokens are dropped (their gate
+contribution is zero), the standard GShard/Switch discipline.
+
+Sharding: expert weights are 2-D sharded (experts -> 'data', ffn -> 'model');
+see repro/sharding.py.  The roofline's collective term exposes the dispatch
+all-to-alls GSPMD inserts; the §Perf hillclimb attacks them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ModelConfig
+from repro.models.layers import dense_init, dtype_of
+
+
+def _constrain(x, *specs):
+    """with_sharding_constraint trying specs in order (first whose axes
+    exist in the ambient mesh wins); no-op without a mesh."""
+    for spec in specs:
+        try:
+            return jax.lax.with_sharding_constraint(x, P(*spec))
+        except (ValueError, RuntimeError):
+            continue
+    return x
+
+
+def moe_capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    c = int(cfg.capacity_factor * num_tokens * cfg.top_k
+            // max(cfg.num_experts, 1)) + 1
+    return max(c, cfg.top_k)
+
+
+def init_moe(key, cfg: ModelConfig):
+    dt = dtype_of(cfg.param_dtype)
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+
+    def experts_init(k, d_in, d_out):
+        flat = dense_init(k, d_in, E * d_out, dt)
+        return flat.reshape(d_in, E, d_out).transpose(1, 0, 2)   # (E,din,dout)
+
+    p = {"router": dense_init(ks[0], d, E, jnp.float32),
+         "w1": experts_init(ks[1], d, f),
+         "w2": experts_init(ks[2], f, d)}                        # (E, f, d)
+    if cfg.act == "swiglu":
+        p["w3"] = experts_init(ks[3], d, f)
+    return p
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar)."""
+    if cfg.moe_num_groups:
+        return apply_moe_grouped(p, x, cfg)
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.num_experts, cfg.top_k
+    C = moe_capacity(cfg, T)
+    xf = x.reshape(T, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])              # (T, E)
+    gates_full = jax.nn.softmax(logits, axis=-1)
+    top_g, top_e = jax.lax.top_k(gates_full, k)                  # (T, k)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(gates_full, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(me * ce) / k
+
+    # ---- sort-based dispatch -------------------------------------------
+    flat_e = top_e.reshape(-1)                                   # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_g = top_g.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    seg_start = jnp.searchsorted(se, jnp.arange(E))
+    slot = jnp.arange(T * k, dtype=jnp.int32) - seg_start[se]
+    keep = slot < C
+
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[se, jnp.where(keep, slot, C)].set(
+        xf[st], mode="drop")                                     # (E, C, d)
+
+    if cfg.moe_shard_constraints:
+        # §Perf hillclimb #1: pin the dispatch buffer to the expert-parallel
+        # layout of the weights (experts -> 'data' when divisible, else the
+        # FSDP d_model sharding) so GSPMD lowers the scatter to an
+        # all-to-all instead of replicating the buffer on every device.
+        e_axis = "data" if E % 16 == 0 else None
+        d_axis = None if e_axis else "data"
+        buf = _constrain(buf, (e_axis, None, d_axis))
+        # (flat path kept verbatim as the recorded baseline-variant)
+
+    # ---- expert FFN ------------------------------------------------------
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("ecf,efd->ecd", h, p["w2"])                 # (E, C, d)
+    if cfg.moe_shard_constraints:
+        out = _constrain(out, (e_axis, None, d_axis))
+
+    # ---- combine ---------------------------------------------------------
+    tok_out = out[se, jnp.where(keep, slot, 0)]                  # (T*k, d)
+    w = jnp.where(keep, sg, 0.0).astype(x.dtype)[:, None]
+    y = jnp.zeros((T, d), x.dtype).at[st].add(tok_out * w)
+    return y.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# group-local dispatch (§Perf hillclimb #1, beyond-paper)
+# ---------------------------------------------------------------------------
+
+def apply_moe_grouped(p, x, cfg: ModelConfig):
+    """GShard-style group-local dispatch.
+
+    The flat path's global argsort/scatter over T*k assignments is
+    data-dependent, so GSPMD replicates it on every device — the dominant
+    collective cost in the kimi-1T baseline.  Here tokens are split into
+    ``moe_num_groups`` groups aligned with the data-parallel shards; each
+    group sorts and packs ONLY its own tokens (fully local compute), and the
+    single cross-device movement left is the (G, E, C_g, d) dispatch buffer
+    changing layout from group-sharded to expert-sharded — exactly one
+    all-to-all each way, the textbook MoE communication pattern.
+
+    Mathematically identical routing to the flat path up to per-group
+    (instead of global) capacity truncation.
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.num_experts, cfg.top_k
+    G = cfg.moe_num_groups
+    assert T % G == 0, (T, G)
+    Tg = T // G
+    Cg = max(int(cfg.capacity_factor * Tg * k // max(E, 1)) + 1, k)
+
+    xg = x.reshape(G, Tg, d)
+    dp = ("pod", "data")
+    xg = _constrain(xg, (dp, None, None), ("data", None, None))
+
+    logits = (xg.astype(jnp.float32) @ p["router"])          # (G, Tg, E)
+    gates_full = jax.nn.softmax(logits, axis=-1)
+    top_g, top_e = jax.lax.top_k(gates_full, k)              # (G, Tg, k)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    me = jnp.mean(gates_full, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32),
+                          axis=2), axis=(0, 1))
+    aux = E * jnp.sum(me * ce) / k
+
+    def dispatch_group(xg1, top_e1, top_g1):
+        flat_e = top_e1.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), k)
+        flat_g = top_g1.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+        seg_start = jnp.searchsorted(se, jnp.arange(E))
+        slot = jnp.arange(Tg * k, dtype=jnp.int32) - seg_start[se]
+        keep = slot < Cg
+        buf = jnp.zeros((E, Cg, d), xg1.dtype)
+        buf = buf.at[se, jnp.where(keep, slot, Cg)].set(
+            xg1[st], mode="drop")
+        return buf, (se, st, sg, slot, keep)
+
+    buf, meta = jax.vmap(dispatch_group)(xg, top_e, top_g)   # (G, E, Cg, d)
+    buf = _constrain(buf, (dp, None, None, None),
+                     ("data", None, None, None))             # group-sharded
+
+    # layout flip: group-sharded -> expert-sharded == the MoE all-to-all.
+    # The expert axis must MATCH the expert-weight sharding (('pod','data')
+    # on the multipod mesh) or GSPMD all-gathers the buffer instead.
+    buf = _constrain(buf, (None, ("pod", "data"), None, None),
+                     (None, "data", None, None))
+
+    h = jnp.einsum("gecd,edf->gecf", buf, p["w1"])
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", buf, p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("gecf,efd->gecd", h, p["w2"])           # (G, E, Cg, d)
+    out = _constrain(out, (None, ("pod", "data"), None, None),
+                     (None, "data", None, None))
+
+    # flip back: expert-sharded -> group-sharded (second all-to-all)
+    out = _constrain(out, (dp, None, None, None),
+                     ("data", None, None, None))
+
+    def combine_group(out1, xmeta):
+        se, st, sg, slot, keep = xmeta
+        tok_out = out1[se, jnp.where(keep, slot, 0)]         # (Tg*k, d)
+        w = jnp.where(keep, sg, 0.0).astype(out1.dtype)[:, None]
+        return jnp.zeros((Tg, d), out1.dtype).at[st].add(tok_out * w)
+
+    y = jax.vmap(combine_group)(out, meta)                   # (G, Tg, d)
+    return y.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,226 @@
+"""Mamba2 (SSD — state-space duality) blocks [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk "attention-like"
+quadratic term + inter-chunk linear recurrence over per-chunk states (a
+sequential lax.scan over chunks — S/chunk steps, O(S) total).  Decode carries
+an explicit (B, H, P, N) state plus a depthwise-conv ring buffer, giving the
+O(1)-per-token, O(1)-memory path that makes long_500k tractable.
+
+Layout: d_in = expand * d_model; heads H = d_in / head_dim (P = head_dim);
+B/C projections are shared across heads (ngroups = 1), A is scalar per head.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models.layers import dense_init, dtype_of
+
+CHUNK = 128
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def init_ssm(key, cfg: ModelConfig):
+    dt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    d_in, H, N, P = ssm_dims(cfg)
+    conv_dim = d_in + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z (d_in) | x (d_in) | B (N) | C (N) | dt (H)]
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * N + H, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[3], d_in, d, dt),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    d_in, H, N, _ = ssm_dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + d_in + 2 * N]
+    dt = zxbcdt[..., -H:]
+    return z, xBC, dt
+
+
+def _causal_depthwise_conv(xBC, w, b):
+    """xBC (B, S, C); w (W, C) depthwise causal conv, silu activation."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b.astype(out.dtype))
+
+
+def _segsum(x):
+    """x (..., T) -> (..., T, T): cumulative sums over segments (i > j)."""
+    T = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    diff = xc[..., :, None] - xc[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _constrain_state(st, enable: bool):
+    """§Perf: pin the inter-chunk scan carry to batch-only sharding so
+    GSPMD doesn't reshard it (collective-permute) every chunk step."""
+    if not enable:
+        return st
+    from jax.sharding import PartitionSpec as P
+    for spec in (P(("pod", "data"), None, None, None),
+                 P("data", None, None, None)):
+        try:
+            return jax.lax.with_sharding_constraint(st, spec)
+        except (ValueError, RuntimeError):
+            continue
+    return st
+
+
+def ssd_chunked(x, A, Bm, Cm, chunk=CHUNK, state_constraints: bool = False):
+    """Chunked SSD scan.
+
+    x (B, S, H, P); A (B, S, H) [negative decay rates * dt];
+    Bm/Cm (B, S, N).  Returns (y (B, S, H, P), final_state (B, H, P, N)).
+    """
+    b, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, "sequence must be divisible by the SSD chunk"
+    c = S // chunk
+    xc = x.reshape(b, c, chunk, H, P)
+    Ac = A.reshape(b, c, chunk, H).transpose(0, 1, 3, 2)      # (b,c,H,L)
+    Bc = Bm.reshape(b, c, chunk, N)
+    Cc = Cm.reshape(b, c, chunk, N)
+
+    A_cum = jnp.cumsum(Ac, axis=-1)                           # (b,c,H,L)
+    A_total = A_cum[..., -1]                                  # (b,c,H)
+
+    # 1. intra-chunk (diagonal blocks): quadratic within the chunk
+    L = jnp.exp(_segsum(Ac))                                  # (b,c,H,L,L)
+    Y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp",
+                        Cc, Bc, L, xc)
+
+    # 2. per-chunk input -> state contribution
+    decay_states = jnp.exp(A_total[..., None] - A_cum)        # (b,c,H,L)
+    states = jnp.einsum("bcln,bchl,bclhp->bchpn", Bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence (sequential scan over chunks)
+    def step(carry, inp):
+        st, a_tot = inp                                       # (b,H,P,N),(b,H)
+        new = carry * jnp.exp(a_tot)[:, :, None, None] + st
+        new = _constrain_state(new, state_constraints)
+        return new, carry                                     # emit previous
+
+    init = _constrain_state(jnp.zeros((b, H, P, N), x.dtype),
+                            state_constraints)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), A_total.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (b,c,H,P,N)
+
+    # 4. state -> output within each chunk
+    state_decay = jnp.exp(A_cum)                              # (b,c,H,L)
+    Y_off = jnp.einsum("bcln,bchpn,bchl->bclhp",
+                       Cc, prev_states, state_decay)
+
+    y = (Y_diag + Y_off).reshape(b, S, H, P)
+    return y, final
+
+
+def apply_ssm(p, x, cfg: ModelConfig, chunk=CHUNK):
+    """Full-sequence Mamba2 block: x (B, S, d) -> (B, S, d)."""
+    d_in, H, N, P = ssm_dims(cfg)
+    B_, S, _ = x.shape
+    z, xBC, dt = _split_proj(x @ p["in_proj"], cfg)
+    xBC = _causal_depthwise_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :d_in].reshape(B_, S, H, P)
+    Bm = xBC[..., d_in:d_in + N]
+    Cm = xBC[..., d_in + N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"])                      # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                  # (H,)
+    y, _ = ssd_chunked((xs * dt[..., None]).astype(jnp.float32),
+                       dt * A, Bm.astype(jnp.float32),
+                       Cm.astype(jnp.float32), chunk=chunk,
+                       state_constraints=cfg.ssm_state_constraints)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, S, d_in)
+
+    # gated RMSNorm (Mamba2's norm-before-out_proj)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(y * y, -1, keepdims=True)
+    y = y * jax.lax.rsqrt(ms + 1e-5) * p["norm_scale"]
+    return (y.astype(x.dtype)) @ p["out_proj"]
+
+
+# -- decode ------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SSMCache:
+    state: jnp.ndarray      # (B, H, P, N)
+    conv_buf: jnp.ndarray   # (B, W-1, conv_dim) last inputs
+
+    def tree_flatten(self):
+        return (self.state, self.conv_buf), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None) -> SSMCache:
+    d_in, H, N, P = ssm_dims(cfg)
+    dt = dtype or jnp.float32
+    conv_dim = d_in + 2 * N
+    return SSMCache(
+        state=jnp.zeros((batch, H, P, N), dt),
+        conv_buf=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dt))
+
+
+def decode_ssm(p, x, cache: SSMCache, cfg: ModelConfig):
+    """One-token decode: x (B, 1, d) -> (out (B, 1, d), new_cache).  O(1)."""
+    d_in, H, N, P = ssm_dims(cfg)
+    B_ = x.shape[0]
+    z, xBC, dt = _split_proj(x[:, 0, :] @ p["in_proj"], cfg)
+
+    # depthwise conv over ring buffer
+    w = p["conv_w"]
+    W = w.shape[0]
+    hist = jnp.concatenate(
+        [cache.conv_buf, xBC[:, None, :].astype(cache.conv_buf.dtype)], axis=1)
+    conv = jnp.sum(hist * w[None], axis=1) + p["conv_b"]
+    xBC_t = jax.nn.silu(conv)
+    new_buf = hist[:, 1:, :]
+
+    xs = xBC_t[..., :d_in].reshape(B_, H, P)
+    Bm = xBC_t[..., d_in:d_in + N]
+    Cm = xBC_t[..., d_in + N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                          # (B,H)
+    upd = (dt[..., None] * xs.astype(jnp.float32))[..., None] \
+        * Bm.astype(jnp.float32)[:, None, None, :]                # (B,H,P,N)
+    state = cache.state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B_, d_in)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(y * y, -1, keepdims=True)
+    y = y * jax.lax.rsqrt(ms + 1e-5) * p["norm_scale"]
+    out = (y.astype(x.dtype) @ p["out_proj"])[:, None, :]
+    return out, SSMCache(state=state, conv_buf=new_buf)

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adamw, sgd, OptState, init_opt_state,
+                                    apply_updates)
+from repro.optim.schedule import cosine_schedule, linear_warmup

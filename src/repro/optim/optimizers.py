@@ -1,0 +1,87 @@
+"""Pure-JAX optimizers (no optax dependency): AdamW and SGD(+momentum).
+
+Optimizer states mirror the parameter pytree so GSPMD shards them like the
+params (ZeRO-3 style).  ``moment_dtype`` lets big-model configs keep Adam
+moments in bf16 (documented memory trade-off for the 1T dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: object           # first moment (or momentum); pytree like params
+    nu: object           # second moment; pytree like params (zeros for sgd)
+
+
+def init_opt_state(params, *, kind: str = "adamw",
+                   moment_dtype=jnp.float32) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    mu = jax.tree.map(zeros, params)
+    nu = jax.tree.map(zeros, params) if kind == "adamw" else \
+        jax.tree.map(lambda p: jnp.zeros((), moment_dtype), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+
+def adamw(params, grads, state: OptState, *, lr, b1=0.9, b2=0.95,
+          eps=1e-8, weight_decay=0.0, moment_dtype=jnp.float32):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+        mhat = m32 / (1 - b1 ** t)
+        vhat = v32 / (1 - b2 ** t)
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+            jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m32.astype(moment_dtype), v32.astype(moment_dtype))
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step=step, mu=new_mu, nu=new_nu)
+
+
+def sgd(params, grads, state: OptState, *, lr, momentum=0.9):
+    step = state.step + 1
+
+    def upd(p, g, m):
+        m32 = m.astype(jnp.float32) * momentum + g.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * m32).astype(p.dtype),
+                m32.astype(m.dtype))
+
+    out = jax.tree.map(upd, params, grads, state.mu)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step=step, mu=new_mu, nu=state.nu)
+
+
+def apply_updates(params, grads, state: OptState, *, kind="adamw", **kw):
+    return (adamw if kind == "adamw" else sgd)(params, grads, state, **kw)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm

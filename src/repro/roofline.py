@@ -1,0 +1,186 @@
+"""Roofline analysis from compiled dry-run artifacts (DESIGN.md §7).
+
+Three terms per (arch x shape x mesh), all per-device quantities from the
+SPMD-partitioned module:
+
+    compute    = HLO_FLOPs / peak_FLOP/s            (197e12, bf16, v5e)
+    memory     = HLO_bytes / HBM_bw                 (819e9 B/s)
+    collective = collective_bytes / ICI_bw          (50e9 B/s per link)
+
+XLA's cost analysis counts a while-loop body ONCE, so scanned-over-layers
+models under-report by ~L.  The harness therefore compiles two small
+*unrolled* depth probes (1 and 2 depth units) and extrapolates:
+
+    total(U) = probe1 + (U - 1) * (probe2 - probe1)
+
+which is exact when per-unit cost is constant (true for every assigned
+arch).  Collective bytes are parsed from the compiled HLO text (sum of
+result-shape bytes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute ops).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result bytes of these ops are producer-fusable on TPU (they never make a
+# dedicated HBM round-trip); subtracting them gives the fusion-adjusted
+# memory term.  The CPU-backend HLO we analyse fuses far less than the TPU
+# backend would, so the raw "bytes accessed" is a loose upper bound.
+_FUSABLE_OPS = {
+    "broadcast", "convert", "multiply", "add", "subtract", "select",
+    "compare", "exponential", "bitcast", "copy", "negate", "maximum",
+    "minimum", "divide", "rsqrt", "sqrt", "tanh", "and", "or", "not",
+    "iota", "exponential-minus-one", "log", "log-plus-one", "abs", "sign",
+    "floor", "ceil", "clamp", "power", "pad", "reverse", "xor",
+}
+
+_ANYOP_RE = re.compile(
+    r"^\s*(?:ROOT )?%?[\w.\-]+ = (\S+\[[\d,]*\][^ ]*) ([a-z\-]+)",
+    re.MULTILINE)
+
+
+_FUSABLE_MIN_BYTES = 64 * 1024 * 1024
+
+
+def fusable_bytes(hlo_text: str) -> int:
+    """Result bytes of producer-fusable elementwise/layout ops.
+
+    Only results >= 64 MB count: those are the score-class intermediates
+    that a TPU pipeline keeps blocked in VMEM; small elementwise results are
+    noise either way.  The caller caps the subtraction (the CPU-backend HLO
+    double-counts operands vs results, so this is an estimate).
+    """
+    total = 0
+    for m in _ANYOP_RE.finditer(hlo_text):
+        if m.group(2) in _FUSABLE_OPS:
+            b = _shape_bytes(m.group(1))
+            if b >= _FUSABLE_MIN_BYTES:
+                total += b
+    return total
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind (each op counted once —
+    use on unrolled probe modules, not scanned ones)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(type_str)
+        count[kind] += 1
+    return {"bytes": out, "counts": count,
+            "total_bytes": sum(out.values())}
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    flops: float               # per-device
+    hbm_bytes: float           # per-device
+    coll_bytes: float          # per-device
+    model_flops_global: float  # analytic 6*N*D
+    chips: int
+    fusable: float = 0.0       # per-device fusable-op result bytes
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_memory_adjusted(self) -> float:
+        """TPU-fusion-adjusted memory term (raw is a loose upper bound);
+        the subtraction is capped at 80% of the raw bytes."""
+        adj = max(self.hbm_bytes - self.fusable, 0.2 * self.hbm_bytes)
+        return adj / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops summed over chips)."""
+        hw = self.flops * self.chips
+        return self.model_flops_global / hw if hw else float("nan")
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_memory_adjusted_s": self.t_memory_adjusted,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops_global": self.model_flops_global,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def extrapolate(probe1: dict, probe2: dict, units: int) -> dict:
+    """total(U) = p1 + (U-1) * (p2 - p1), per metric."""
+    out = {}
+    for k in probe1:
+        d = probe2[k] - probe1[k]
+        out[k] = probe1[k] + (units - 1) * d
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6 * N_active * tokens (+ attention term)."""
+    n = cfg.active_param_count()
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+        ctx = min(cfg.window, shape.seq_len) if cfg.window else shape.seq_len
+        attn = (4 * cfg.num_layers * cfg.num_heads * cfg.resolved_head_dim
+                * ctx * tokens) if cfg.num_heads else 0
+        return 2 * n * tokens + attn          # forward-only
+    tokens = shape.global_batch * shape.seq_len
+    ctx = min(cfg.window, shape.seq_len) if cfg.window else shape.seq_len
+    attn = (6 * 2 * cfg.num_layers * cfg.num_heads * cfg.resolved_head_dim
+            * ctx * tokens / 2) if cfg.num_heads else 0
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n * tokens + (attn if shape.kind == "train"
+                                else attn / 3)

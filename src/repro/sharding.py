@@ -1,0 +1,133 @@
+"""Logical-axis -> mesh-axis sharding rules (DESIGN.md §6).
+
+The placement policy follows the paper's hybrid-partitioning principle:
+replicate what is small (norms, biases, routers, SSM scalars), shard what is
+big (embeddings, FFN, attention projections, expert banks).
+
+Rules are divisibility-checked against the actual shapes — a dim that does
+not divide its target axis falls back (expert dim -> d_model FSDP-style
+sharding; head-coupled dims -> replicate) so every spec is accepted by jit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axsize(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return math.prod(_axsize(mesh, a) for a in axis)
+    return mesh.shape[axis]
+
+
+def dp_axes(mesh: Mesh):
+    """Data-parallel axes: ('pod','data') on the multi-pod mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _fit(mesh: Mesh, dim: int, axis):
+    """axis if it divides dim, else None."""
+    return axis if axis is not None and dim % _axsize(mesh, axis) == 0 \
+        else None
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def spec_for_param(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Sharding rule for one parameter, keyed on its tree path."""
+    nd = len(shape)
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    leaf = path.rsplit("/", 1)[-1]
+
+    def make(assign: dict[int, Any]) -> P:
+        spec = [None] * nd
+        for dim, axis in assign.items():
+            d = dim % nd
+            spec[d] = _fit(mesh, shape[d], axis)
+        return P(*spec)
+
+    # embeddings ------------------------------------------------------------
+    if path.endswith("embed/tokens") or path.endswith("embed/head"):
+        # vocab-sharded on model axis; vocab dim is the bigger one
+        vdim = 0 if shape[0] > shape[-1] else nd - 1
+        return make({vdim: "model"})
+
+    # MoE expert banks (L, E, d_in, d_out) ------------------------------
+    if "/moe/" in path:
+        if leaf == "router":
+            return P(*([None] * nd))
+        # experts -> data-parallel axes (expert parallel); inner ffn dim
+        # -> model.  If E doesn't divide, FSDP-shard the d_model dim on
+        # 'data' instead (mixtral's E=8 case).
+        e_ax = _fit(mesh, shape[1], dpa) or _fit(mesh, shape[1], "data")
+        if leaf in ("w1", "w3"):
+            assign = {1: e_ax, 3: "model"}
+            if e_ax is None:
+                assign[2] = "data"
+            return make(assign)
+        if leaf == "w2":
+            assign = {1: e_ax, 2: "model"}
+            if e_ax is None:
+                assign[3] = "data"
+            return make(assign)
+
+    # attention / mlp / ssm projections --------------------------------
+    if leaf in ("wq", "wk", "wv", "w1", "w3", "in_proj"):
+        return make({nd - 1: "model"})
+    if leaf in ("wo", "w2", "out_proj"):
+        return make({nd - 2: "model"})
+
+    # everything small: norms, biases, conv taps, SSM scalars, dt ------
+    return P(*([None] * nd))
+
+
+def param_specs(params, mesh: Mesh):
+    """PartitionSpec tree matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: spec_for_param(_path_str(path), x.shape, mesh),
+        params)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh))
+
+
+def batch_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Shard the leading (batch) dim over the data-parallel axes when it
+    divides; sub-group fallbacks for small batches; replicate batch=1."""
+    dp = dp_axes(mesh)
+    b = shape[0]
+    for cand in (dp, ("data",), ("pod",)):
+        if all(a in mesh.axis_names for a in cand) \
+                and b % _axsize(mesh, tuple(cand)) == 0:
+            ax = cand if len(cand) > 1 else cand[0]
+            return P(ax, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def cache_spec(shape: tuple[int, ...], mesh: Mesh, *, batch_dim: int = 1,
+               kv_head_dim: int = 3) -> P:
+    """KV cache (L, B, C, Hkv, Dh): batch over dp; kv heads over model when
+    divisible, else shard the cache length over model (flash-decoding
+    style partial-softmax placement), else replicate."""
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    spec = [None] * len(shape)
+    spec[batch_dim] = _fit(mesh, shape[batch_dim], dpa) \
+        or _fit(mesh, shape[batch_dim], "data")
+    if _fit(mesh, shape[kv_head_dim], "model"):
+        spec[kv_head_dim] = "model"
+    elif len(shape) > 2 and _fit(mesh, shape[2], "model"):
+        spec[2] = "model"
+    return P(*spec)

@@ -1,0 +1,64 @@
+"""Flat-npz checkpointing for arbitrary pytrees (params + opt state).
+
+Keys are '/'-joined tree paths; restore rebuilds into a provided structure
+(shape/dtype checked).  Good enough for single-host; a real pod deployment
+would swap in array-shard streaming behind the same interface.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+_BF16_SUFFIX = "::bf16"
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            # np.savez has no bf16 cast; store the raw bits
+            flat[key + _BF16_SUFFIX] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, tree, *, step: int | None = None) -> None:
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+
+
+def restore_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (shape & dtype validated)."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    step = int(flat.pop("__step__")) if "__step__" in flat else None
+
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path, leaf in leaves_paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key + _BF16_SUFFIX in flat:
+            arr = flat[key + _BF16_SUFFIX].view(jnp.bfloat16)
+        elif key in flat:
+            arr = flat[key]
+        else:
+            raise KeyError(f"checkpoint missing {key}")
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        new_leaves.append(jnp.asarray(arr, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step

@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    from repro.data.synthetic_graph import make_power_law_graph
+    return make_power_law_graph(800, 6, num_features=12, num_classes=4,
+                                seed=3)

@@ -1,0 +1,156 @@
+"""Paper §5 future-work extensions: feature caching + adaptive fanout."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dist
+from repro.core.adaptive import AdaptiveFanout
+from repro.core.cache import (FeatureCache, build_degree_caches,
+                              fetch_features_cached, make_cached_worker_step,
+                              run_stacked_cached)
+from repro.core.partition import (build_layout, build_vanilla,
+                                  partition_graph, seeds_per_worker)
+from repro.data.synthetic_graph import make_power_law_graph
+from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+
+P_ = 4
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = make_power_law_graph(1200, 8, num_features=12, num_classes=4,
+                              seed=2)
+    assign = partition_graph(ds.graph, P_, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P_)
+    vplan = build_vanilla(layout)
+    shards = dist.WorkerShard(features=layout.features, labels=layout.labels,
+                              local_indptr=vplan.local_indptr,
+                              local_indices=vplan.local_indices)
+    return ds, layout, shards
+
+
+def test_cache_contains_remote_hubs(world):
+    ds, layout, shards = world
+    cache = build_degree_caches(layout, capacity=64)
+    offsets = np.asarray(layout.offsets)
+    deg = np.asarray(layout.graph.degrees())
+    ids = np.asarray(cache.ids)
+    for p in range(P_):
+        valid = ids[p][ids[p] < 2 ** 31 - 1]
+        # strictly remote
+        owners = np.searchsorted(offsets, valid, side="right") - 1
+        assert (owners != p).all()
+        # sorted (searchsorted invariant)
+        assert (np.diff(ids[p]) >= 0).all()
+        # genuinely hot: every cached node is in the global top slice
+        cutoff = np.sort(deg)[-200:].min()
+        assert (deg[valid] >= min(cutoff, deg[valid].min())).all()
+
+
+def test_cached_fetch_bit_identical(world):
+    """Cache hits must return exactly the same rows as the uncached path."""
+    ds, layout, shards = world
+    cache = build_degree_caches(layout, capacity=64)
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, ds.graph.num_nodes, (P_, 40)).astype(np.int32)
+    ids[0, 3] = -1
+
+    def plain(shard, i):
+        return dist.fetch_features(i, layout.offsets, P_, shard.features,
+                                   None)
+
+    def cached(shard, i, c):
+        return fetch_features_cached(i, layout.offsets, P_, shard.features,
+                                     c)
+
+    h0 = jax.vmap(plain, axis_name=dist.AXIS)(shards, jnp.asarray(ids))
+    h1, hits = jax.vmap(cached, axis_name=dist.AXIS)(
+        shards, jnp.asarray(ids), cache)
+    np.testing.assert_array_equal(np.asarray(h0), np.asarray(h1))
+    assert int(jnp.sum(hits)) > 0, "hub-heavy graph must produce hits"
+
+
+def test_cached_training_equivalent_and_hits(world):
+    ds, layout, shards = world
+    cfg = GNNConfig(in_dim=12, hidden_dim=16, num_classes=4, num_layers=2,
+                    fanouts=(4, 3), dropout=0.0)
+    params = init_gnn_params(jax.random.key(0), cfg)
+    seeds = seeds_per_worker(layout, 16, epoch_salt=5)
+
+    def loss_fn(p, mfgs, h_src, labels, valid):
+        return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
+
+    base = dist.make_worker_step(
+        graph_replicated=layout.graph, offsets=layout.offsets, num_parts=P_,
+        fanouts=cfg.fanouts, scheme="hybrid", loss_fn=loss_fn)
+    loss0, grads0 = dist.run_stacked(base, params, shards, seeds,
+                                     jnp.uint32(9))
+
+    cache = build_degree_caches(layout, capacity=128)
+    cstep = make_cached_worker_step(
+        graph_replicated=layout.graph, offsets=layout.offsets, num_parts=P_,
+        fanouts=cfg.fanouts, loss_fn=loss_fn)
+    loss1, grads1, hit_rate = run_stacked_cached(cstep, params, shards,
+                                                 seeds, jnp.uint32(9), cache)
+    assert float(loss0) == float(loss1)
+    for a, b in zip(jax.tree.leaves(grads0), jax.tree.leaves(grads1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(hit_rate) > 0.05, float(hit_rate)
+
+
+def test_adaptive_fanout_steps_down_on_plateau():
+    sched = AdaptiveFanout(ladder=((8, 4), (4, 3), (2, 2)), patience=2,
+                           threshold=0.05)
+    assert sched.fanouts == (8, 4)
+    assert not sched.update(1.0)       # first epoch sets best
+    assert not sched.update(0.5)       # improving
+    assert not sched.update(0.49)      # stall 1 (<5% improvement)
+    assert sched.update(0.488)         # stall 2 -> step down
+    assert sched.fanouts == (4, 3)
+    assert sched.edges_per_seed == 4 + 12
+    # keeps improving at new stage -> stays
+    assert not sched.update(0.3)
+    assert not sched.update(0.29)
+    assert sched.update(0.288)
+    assert sched.fanouts == (2, 2)
+    # bottom rung: never steps past the ladder
+    for _ in range(5):
+        sched.update(0.288)
+    assert sched.fanouts == (2, 2)
+
+
+def test_adaptive_fanout_training_integration(world):
+    """Stage change re-jits with smaller shapes and training still learns."""
+    ds, layout, shards = world
+    sched = AdaptiveFanout(ladder=((4, 3), (2, 2)), patience=1,
+                           threshold=0.5)   # aggressive: forces a switch
+    from repro.optim import apply_updates, init_opt_state
+
+    def make_step(fanouts):
+        cfg = GNNConfig(in_dim=12, hidden_dim=16, num_classes=4,
+                        num_layers=2, fanouts=fanouts, dropout=0.0)
+
+        def loss_fn(p, mfgs, h_src, labels, valid):
+            return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
+
+        return dist.make_worker_step(
+            graph_replicated=layout.graph, offsets=layout.offsets,
+            num_parts=P_, fanouts=fanouts, scheme="hybrid", loss_fn=loss_fn)
+
+    cfg0 = GNNConfig(in_dim=12, hidden_dim=16, num_classes=4, num_layers=2)
+    params = init_gnn_params(jax.random.key(1), cfg0)
+    opt = init_opt_state(params)
+    step = make_step(sched.fanouts)
+    losses, stages = [], []
+    for epoch in range(4):
+        seeds = seeds_per_worker(layout, 16, epoch_salt=epoch)
+        loss, grads = dist.run_stacked(step, params, shards, seeds,
+                                       jnp.uint32(epoch))
+        params, opt = apply_updates(params, grads, opt, lr=0.01)
+        losses.append(float(loss))
+        stages.append(sched.stage)
+        if sched.update(float(loss)):
+            step = make_step(sched.fanouts)
+    assert max(stages) > 0, "schedule should have stepped down"
+    assert losses[-1] < losses[0]

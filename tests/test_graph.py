@@ -1,0 +1,59 @@
+"""CSC/COO structure tests + conversion roundtrips (hypothesis)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import (COOGraph, CSCGraph, coo_to_csc,
+                              csc_from_numpy_edges, csc_to_coo, validate_csc)
+
+
+@st.composite
+def edge_lists(draw):
+    n = draw(st.integers(2, 40))
+    m = draw(st.integers(0, 120))
+    dst = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    src = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    return n, np.array(dst, np.int64), np.array(src, np.int64)
+
+
+@given(edge_lists())
+@settings(max_examples=50, deadline=None)
+def test_csc_construction_invariants(edges):
+    n, dst, src = edges
+    g = csc_from_numpy_edges(dst, src, n)
+    validate_csc(g)
+    assert g.num_nodes == n
+    assert g.num_edges == len(dst)
+    # degree of node k == #edges with dst k
+    deg = np.asarray(g.degrees())
+    expected = np.bincount(dst, minlength=n)
+    np.testing.assert_array_equal(deg, expected)
+
+
+@given(edge_lists())
+@settings(max_examples=30, deadline=None)
+def test_coo_csc_roundtrip(edges):
+    n, dst, src = edges
+    g = csc_from_numpy_edges(dst, src, n)
+    coo = csc_to_coo(g)
+    g2 = coo_to_csc(coo, n)
+    np.testing.assert_array_equal(np.asarray(g.indptr), np.asarray(g2.indptr))
+    np.testing.assert_array_equal(np.asarray(g.indices),
+                                  np.asarray(g2.indices))
+
+
+def test_neighbor_lookup_o1(small_dataset):
+    """CSC gives neighbors as one contiguous slice (paper §3.2's point)."""
+    g = small_dataset.graph
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)
+    for v in (0, 5, g.num_nodes - 1):
+        nbrs = indices[indptr[v]:indptr[v + 1]]
+        assert len(nbrs) == indptr[v + 1] - indptr[v]
+
+
+def test_storage_breakdown_feature_dominated(small_dataset):
+    """Fig. 4's premise: features dwarf topology (drives hybrid scheme)."""
+    stats = small_dataset.storage_bytes()
+    assert stats["feature_fraction"] > 0.5

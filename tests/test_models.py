@@ -1,0 +1,235 @@
+"""Per-arch smoke tests (reduced configs, one forward + one train step on
+CPU, shapes + no NaNs) and streaming-consistency checks."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced, SHAPES
+from repro.models import lm
+from repro.optim import init_opt_state
+from repro.train.loop import make_lm_train_step
+
+RNG = np.random.default_rng(0)
+
+
+def make_batch(cfg, B=2, S=32):
+    batch = {
+        "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+        "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            RNG.normal(0, 1, (B, S // 4, cfg.d_model)), jnp.float32)
+        batch["positions"] = jnp.broadcast_to(jnp.arange(S), (3, B, S))
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            RNG.normal(0, 1, (B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Spec requirement: reduced variant, one forward/train step, shapes +
+    finiteness."""
+    cfg = get_reduced(arch)
+    assert cfg.num_layers <= 4 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    S = 128 if cfg.family in ("ssm", "hybrid") else 32
+    params = lm.init_model(jax.random.key(0), cfg)
+    batch = make_batch(cfg, S=S)
+
+    logits, aux = lm.forward(params, batch, cfg, remat=False)
+    assert logits.shape == (2, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    step = make_lm_train_step(cfg, lr=1e-3, remat=False)
+    opt_state = init_opt_state(params)
+    params2, opt2, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually moved
+    moved = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_decode_step(arch):
+    cfg = get_reduced(arch)
+    params = lm.init_model(jax.random.key(0), cfg)
+    state = lm.init_decode_state(cfg, 2, 64)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    logits, state2 = lm.decode_step(params, state, {"tokens": tok}, cfg)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(state2.pos) == 1
+
+
+@pytest.mark.parametrize("arch,tol", [
+    ("qwen2_7b", 2e-3), ("stablelm_1p6b", 2e-3), ("minitron_4b", 2e-3),
+    ("h2o_danube3_4b", 2e-3), ("qwen2_vl_7b", None),
+])
+def test_decode_matches_forward_dense(arch, tol):
+    """Cached decode must reproduce the full forward (streaming consistency).
+
+    qwen2_vl is exercised via the text path only (vision prefix requires
+    prefill packing, covered by test_models_extra)."""
+    if tol is None:
+        pytest.skip("vlm decode covered separately")
+    cfg = get_reduced(arch)
+    params = lm.init_model(jax.random.key(1), cfg)
+    B, T = 2, 12
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+    full, _ = lm.forward(params, {"tokens": toks}, cfg, remat=False)
+    state = lm.init_decode_state(cfg, B, T)
+    outs = []
+    for t in range(T):
+        lg, state = lm.decode_step(params, state, {"tokens": toks[:, t:t+1]},
+                                   cfg)
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.stack(outs, 1)),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_matches_forward_moe_nodrop():
+    cfg = dataclasses.replace(get_reduced("mixtral_8x22b"),
+                              capacity_factor=8.0)
+    params = lm.init_model(jax.random.key(1), cfg)
+    B, T = 2, 12
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+    full, _ = lm.forward(params, {"tokens": toks}, cfg, remat=False)
+    state = lm.init_decode_state(cfg, B, T)
+    outs = []
+    for t in range(T):
+        lg, state = lm.decode_step(params, state, {"tokens": toks[:, t:t+1]},
+                                   cfg)
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.stack(outs, 1)),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["mamba2_130m", "zamba2_1p2b"])
+def test_decode_matches_forward_ssm(arch):
+    cfg = get_reduced(arch)
+    params = lm.init_model(jax.random.key(2), cfg)
+    T = 128                                   # SSD chunk size
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (1, T)), jnp.int32)
+    full, _ = lm.forward(params, {"tokens": toks}, cfg, remat=False)
+    state = lm.init_decode_state(cfg, 1, T)
+    dec = jax.jit(lambda p, s, t: lm.decode_step(p, s, {"tokens": t}, cfg))
+    outs = []
+    for t in range(T):
+        lg, state = dec(params, state, toks[:, t:t+1])
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.stack(outs, 1)),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_whisper_decode_matches_forward():
+    cfg = get_reduced("whisper_small")
+    params = lm.init_model(jax.random.key(3), cfg)
+    B, T = 2, 10
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+    frames = jnp.asarray(RNG.normal(0, 1, (B, cfg.encoder_seq, cfg.d_model)),
+                         jnp.float32)
+    full, _ = lm.forward(params, {"tokens": toks, "frames": frames}, cfg,
+                         remat=False)
+    enc_out = lm._encode(params, frames, cfg)
+    state = lm.init_decode_state(cfg, B, T, enc_out=enc_out, params=params)
+    outs = []
+    for t in range(T):
+        lg, state = lm.decode_step(params, state, {"tokens": toks[:, t:t+1]},
+                                   cfg)
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.stack(outs, 1)),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_sliding_window_mask():
+    """SWA: tokens outside the window must not influence logits."""
+    cfg = dataclasses.replace(get_reduced("h2o_danube3_4b"), window=4)
+    params = lm.init_model(jax.random.key(4), cfg)
+    T = 10
+    t1 = RNG.integers(0, cfg.vocab_size, (1, T)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, 0] = (t1[0, 0] + 7) % cfg.vocab_size   # outside window of last tok
+    l1, _ = lm.forward(params, {"tokens": jnp.asarray(t1)}, cfg, remat=False)
+    l2, _ = lm.forward(params, {"tokens": jnp.asarray(t2)}, cfg, remat=False)
+    # last position attends to [T-4, T): token 0 is invisible
+    np.testing.assert_allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]),
+                               rtol=1e-5, atol=1e-5)
+    # but IS visible at position 1
+    assert not np.allclose(np.asarray(l1[0, 1]), np.asarray(l2[0, 1]))
+
+
+def test_mrope_sections_change_positions():
+    cfg = get_reduced("qwen2_vl_7b")
+    params = lm.init_model(jax.random.key(5), cfg)
+    B, S = 1, 16
+    batch = make_batch(cfg, B=B, S=S)
+    l1, _ = lm.forward(params, batch, cfg, remat=False)
+    # different h/w coordinates must change the output (M-RoPE active)
+    pos2 = np.asarray(batch["positions"]).copy()
+    pos2[1] += 5
+    batch2 = dict(batch, positions=jnp.asarray(pos2))
+    l2, _ = lm.forward(params, batch2, cfg, remat=False)
+    assert not np.allclose(np.asarray(l1), np.asarray(l2))
+
+
+def test_moe_aux_loss_balanced_vs_collapsed():
+    from repro.models.moe import apply_moe, init_moe
+    cfg = get_reduced("mixtral_8x22b")
+    p = init_moe(jax.random.key(0), cfg)
+    # positive inputs so a positive column-0 router guarantees collapse
+    x = jnp.asarray(np.abs(RNG.normal(0, 1, (2, 16, cfg.d_model))) + 0.1,
+                    jnp.float32)
+    _, aux = apply_moe(p, x, cfg)
+    # a collapsed router (all tokens -> expert 0) must score worse
+    bad = np.zeros(p["router"].shape, np.float32)
+    bad[:, 0] = 10.0
+    p_bad = dict(p, router=jnp.asarray(bad))
+    _, aux_bad = apply_moe(p_bad, x, cfg)
+    assert float(aux_bad) > float(aux)
+
+
+def test_full_configs_match_assignment():
+    """The exact published numbers from the assignment table."""
+    expect = {
+        "minitron_4b": (32, 3072, 24, 8, 9216, 256000),
+        "whisper_small": (12, 768, 12, 12, 3072, 51865),
+        "qwen2_7b": (28, 3584, 28, 4, 18944, 152064),
+        "mamba2_130m": (24, 768, 0, 0, 0, 50280),
+        "zamba2_1p2b": (38, 2048, 32, 32, 8192, 32000),
+        "mixtral_8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "stablelm_1p6b": (24, 2048, 32, 32, 5632, 100352),
+        "h2o_danube3_4b": (24, 3840, 32, 8, 10240, 32000),
+        "qwen2_vl_7b": (28, 3584, 28, 4, 18944, 152064),
+        "kimi_k2_1t_a32b": (61, 7168, 64, 8, 2048, 163840),
+    }
+    for arch, (L, d, H, Hkv, f, V) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads,
+                cfg.num_kv_heads, cfg.d_ff, cfg.vocab_size) == \
+            (L, d, H, Hkv, f, V), arch
+    # MoE / SSM extras
+    assert get_config("mixtral_8x22b").num_experts == 8
+    assert get_config("mixtral_8x22b").top_k == 2
+    assert get_config("kimi_k2_1t_a32b").num_experts == 384
+    assert get_config("kimi_k2_1t_a32b").top_k == 8
+    assert get_config("mamba2_130m").ssm_state == 128
+    assert get_config("zamba2_1p2b").ssm_state == 64
+    # param-count sanity: kimi ~1T total / ~32B active
+    kimi = get_config("kimi_k2_1t_a32b")
+    assert 0.9e12 < kimi.param_count() < 1.3e12
+    assert 25e9 < kimi.active_param_count() < 40e9
+    # qwen2-7b ~7-8B
+    assert 6e9 < get_config("qwen2_7b").param_count() < 9e9

@@ -1,0 +1,95 @@
+"""Optimizer + schedule + checkpoint tests."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (adamw, apply_updates, cosine_schedule,
+                         init_opt_state, linear_warmup, sgd)
+from repro.optim.optimizers import clip_by_global_norm, global_norm
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+
+def quadratic_params():
+    return {"w": jnp.array([3.0, -2.0]), "b": jnp.array([1.5])}
+
+
+@pytest.mark.parametrize("kind", ["adamw", "sgd"])
+def test_optimizers_minimize_quadratic(kind):
+    params = quadratic_params()
+    state = init_opt_state(params, kind=kind)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        params, state = apply_updates(params, grads, state, kind=kind,
+                                      lr=0.05)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks():
+    params = {"w": jnp.ones((4,)) * 5.0}
+    state = init_opt_state(params)
+    grads = {"w": jnp.zeros((4,))}
+    p2, _ = adamw(params, grads, state, lr=0.1, weight_decay=0.1)
+    assert float(jnp.max(jnp.abs(p2["w"]))) < 5.0
+
+
+def test_bf16_moments_roundtrip():
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    state = init_opt_state(params, moment_dtype=jnp.bfloat16)
+    grads = {"w": jnp.full((8,), 0.5, jnp.bfloat16)}
+    p2, s2 = adamw(params, grads, state, lr=0.01,
+                   moment_dtype=jnp.bfloat16)
+    assert s2.mu["w"].dtype == jnp.bfloat16
+    assert p2["w"].dtype == jnp.bfloat16
+
+
+@given(st.floats(0.1, 10.0), st.integers(1, 50))
+@settings(max_examples=20, deadline=None)
+def test_clip_by_global_norm(scale, n):
+    grads = {"a": jnp.ones((n,)) * scale}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(global_norm(clipped)) <= 1.0 + 1e-5
+    np.testing.assert_allclose(float(norm), scale * np.sqrt(n), rtol=1e-5)
+
+
+def test_schedules_monotone_warmup():
+    lrs = [float(linear_warmup(s, base_lr=1.0, warmup_steps=10))
+           for s in range(12)]
+    assert lrs[:10] == sorted(lrs[:10])
+    assert lrs[10] == lrs[11] == 1.0
+    c0 = float(cosine_schedule(0, base_lr=1.0, warmup_steps=5,
+                               total_steps=100))
+    c99 = float(cosine_schedule(99, base_lr=1.0, warmup_steps=5,
+                                total_steps=100))
+    assert c0 < 1.0 and c99 < 0.2
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = {"layers": [{"w": jnp.arange(6.0).reshape(2, 3)},
+                         {"w": jnp.ones((4,), jnp.bfloat16)}],
+              "scale": jnp.array(2.5)}
+    state = init_opt_state(params)
+    path = os.path.join(tmp_path, "ck.npz")
+    save_checkpoint(path, {"params": params, "opt": state}, step=17)
+    restored, step = restore_checkpoint(path, {"params": params,
+                                               "opt": state})
+    assert step == 17
+    for a, b in zip(jax.tree.leaves(restored),
+                    jax.tree.leaves({"params": params, "opt": state})):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    path = os.path.join(tmp_path, "ck.npz")
+    save_checkpoint(path, {"w": jnp.ones((3,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(path, {"w": jnp.ones((4,))})

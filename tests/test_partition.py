@@ -1,0 +1,105 @@
+"""Partitioner invariants (the METIS-replacement contract) + layouts."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import validate_csc
+from repro.core.partition import (build_hybrid, build_layout, build_vanilla,
+                                  edge_cut, partition_graph,
+                                  seeds_per_worker)
+from repro.data.synthetic_graph import make_power_law_graph
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_power_law_graph(600, 5, num_features=10, num_classes=4,
+                                labeled_fraction=0.4, seed=5)
+
+
+@pytest.mark.parametrize("P", [2, 4, 8])
+def test_partition_invariants(ds, P):
+    assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
+    n = ds.graph.num_nodes
+    # every node assigned exactly once
+    assert assign.shape == (n,)
+    assert assign.min() >= 0 and assign.max() < P
+    # node balance within slack
+    counts = np.bincount(assign, minlength=P)
+    assert counts.max() <= 1.10 * n / P + 1
+    # labeled balance within slack (paper: equal seeds per machine)
+    lab = np.bincount(assign[ds.labeled_mask], minlength=P)
+    assert lab.max() <= 1.10 * ds.labeled_mask.sum() / P + 2
+    # edge-cut beats random partitioning on a homophilous graph
+    rng = np.random.default_rng(1)
+    random_assign = rng.integers(0, P, n)
+    assert edge_cut(ds.graph, assign) <= edge_cut(ds.graph, random_assign)
+
+
+@given(st.integers(2, 6), st.integers(0, 100))
+@settings(max_examples=8, deadline=None)
+def test_partition_total_assignment(P, seed):
+    ds = make_power_law_graph(120, 4, num_features=4, num_classes=3,
+                              seed=seed % 7)
+    assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=seed)
+    assert (assign >= 0).all()
+    counts = np.bincount(assign, minlength=P)
+    assert counts.sum() == ds.graph.num_nodes
+
+
+def test_layout_contiguous_ownership(ds):
+    P = 4
+    assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
+    validate_csc(layout.graph)
+    offsets = np.asarray(layout.offsets)
+    assert offsets[0] == 0 and offsets[-1] == ds.graph.num_nodes
+    # relabeled features/labels match originals through the permutation
+    for p in range(P):
+        k = offsets[p + 1] - offsets[p]
+        ids_old = layout.perm[offsets[p]:offsets[p + 1]]
+        np.testing.assert_allclose(np.asarray(layout.features[p, :k]),
+                                   ds.features[ids_old], rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(layout.labels[p, :k]),
+                                      ds.labels[ids_old])
+    # owner_of agrees with the ranges
+    ids = jnp.arange(ds.graph.num_nodes, dtype=jnp.int32)
+    owners = np.asarray(layout.owner_of(ids))
+    for p in range(P):
+        assert (owners[offsets[p]:offsets[p + 1]] == p).all()
+
+
+def test_vanilla_plan_edges_match_global(ds):
+    """Each worker's local CSC is exactly the slice of the global CSC."""
+    P = 4
+    assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
+    plan = build_vanilla(layout)
+    g_indptr = np.asarray(layout.graph.indptr)
+    g_indices = np.asarray(layout.graph.indices)
+    offsets = np.asarray(layout.offsets)
+    for p in range(P):
+        lo, hi = offsets[p], offsets[p + 1]
+        li = np.asarray(plan.local_indptr[p])
+        lx = np.asarray(plan.local_indices[p])
+        n_local = hi - lo
+        expected_rows = g_indptr[lo:hi + 1] - g_indptr[lo]
+        np.testing.assert_array_equal(li[:n_local + 1], expected_rows)
+        nnz = expected_rows[-1]
+        np.testing.assert_array_equal(lx[:nnz],
+                                      g_indices[g_indptr[lo]:g_indptr[hi]])
+
+
+def test_seeds_drawn_from_local_labeled(ds):
+    P = 4
+    assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
+    seeds = np.asarray(seeds_per_worker(layout, 20, epoch_salt=3))
+    offsets = np.asarray(layout.offsets)
+    labels = np.asarray(layout.labels)
+    for p in range(P):
+        s = seeds[p]
+        s = s[s >= 0]
+        assert len(set(s.tolist())) == len(s)          # no duplicates
+        assert ((s >= offsets[p]) & (s < offsets[p + 1])).all()
+        assert (labels[p, s - offsets[p]] >= 0).all()  # labeled only

@@ -1,0 +1,80 @@
+"""Roofline utilities: HLO collective parsing + term arithmetic."""
+import numpy as np
+import pytest
+
+from repro import roofline
+from repro.configs import get_config, get_shape
+
+HLO_SAMPLE = """
+HloModule jit_step
+
+%fused (a: f32[16,64]) -> f32[16,64] {
+  ROOT %r = f32[16,64] add(...)
+}
+
+ENTRY %main {
+  %ag = bf16[256,1024]{1,0} all-gather(%x), replica_groups=...
+  %ar = f32[128]{0} all-reduce(%y), to_apply=%sum
+  %a2a = (f32[4,8]{1,0}, f32[4,8]{1,0}) all-to-all(%p, %q)
+  %rs = bf16[64,32]{1,0} reduce-scatter(%z), to_apply=%sum
+  %cp = u32[16]{0} collective-permute(%w), source_target_pairs=...
+  %ars = f32[128]{0} all-reduce-start(%y2), to_apply=%sum
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    out = roofline.collective_bytes(HLO_SAMPLE)
+    assert out["bytes"]["all-gather"] == 256 * 1024 * 2
+    assert out["bytes"]["all-reduce"] == 128 * 4 + 128 * 4   # incl -start
+    assert out["bytes"]["all-to-all"] == 2 * 4 * 8 * 4
+    assert out["bytes"]["reduce-scatter"] == 64 * 32 * 2
+    assert out["bytes"]["collective-permute"] == 16 * 4
+    assert out["counts"]["all-reduce"] == 2
+    assert out["total_bytes"] == sum(out["bytes"].values())
+
+
+def test_collective_bytes_ignores_non_collectives():
+    assert roofline.collective_bytes(
+        "%x = f32[8] add(%a, %b)")["total_bytes"] == 0
+
+
+def test_extrapolation():
+    p1 = {"flops": 10.0, "hbm_bytes": 100.0}
+    p2 = {"flops": 16.0, "hbm_bytes": 130.0}
+    out = roofline.extrapolate(p1, p2, 5)
+    assert out["flops"] == 10 + 4 * 6
+    assert out["hbm_bytes"] == 100 + 4 * 30
+
+
+def test_terms_and_dominance():
+    t = roofline.RooflineTerms(flops=197e12, hbm_bytes=819e9 * 2,
+                               coll_bytes=50e9 * 0.5,
+                               model_flops_global=197e12 * 256 * 0.5,
+                               chips=256)
+    assert t.t_compute == pytest.approx(1.0)
+    assert t.t_memory == pytest.approx(2.0)
+    assert t.t_collective == pytest.approx(0.5)
+    assert t.dominant == "memory"
+    assert t.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_model_flops_scaling():
+    cfg = get_config("qwen2_7b")
+    train = roofline.model_flops(cfg, get_shape("train_4k"))
+    pre = roofline.model_flops(cfg, get_shape("prefill_32k"))
+    dec = roofline.model_flops(cfg, get_shape("decode_32k"))
+    # train ~ 6ND with D = 256*4096 tokens
+    n = cfg.active_param_count()
+    assert train > 6 * n * 256 * 4096
+    assert dec < pre < train
+    # decode ~ 2N*B plus attention over the 32k cache
+    assert dec > 2 * n * 128
+
+
+def test_moe_uses_active_params():
+    kimi = get_config("kimi_k2_1t_a32b")
+    shape = get_shape("train_4k")
+    f = roofline.model_flops(kimi, shape)
+    # ~6 * 32B * 1M tokens, NOT 6 * 1T * 1M
+    assert f < 6 * 100e9 * shape.global_batch * shape.seq_len

@@ -1,0 +1,122 @@
+"""Layered-sampler properties (hypothesis) + fused/unfused equivalence."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sampler import (build_indptr, relabel, sample_level,
+                                sample_level_unfused, sample_mfgs,
+                                sample_neighbors)
+from repro.data.synthetic_graph import make_power_law_graph
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return make_power_law_graph(500, 6, num_features=8, num_classes=3,
+                                seed=1).graph
+
+
+def _assert_valid_mfg(g, mfg, seeds):
+    S = len(seeds)
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)
+    src_nodes = np.asarray(mfg.src_nodes)
+    edges = np.asarray(mfg.edges)
+    mask = np.asarray(mfg.edge_mask)
+
+    # prefix convention
+    np.testing.assert_array_equal(src_nodes[:S], np.asarray(seeds))
+    # every sampled edge exists in the graph
+    for i in range(S):
+        v = int(seeds[i])
+        if v < 0:
+            assert not mask[i].any()
+            continue
+        nbrs = set(indices[indptr[v]:indptr[v + 1]].tolist())
+        deg = len(indices[indptr[v]:indptr[v + 1]])
+        for f in range(mfg.fanout):
+            if mask[i, f]:
+                assert src_nodes[edges[i, f]] in nbrs
+        # deg <= fanout -> ALL neighbors taken exactly (DGL semantics)
+        if deg <= mfg.fanout:
+            assert mask[i].sum() == deg
+        else:
+            assert mask[i].sum() == mfg.fanout
+    # Algorithm 1's R vector == cumsum of valid counts
+    np.testing.assert_array_equal(
+        np.asarray(mfg.indptr),
+        np.concatenate([[0], np.cumsum(mask.sum(1))]))
+    # local ids in range, src_nodes valid prefix
+    assert (edges[mask] >= 0).all()
+    assert (edges[mask] < int(mfg.num_src)).all()
+    num_src = int(mfg.num_src)
+    assert (src_nodes[:num_src] >= 0).all() or S > num_src
+    # uniqueness of src_nodes among valid entries
+    valid_srcs = src_nodes[:num_src]
+    valid_srcs = valid_srcs[valid_srcs >= 0]
+    assert len(set(valid_srcs.tolist())) == len(valid_srcs)
+
+
+@given(st.integers(1, 12), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_sample_level_properties(graph, n_seeds, fanout, salt):
+    rng = np.random.default_rng(salt % 1000)
+    seeds = jnp.asarray(rng.choice(graph.num_nodes, n_seeds, replace=False)
+                        .astype(np.int32))
+    mfg = sample_level(graph, seeds, fanout, salt)
+    _assert_valid_mfg(graph, mfg, seeds)
+
+
+@given(st.integers(1, 10), st.integers(1, 6), st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_fused_equals_unfused(graph, n_seeds, fanout, salt):
+    """The paper's central invariant: fused sampling output == two-step."""
+    rng = np.random.default_rng(salt % 997)
+    seeds = jnp.asarray(rng.choice(graph.num_nodes, n_seeds, replace=False)
+                        .astype(np.int32))
+    a = sample_level(graph, seeds, fanout, salt)
+    b = sample_level_unfused(graph, seeds, fanout, salt)
+    for x, y in zip(a.tree_flatten()[0], b.tree_flatten()[0]):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_determinism_and_salt_sensitivity(graph):
+    seeds = jnp.arange(8, dtype=jnp.int32) * 7
+    m1 = sample_mfgs(graph, seeds, (4, 3), salt=11)
+    m2 = sample_mfgs(graph, seeds, (4, 3), salt=11)
+    m3 = sample_mfgs(graph, seeds, (4, 3), salt=12)
+    assert all(bool(jnp.all(a.edges == b.edges))
+               for a, b in zip(m1, m2))
+    assert not all(bool(jnp.all(a.src_nodes == b.src_nodes))
+                   for a, b in zip(m1, m3))
+
+
+def test_frontier_chaining(graph):
+    """mfgs[k].src_nodes must equal mfgs[k+1].dst_nodes (layer wiring)."""
+    seeds = jnp.arange(6, dtype=jnp.int32) * 11
+    mfgs = sample_mfgs(graph, seeds, (3, 2, 2), salt=5)
+    for a, b in zip(mfgs[:-1], mfgs[1:]):
+        np.testing.assert_array_equal(np.asarray(a.src_nodes),
+                                      np.asarray(b.dst_nodes))
+
+
+def test_padded_seeds_are_inert(graph):
+    seeds = jnp.array([3, -1, 17, -1], jnp.int32)
+    mfg = sample_level(graph, seeds, 4, salt=2)
+    mask = np.asarray(mfg.edge_mask)
+    assert not mask[1].any() and not mask[3].any()
+
+
+@given(st.integers(2, 10), st.integers(1, 5))
+@settings(max_examples=20, deadline=None)
+def test_relabel_bijection(graph, n_seeds, fanout):
+    rng = np.random.default_rng(n_seeds * 10 + fanout)
+    seeds = jnp.asarray(rng.choice(graph.num_nodes, n_seeds, replace=False)
+                        .astype(np.int32))
+    samples, valid = sample_neighbors(graph, seeds, fanout, 7)
+    edges, src_nodes, num_src = relabel(seeds, samples, valid)
+    e, m = np.asarray(edges), np.asarray(valid)
+    sn = np.asarray(src_nodes)
+    s, v = np.asarray(samples), np.asarray(valid)
+    # every valid sample maps to a local id holding the same global id
+    np.testing.assert_array_equal(sn[e[m]], s[v])

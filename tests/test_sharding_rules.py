@@ -1,0 +1,104 @@
+"""Sharding-rule unit tests (no devices needed beyond the defaults).
+
+Divisibility fallbacks and the hybrid-partitioning placement principle
+(replicate small / shard big) are checked against a fake mesh object.
+"""
+import numpy as np
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import batch_spec, cache_spec, spec_for_param
+
+
+class FakeMesh:
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+POD = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_embeddings_vocab_sharded():
+    assert spec_for_param("embed/tokens", (152064, 3584), POD) == \
+        P("model", None)
+    assert spec_for_param("embed/head", (3584, 152064), POD) == \
+        P(None, "model")
+
+
+def test_attention_projections():
+    assert spec_for_param("blocks/attn/wq", (28, 3584, 3584), POD) == \
+        P(None, None, "model")
+    assert spec_for_param("blocks/attn/wo", (28, 3584, 3584), POD) == \
+        P(None, "model", None)
+
+
+def test_moe_expert_parallel_divisible():
+    # kimi: 384 experts / 16 -> expert parallel on data
+    s = spec_for_param("blocks/moe/w1", (61, 384, 7168, 2048), POD)
+    assert s == P(None, "data", None, "model")
+    s = spec_for_param("blocks/moe/w2", (61, 384, 2048, 7168), POD)
+    assert s == P(None, "data", "model", None)
+
+
+def test_moe_expert_parallel_multipod():
+    s = spec_for_param("blocks/moe/w1", (61, 384, 7168, 2048), MULTI)
+    assert s == P(None, ("pod", "data"), None, "model")
+
+
+def test_moe_fallback_fsdp_when_not_divisible():
+    # mixtral: 8 experts don't divide 16 -> FSDP-shard d_model on data
+    s = spec_for_param("blocks/moe/w1", (56, 8, 6144, 16384), POD)
+    assert s == P(None, None, "data", "model")
+    s = spec_for_param("blocks/moe/w2", (56, 8, 16384, 6144), POD)
+    assert s == P(None, None, "model", "data")
+
+
+def test_small_params_replicated():
+    for name, shape in [("blocks/ln1/scale", (28, 3584)),
+                        ("blocks/moe/router", (61, 7168, 384)),
+                        ("blocks/ssm/A_log", (24, 24)),
+                        ("blocks/attn/bq", (28, 3584))]:
+        s = spec_for_param(name, shape, POD)
+        assert s == P(*([None] * len(shape))), name
+
+
+def test_divisibility_fallback_replicates():
+    # 28 heads * 128 = 3584 divides 16; but a weird dim like 30 must not
+    s = spec_for_param("blocks/attn/wq", (2, 30, 30), POD)
+    assert s == P(None, None, None)
+
+
+def test_batch_specs():
+    assert batch_spec((256, 4096), POD) == P("data", None)
+    assert batch_spec((256, 4096), MULTI) == P(("pod", "data"), None)
+    assert batch_spec((1, 524288), POD) == P(None, None)       # batch 1
+    # batch 32 divides 32 on multipod
+    assert batch_spec((32, 32768), MULTI) == P(("pod", "data"), None)
+
+
+def test_cache_specs():
+    # (L, B, C, Hkv, Dh): Hkv=8 doesn't divide model=16 -> cache length
+    s = cache_spec((24, 128, 32768, 8, 64), POD)
+    assert s == P(None, "data", "model", None, None)
+    # Hkv=32 divides -> heads on model
+    s = cache_spec((24, 128, 32768, 32, 64), POD)
+    assert s == P(None, "data", None, "model", None)
+    # ssm state (L, B, H, P, N) via kv_head_dim=2
+    s = cache_spec((24, 128, 64, 64, 128), POD, kv_head_dim=2)
+    assert s == P(None, "data", "model", None, None)
+
+
+def test_param_specs_accepts_struct_tree():
+    from repro.configs import get_reduced
+    from repro.launch.specs import abstract_params
+    from repro.sharding import param_specs
+    cfg = get_reduced("qwen2_7b")
+    structs = abstract_params(cfg)
+    specs = param_specs(structs, POD)
+    leaves = jax.tree.leaves(specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    assert all(isinstance(s, P) for s in leaves)
+    assert len(leaves) == len(jax.tree.leaves(structs))
