@@ -1,0 +1,19 @@
+# Development entry points.  `make test` is the tier-1 gate CI runs on push.
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke bench dev-install
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+# quick benchmark sanity (one figure, minutes not hours)
+bench-smoke:
+	$(PYTHON) -m benchmarks.run cache
+
+# the full paper-figure sweep
+bench:
+	$(PYTHON) -m benchmarks.run
+
+dev-install:
+	$(PYTHON) -m pip install -r requirements-dev.txt

@@ -1,18 +1,15 @@
 """Feature-cache extension (paper §5 future work): hit rate and
-communication-volume reduction vs cache capacity, hybrid scheme, 8 workers.
+communication-volume reduction vs cache capacity, hybrid scheme, 8
+workers — the cache is a ``PlanSpec`` field, not a separate code path.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit
-from repro.core import dist
-from repro.core.cache import (build_degree_caches, make_cached_worker_step,
-                              run_stacked_cached)
-from repro.core.partition import (build_layout, build_vanilla,
-                                  partition_graph, seeds_per_worker)
+from repro.core.partition import build_layout, partition_graph
 from repro.data.synthetic_graph import products_like
 from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+from repro.pipeline import Pipeline, PipelineSpec, PlanSpec, SamplerSpec
 
 P = 8
 
@@ -21,10 +18,6 @@ def main() -> None:
     ds = products_like()
     assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
     layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
-    vplan = build_vanilla(layout)
-    shards = dist.WorkerShard(features=layout.features, labels=layout.labels,
-                              local_indptr=vplan.local_indptr,
-                              local_indices=vplan.local_indices)
     cfg = GNNConfig(in_dim=ds.features.shape[1], hidden_dim=64,
                     num_classes=ds.num_classes, num_layers=3,
                     fanouts=(10, 10, 5), dropout=0.0)
@@ -33,25 +26,16 @@ def main() -> None:
     def loss_fn(p, mfgs, h_src, labels, valid):
         return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
 
-    feat_bytes = ds.features.shape[1] * 4
-    seeds = seeds_per_worker(layout, 256, epoch_salt=1)
     for capacity in (0, 512, 2048, 8192):
-        if capacity == 0:
-            step = dist.make_worker_step(
-                graph_replicated=layout.graph, offsets=layout.offsets,
-                num_parts=P, fanouts=cfg.fanouts, scheme="hybrid",
-                loss_fn=loss_fn)
-            loss, _ = dist.run_stacked(step, params, shards, seeds,
-                                       jnp.uint32(3))
-            hit = 0.0
-        else:
-            cache = build_degree_caches(layout, capacity=capacity)
-            step = make_cached_worker_step(
-                graph_replicated=layout.graph, offsets=layout.offsets,
-                num_parts=P, fanouts=cfg.fanouts, loss_fn=loss_fn)
-            loss, _, hit = run_stacked_cached(step, params, shards, seeds,
-                                              jnp.uint32(3), cache)
-            hit = float(hit)
+        spec = PipelineSpec(
+            plan=PlanSpec(num_parts=P, scheme="hybrid",
+                          cache_capacity=capacity),
+            sampler=SamplerSpec(fanouts=cfg.fanouts, backend="unfused"))
+        pipe = Pipeline.from_layout(layout, spec)
+        step = jax.jit(pipe.step_fn(loss_fn))
+        seeds = pipe.seeds(256, epoch_salt=1)
+        loss, _, metrics = step(params, seeds, jnp.uint32(3))
+        hit = float(metrics["cache_hit_rate"])
         emit(f"cache/K{capacity}/hit_rate_pct", 100.0 * hit, "")
         emit(f"cache/K{capacity}/feature_bytes_saved_pct", 100.0 * hit,
              "utilized-volume")

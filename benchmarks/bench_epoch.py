@@ -1,24 +1,22 @@
 """Paper Fig. 6: distributed epoch time — vanilla vs hybrid vs hybrid+fused.
 
 Runs the three schemes on a partitioned synthetic graph (4 and 8 workers,
-matching the paper's machine counts) in the single-device stacked simulation
-and reports: epoch wall-time, communication rounds per step, and bytes
-communicated per step.  The rounds/bytes columns carry the architectural
-claim (2L -> 2); wall time shows the end-to-end effect of the removed
-passes + rounds on this host.
+matching the paper's machine counts) through the ``repro.pipeline`` API in
+the single-device stacked simulation and reports: epoch wall-time,
+communication rounds per step, and bytes communicated per step.  The
+rounds/bytes columns carry the architectural claim (2L -> 2); wall time
+shows the end-to-end effect of the removed passes + rounds on this host.
 """
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit
-from repro.core import dist
-from repro.core.partition import (build_layout, build_vanilla, edge_cut,
-                                  partition_graph, seeds_per_worker)
+from repro.core.partition import build_layout, partition_graph
 from repro.data.synthetic_graph import products_like
 from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+from repro.pipeline import Pipeline, PipelineSpec
 
 SCHEMES = ("vanilla", "hybrid", "hybrid+fused")
 
@@ -26,10 +24,6 @@ SCHEMES = ("vanilla", "hybrid", "hybrid+fused")
 def run(ds, P, batch=256, steps=3):
     assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
     layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
-    vplan = build_vanilla(layout)
-    shards = dist.WorkerShard(features=layout.features, labels=layout.labels,
-                              local_indptr=vplan.local_indptr,
-                              local_indices=vplan.local_indices)
     cfg = GNNConfig(in_dim=ds.features.shape[1], hidden_dim=256,
                     num_classes=ds.num_classes, num_layers=3,
                     fanouts=(10, 10, 5), dropout=0.0)
@@ -38,43 +32,32 @@ def run(ds, P, batch=256, steps=3):
     def loss_fn(p, mfgs, h_src, labels, valid):
         return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
 
-    emit(f"fig6/P{P}/edge_cut_pct",
-         100.0 * edge_cut(ds.graph, assign) / ds.graph.num_edges, "%")
-
     for scheme in SCHEMES:
-        counter = dist.RoundCounter()
-        level_fn = None
-        if scheme == "hybrid+fused":
-            # jnp fused path (kernel validated separately; interpret-mode
-            # wall-clock would measure Python, not the algorithm)
-            from repro.core.sampler import sample_level as level_fn_sel
-            level_fn = level_fn_sel
-        else:
-            from repro.core.sampler import sample_level_unfused as lf
-            level_fn = lf
-        step = dist.make_worker_step(
-            graph_replicated=(layout.graph if scheme.startswith("hybrid")
-                              else None),
-            offsets=layout.offsets, num_parts=P, fanouts=cfg.fanouts,
-            scheme="hybrid" if scheme.startswith("hybrid") else "vanilla",
-            loss_fn=loss_fn, level_fn=level_fn, counter=counter)
-
-        jstep = jax.jit(lambda p, sh, s, salt: dist.run_stacked(
-            step, p, sh, s, salt))
-        seeds = seeds_per_worker(layout, batch, epoch_salt=0)
-        jax.block_until_ready(jstep(params, shards, seeds, jnp.uint32(0)))
+        # jnp fused path for hybrid+fused (kernel validated separately;
+        # interpret-mode wall-clock would measure Python, not the algorithm)
+        spec = PipelineSpec.from_scheme(scheme, num_parts=P,
+                                        fanouts=cfg.fanouts,
+                                        fused_backend="reference")
+        pipe = Pipeline.from_layout(layout, spec)
+        if scheme == SCHEMES[0]:
+            emit(f"fig6/P{P}/edge_cut_pct",
+                 100.0 * pipe.edge_cut_fraction, "%")
+        step = pipe.step_fn(loss_fn)
+        jstep = jax.jit(step)
+        seeds = pipe.seeds(batch, epoch_salt=0)
+        jax.block_until_ready(jstep(params, seeds, jnp.uint32(0)))
 
         t0 = time.perf_counter()
         for s in range(steps):
-            seeds = seeds_per_worker(layout, batch, epoch_salt=s)
-            jax.block_until_ready(
-                jstep(params, shards, seeds, jnp.uint32(s)))
+            seeds = pipe.seeds(batch, epoch_salt=s)
+            jax.block_until_ready(jstep(params, seeds, jnp.uint32(s)))
         dt = (time.perf_counter() - t0) / steps
 
         emit(f"fig6/P{P}/{scheme}/step_time_us", dt * 1e6, "")
-        emit(f"fig6/P{P}/{scheme}/comm_rounds", counter.rounds, "per-step")
+        emit(f"fig6/P{P}/{scheme}/comm_rounds", pipe.counter.rounds,
+             "per-step")
         emit(f"fig6/P{P}/{scheme}/comm_bytes",
-             sum(counter.bytes_per_round), "per-step")
+             sum(pipe.counter.bytes_per_round), "per-step")
 
 
 def main() -> None:

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core.sampler import sample_level, sample_level_unfused, sample_mfgs
+from repro.core.sampler import sample_mfgs
 from repro.data.synthetic_graph import papers_like
 from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
 
@@ -35,11 +35,10 @@ def bench_sampling(ds, batch_sizes=(256, 1024, 2048),
         for fanouts in fanout_sets:
             fused_fn = jax.jit(
                 lambda s, salt, f=fanouts: sample_mfgs(
-                    g, s, f, salt, level_fn=sample_level)[-1].src_nodes)
+                    g, s, f, salt, backend="reference")[-1].src_nodes)
             unfused_fn = jax.jit(
                 lambda s, salt, f=fanouts: sample_mfgs(
-                    g, s, f, salt, level_fn=sample_level_unfused
-                )[-1].src_nodes)
+                    g, s, f, salt, backend="unfused")[-1].src_nodes)
             t_f = timeit(fused_fn, seeds, jnp.uint32(3))
             t_u = timeit(unfused_fn, seeds, jnp.uint32(3))
             tag = f"b{B}_f{'x'.join(map(str, fanouts))}"
@@ -64,10 +63,10 @@ def bench_end_to_end(ds, B=1024, fanouts=(10, 10, 5)):
         np.pad(rng.choice(labeled, take, replace=False).astype(np.int32),
                (0, B - take), constant_values=-1))
 
-    def step(level_fn):
+    def step(backend):
         def fn(params, seeds, salt):
             mfgs = sample_mfgs(g, seeds, cfg.fanouts, salt,
-                               level_fn=level_fn)
+                               backend=backend)
             src = mfgs[-1].src_nodes
             h0 = feats[jnp.clip(src, 0)] * (src >= 0)[:, None]
             lab = labels[jnp.clip(seeds, 0)]
@@ -76,8 +75,8 @@ def bench_end_to_end(ds, B=1024, fanouts=(10, 10, 5)):
             return loss
         return jax.jit(fn)
 
-    t_f = timeit(step(sample_level), params, seeds, jnp.uint32(5))
-    t_u = timeit(step(sample_level_unfused), params, seeds, jnp.uint32(5))
+    t_f = timeit(step("reference"), params, seeds, jnp.uint32(5))
+    t_u = timeit(step("unfused"), params, seeds, jnp.uint32(5))
     emit("fig5/train/fused_us", t_f * 1e6, "")
     emit("fig5/train/unfused_us", t_u * 1e6, "")
     emit("fig5/train/speedup_pct", 100.0 * (t_u - t_f) / t_u, "%")

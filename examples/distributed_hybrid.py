@@ -1,8 +1,10 @@
 """The paper's experiment in miniature: distributed GNN training with the
-three Fig. 6 scenarios (vanilla / hybrid / hybrid+fused) on 8 workers.
+three Fig. 6 scenarios (vanilla / hybrid / hybrid+fused) — plus the §5
+feature cache — on 8 workers, all through the ``repro.pipeline`` API.
 
 Verifies the 2L -> 2 communication-round reduction, the identical loss
 trajectories, and reports per-scheme step times and communicated bytes.
+All four pipelines share one partitioning via ``Pipeline.from_layout``.
 
   PYTHONPATH=src python examples/distributed_hybrid.py
 """
@@ -10,14 +12,12 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import dist
-from repro.core.partition import (build_layout, build_vanilla, edge_cut,
-                                  partition_graph, seeds_per_worker)
+from repro.core.partition import build_layout, partition_graph
 from repro.data.synthetic_graph import make_power_law_graph
 from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
-from repro.optim import apply_updates, init_opt_state
+from repro.optim import init_opt_state
+from repro.pipeline import Pipeline, PipelineSpec
 
 P = 8
 
@@ -27,61 +27,61 @@ def main():
                               seed=0)
     assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
     layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
-    vplan = build_vanilla(layout)
-    print(f"{P} workers, edge-cut "
-          f"{edge_cut(ds.graph, assign)/ds.graph.num_edges:.1%}")
 
     cfg = GNNConfig(in_dim=100, hidden_dim=128, num_classes=47,
                     num_layers=3, fanouts=(8, 5, 5), dropout=0.0)
-    shards = dist.WorkerShard(features=layout.features, labels=layout.labels,
-                              local_indptr=vplan.local_indptr,
-                              local_indices=vplan.local_indices)
 
     def loss_fn(p, mfgs, h_src, labels, valid):
         return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
 
+    variants = {
+        "vanilla": PipelineSpec.from_scheme(
+            "vanilla", num_parts=P, fanouts=cfg.fanouts),
+        "hybrid": PipelineSpec.from_scheme(
+            "hybrid", num_parts=P, fanouts=cfg.fanouts),
+        "hybrid+fused": PipelineSpec.from_scheme(
+            "hybrid+fused", num_parts=P, fanouts=cfg.fanouts,
+            # jnp fused path: interpret-mode kernel wall-clock would time
+            # the Python interpreter, not the algorithm
+            fused_backend="reference"),
+        "hybrid+cache": PipelineSpec.from_scheme(
+            "hybrid", num_parts=P, fanouts=cfg.fanouts,
+            cache_capacity=2048),
+    }
+
     results = {}
-    for scheme in ("vanilla", "hybrid", "hybrid+fused"):
-        counter = dist.RoundCounter()
-        from repro.core.sampler import sample_level, sample_level_unfused
-        level_fn = (sample_level if scheme == "hybrid+fused"
-                    else sample_level_unfused)
-        step = dist.make_worker_step(
-            graph_replicated=(layout.graph if scheme.startswith("hybrid")
-                              else None),
-            offsets=layout.offsets, num_parts=P, fanouts=cfg.fanouts,
-            scheme="hybrid" if scheme.startswith("hybrid") else "vanilla",
-            loss_fn=loss_fn, level_fn=level_fn, counter=counter)
+    for name, spec in variants.items():
+        pipe = Pipeline.from_layout(layout, spec)
+        if name == "vanilla":
+            print(f"{P} workers, edge-cut {pipe.edge_cut_fraction:.1%}")
+        train = pipe.train_step(loss_fn, lr=0.006,      # paper's lr
+                                optimizer="adamw", grad_clip=None)
 
         params = init_gnn_params(jax.random.key(0), cfg)
         opt_state = init_opt_state(params)
 
-        @jax.jit
-        def train(params, opt_state, seeds, salt):
-            loss, grads = dist.run_stacked(step, params, shards, seeds, salt)
-            params, opt_state = apply_updates(params, grads, opt_state,
-                                              lr=0.006)     # paper's lr
-            return params, opt_state, loss
-
         losses = []
-        seeds = seeds_per_worker(layout, 128, epoch_salt=0)
-        jax.block_until_ready(train(params, opt_state, seeds, jnp.uint32(0)))
+        seeds = pipe.seeds(128, epoch_salt=0)
+        jax.block_until_ready(train(params, opt_state, seeds,
+                                    jnp.uint32(0)))
 
         t0 = time.time()
         for s in range(6):
-            seeds = seeds_per_worker(layout, 128, epoch_salt=s)
-            params, opt_state, loss = train(params, opt_state, seeds,
-                                            jnp.uint32(s))
+            seeds = pipe.seeds(128, epoch_salt=s)
+            params, opt_state, loss, metrics = train(params, opt_state,
+                                                     seeds, jnp.uint32(s))
             losses.append(round(float(loss), 6))
         dt = (time.time() - t0) / 6
-        results[scheme] = losses
-        print(f"{scheme:13s} rounds/step={counter.rounds:2d} "
-              f"bytes/step={sum(counter.bytes_per_round):>12,} "
-              f"step={dt*1e3:7.1f}ms losses={losses[:3]}...")
+        results[name] = losses
+        bytes_step = sum(pipe.counter.bytes_per_round)
+        hit = float(metrics["cache_hit_rate"])
+        print(f"{name:13s} rounds/step={pipe.counter.rounds:2d} "
+              f"bytes/step={bytes_step:>12,} step={dt*1e3:7.1f}ms "
+              f"cache-hit={hit:5.1%} losses={losses[:3]}...")
 
-    assert results["vanilla"] == results["hybrid"] == \
-        results["hybrid+fused"], "schemes must be mathematically equivalent"
-    print("\nall three schemes produced IDENTICAL loss trajectories "
+    assert len(set(map(tuple, results.values()))) == 1, \
+        "schemes must be mathematically equivalent"
+    print("\nall four pipelines produced IDENTICAL loss trajectories "
           "(paper §4.2) ✓")
 
 

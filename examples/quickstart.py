@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sampler import sample_mfgs, sample_level
+from repro.core.sampler import sample_mfgs
 from repro.data.synthetic_graph import make_power_law_graph
 from repro.models.gnn import (GNNConfig, gnn_accuracy, gnn_loss,
                               init_gnn_params)
@@ -36,7 +36,7 @@ def main():
     @jax.jit
     def train_step(params, opt_state, seeds, salt):
         mfgs = sample_mfgs(g, seeds, cfg.fanouts, salt,
-                           level_fn=sample_level)
+                           backend="reference")
         src = mfgs[-1].src_nodes
         h0 = feats[jnp.clip(src, 0)] * (src >= 0)[:, None]
         lab = labels[jnp.clip(seeds, 0)]

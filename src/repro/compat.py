@@ -1,0 +1,37 @@
+"""Version-compat shims for the jax API surface this repo touches.
+
+The repo targets jax >= 0.4.30.  Two call sites changed across versions:
+
+  * ``jax.make_mesh`` grew an ``axis_types`` kwarg (and
+    ``jax.sharding.AxisType``) only in newer releases;
+  * ``jax.shard_map`` graduated from ``jax.experimental.shard_map`` and
+    renamed ``check_rep`` to ``check_vma``.
+
+Everything else (``jax.vmap``, ``jax.lax`` collectives, pytrees) is stable.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the version supports it."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                                 axis_types=(axis_type.Auto,)
+                                 * len(tuple(axis_names)))
+        except TypeError:
+            pass
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """Dispatch to ``jax.shard_map`` or the experimental fallback."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)

@@ -18,6 +18,7 @@ reports both plus the hit rate.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +26,9 @@ import numpy as np
 from jax import lax
 
 from repro.core import dist
+# cache-aware fetch now lives in dist (first-class stage of the feature
+# fetch); re-exported here for backward compatibility
+from repro.core.dist import fetch_features_cached  # noqa: F401
 from repro.core.partition import PartitionLayout
 
 
@@ -47,10 +51,13 @@ class FeatureCache:
         return self.ids.shape[0]
 
 
-def build_degree_caches(layout: PartitionLayout, capacity: int
-                        ) -> FeatureCache:
+def degree_caches(layout: PartitionLayout, capacity: int) -> FeatureCache:
     """Host-side: per worker, cache the top-`capacity` highest-in-degree
-    nodes owned by OTHER workers.  Returns stacked (P, K) / (P, K, D)."""
+    nodes owned by OTHER workers.  Returns stacked (P, K) / (P, K, D).
+
+    Prefer ``repro.pipeline.PlanSpec(cache_capacity=K)`` — ``Pipeline.build``
+    then constructs the cache and threads it through the feature fetch.
+    """
     deg = np.asarray(layout.graph.degrees())
     offsets = np.asarray(layout.offsets)
     feats = np.asarray(layout.features)
@@ -76,27 +83,16 @@ def build_degree_caches(layout: PartitionLayout, capacity: int
                         rows=jnp.asarray(rows_out))
 
 
-def fetch_features_cached(src_nodes: jnp.ndarray, offsets: jnp.ndarray,
-                          num_parts: int, features_local: jnp.ndarray,
-                          cache: FeatureCache,
-                          counter: dist.RoundCounter | None = None):
-    """Cache-aware variant of ``dist.fetch_features`` (bit-identical rows).
-
-    Returns (h (N, D), hit_count scalar).  Hits never enter the request
-    buffer (their slot carries -1), so utilized communication bytes drop by
-    the hit rate; buffer capacity is unchanged (static shapes).
-    """
-    K = cache.capacity
-    pos = jnp.searchsorted(cache.ids, src_nodes)
-    pos_c = jnp.clip(pos, 0, K - 1)
-    is_hit = (cache.ids[pos_c] == src_nodes) & (src_nodes >= 0)
-    hit_rows = cache.rows[pos_c]
-
-    miss_ids = jnp.where(is_hit, -1, src_nodes)
-    h_miss = dist.fetch_features(miss_ids, offsets, num_parts,
-                                 features_local, counter)
-    h = jnp.where(is_hit[:, None], hit_rows.astype(h_miss.dtype), h_miss)
-    return h, jnp.sum(is_hit)
+def build_degree_caches(layout: PartitionLayout, capacity: int
+                        ) -> FeatureCache:
+    """Deprecated alias of ``degree_caches`` — prefer the pipeline API
+    (``repro.pipeline.PlanSpec(cache_capacity=...)``)."""
+    warnings.warn(
+        "repro.core.cache.build_degree_caches is deprecated; use "
+        "repro.pipeline.PlanSpec(cache_capacity=...) with Pipeline.build, "
+        "or repro.core.cache.degree_caches",
+        DeprecationWarning, stacklevel=2)
+    return degree_caches(layout, capacity)
 
 
 def make_cached_worker_step(*, graph_replicated, offsets, num_parts,

@@ -21,6 +21,7 @@ assert the 2L -> 2 reduction structurally.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Callable, Sequence
 
@@ -227,8 +228,20 @@ def vanilla_sample(shard: WorkerShard, offsets: jnp.ndarray,
 
 def fetch_features(src_nodes: jnp.ndarray, offsets: jnp.ndarray,
                    num_parts: int, features_local: jnp.ndarray,
-                   counter: RoundCounter | None) -> jnp.ndarray:
-    """The 2 feature rounds shared by both schemes (ids out, rows back)."""
+                   counter: RoundCounter | None,
+                   cache=None) -> jnp.ndarray:
+    """The 2 feature rounds shared by both schemes (ids out, rows back).
+
+    ``cache`` (an optional ``repro.core.cache.FeatureCache``) makes hot
+    remote features a first-class stage of the fetch: hits are served
+    locally and only misses ride the all_to_all.  Rows are bit-identical
+    with or without a cache; use ``fetch_features_cached`` to also get the
+    hit count.
+    """
+    if cache is not None:
+        h, _ = fetch_features_cached(src_nodes, offsets, num_parts,
+                                     features_local, cache, counter)
+        return h
     me = lax.axis_index(AXIS)
     my_offset = offsets[me]
     n_local = features_local.shape[0]
@@ -245,8 +258,31 @@ def fetch_features(src_nodes: jnp.ndarray, offsets: jnp.ndarray,
     return h * (src_nodes >= 0)[:, None].astype(h.dtype)
 
 
+def fetch_features_cached(src_nodes: jnp.ndarray, offsets: jnp.ndarray,
+                          num_parts: int, features_local: jnp.ndarray,
+                          cache, counter: RoundCounter | None = None):
+    """Cache-aware feature fetch (bit-identical rows to ``fetch_features``).
+
+    ``cache`` is a ``repro.core.cache.FeatureCache`` (stacked per worker).
+    Returns (h (N, D), hit_count scalar).  Hits never enter the request
+    buffer (their slot carries -1), so utilized communication bytes drop by
+    the hit rate; buffer capacity is unchanged (static shapes).
+    """
+    K = cache.capacity
+    pos = jnp.searchsorted(cache.ids, src_nodes)
+    pos_c = jnp.clip(pos, 0, K - 1)
+    is_hit = (cache.ids[pos_c] == src_nodes) & (src_nodes >= 0)
+    hit_rows = cache.rows[pos_c]
+
+    miss_ids = jnp.where(is_hit, -1, src_nodes)
+    h_miss = fetch_features(miss_ids, offsets, num_parts,
+                            features_local, counter)
+    h = jnp.where(is_hit[:, None], hit_rows.astype(h_miss.dtype), h_miss)
+    return h, jnp.sum(is_hit)
+
+
 # --------------------------------------------------------------------------
-# full distributed train step
+# full distributed train step (deprecated shim — see repro.pipeline)
 # --------------------------------------------------------------------------
 
 def make_worker_step(*, graph_replicated: CSCGraph | None,
@@ -255,44 +291,29 @@ def make_worker_step(*, graph_replicated: CSCGraph | None,
                      loss_fn: Callable, level_fn=sample_level,
                      counter: RoundCounter | None = None,
                      vanilla_fused: bool = False):
-    """Build the per-worker train step.
+    """Deprecated: build the per-worker train step.
 
-    loss_fn(params, mfgs, h_src, seed_labels, seed_valid) -> scalar loss.
+    Use ``repro.pipeline.Pipeline.build(...)`` (or, for the raw per-worker
+    program, ``repro.pipeline.worker.make_worker_step``) instead — kernels
+    there resolve by registry name and the feature cache is first-class.
+
     Returns step(params, shard, seeds, salt) -> (loss, grads), with grads
     already pmean-ed over the worker axis.
-
-    scheme: "vanilla" | "hybrid" (hybrid also covers hybrid+fused via
-    level_fn=repro.kernels.ops.fused_sample_level).
     """
-    if scheme not in ("vanilla", "hybrid"):
-        raise ValueError(scheme)
-    if scheme == "hybrid" and graph_replicated is None:
-        raise ValueError("hybrid scheme needs the replicated topology")
+    warnings.warn(
+        "repro.core.dist.make_worker_step is deprecated; use "
+        "repro.pipeline.Pipeline.build(...).train_step(...) or "
+        "repro.pipeline.worker.make_worker_step",
+        DeprecationWarning, stacklevel=2)
+    from repro.pipeline.worker import make_worker_step as _make
+
+    inner = _make(graph_replicated=graph_replicated, offsets=offsets,
+                  num_parts=num_parts, fanouts=fanouts, scheme=scheme,
+                  loss_fn=loss_fn, level_fn=level_fn, counter=counter,
+                  vanilla_fused=vanilla_fused)
 
     def step(params, shard: WorkerShard, seeds, salt):
-        if scheme == "hybrid":
-            mfgs = hybrid_sample(graph_replicated, seeds, fanouts, salt,
-                                 level_fn=level_fn)
-        else:
-            mfgs = vanilla_sample(shard, offsets, num_parts, seeds,
-                                  fanouts, salt, counter,
-                                  fused=vanilla_fused)
-
-        h_src = fetch_features(mfgs[-1].src_nodes, offsets, num_parts,
-                               shard.features, counter)
-
-        me = lax.axis_index(AXIS)
-        local_seed = jnp.clip(seeds - offsets[me], 0,
-                              shard.labels.shape[0] - 1)
-        seed_labels = shard.labels[local_seed]
-        seed_valid = seeds >= 0
-
-        def objective(p):
-            return loss_fn(p, mfgs, h_src, seed_labels, seed_valid)
-
-        loss, grads = jax.value_and_grad(objective)(params)
-        grads = lax.pmean(grads, AXIS)
-        loss = lax.pmean(loss, AXIS)
+        loss, grads, _metrics = inner(params, shard, seeds, salt)
         return loss, grads
 
     return step
@@ -310,6 +331,8 @@ def make_shard_map_step(step, mesh, params_spec, shard_spec, seeds_spec):
     """Production path: the same per-worker program under shard_map."""
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import shard_map
+
     def wrapper(params, shards, seeds, salt):
         squeeze = lambda a: a[0]
         shards1 = jax.tree.map(squeeze, shards)
@@ -317,8 +340,8 @@ def make_shard_map_step(step, mesh, params_spec, shard_spec, seeds_spec):
         loss, grads = step(params, shards1, seeds1, salt)
         return loss, grads
 
-    return jax.shard_map(
+    return shard_map(
         wrapper, mesh=mesh,
         in_specs=(params_spec, shard_spec, seeds_spec, P()),
         out_specs=(P(), params_spec),
-        check_vma=False)
+        check=False)

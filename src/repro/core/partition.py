@@ -39,9 +39,13 @@ from repro.core.graph import CSCGraph, csc_from_numpy_edges
 
 def partition_graph(graph: CSCGraph, num_parts: int,
                     labeled_mask: np.ndarray, seed: int = 0,
-                    slack: float = 1.05) -> np.ndarray:
+                    slack: float = 1.05,
+                    labeled_slack: float | None = None) -> np.ndarray:
     """BFS-ordered LDG edge-cut partitioning.
 
+    ``slack`` bounds per-partition node counts; ``labeled_slack`` bounds
+    per-partition labeled-node counts (defaults to ``slack`` — the paper's
+    third balance target, so every machine draws equal seeds per epoch).
     Returns ``assign`` (num_nodes,) int32 in [0, num_parts).
     """
     indptr = np.asarray(graph.indptr)
@@ -49,8 +53,10 @@ def partition_graph(graph: CSCGraph, num_parts: int,
     n = graph.num_nodes
     labeled = np.asarray(labeled_mask).astype(bool)
 
+    if labeled_slack is None:
+        labeled_slack = slack
     cap_nodes = slack * n / num_parts
-    cap_labeled = max(1.0, slack * labeled.sum() / num_parts)
+    cap_labeled = max(1.0, labeled_slack * labeled.sum() / num_parts)
 
     # out-neighbors give better BFS locality for edge-cut; build CSR view
     out_deg = np.bincount(indices, minlength=n)

@@ -16,7 +16,7 @@ bit-identical (paper §4.2 "mathematically equivalent"), which
 from __future__ import annotations
 
 from functools import partial
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -178,18 +178,76 @@ def sample_level_unfused(graph: CSCGraph, seeds: jnp.ndarray, fanout: int,
                edges=edges, edge_mask=valid_rt, indptr=indptr)
 
 
+# --------------------------------------------------------------------------
+# level-backend registry
+# --------------------------------------------------------------------------
+# A *level backend* is any ``level_fn(graph, seeds, fanout, salt) -> MFG``.
+# Registering by name lets the distributed step builders, benchmarks, and
+# the repro.pipeline API resolve kernels declaratively — and lets
+# third-party backends plug in without touching core modules.
+
+_LEVEL_BACKENDS: dict[str, Callable] = {}
+
+
+def register_backend(name: str, level_fn: Callable, *,
+                     overwrite: bool = False) -> None:
+    """Register ``level_fn`` under ``name`` (see ``resolve_backend``)."""
+    if not overwrite and name in _LEVEL_BACKENDS \
+            and _LEVEL_BACKENDS[name] is not level_fn:
+        raise ValueError(f"backend {name!r} already registered; "
+                         f"pass overwrite=True to replace it")
+    _LEVEL_BACKENDS[name] = level_fn
+
+
+def available_backends() -> tuple[str, ...]:
+    """Names currently registered (kernel backends appear once imported)."""
+    return tuple(sorted(_LEVEL_BACKENDS))
+
+
+def resolve_backend(name: str) -> Callable:
+    """Look up a level backend by name.
+
+    Built-ins: ``"reference"`` (fused-semantics jnp path), ``"unfused"``
+    (DGL-style COO->CSC baseline), ``"fused_pallas"`` (Pallas kernel,
+    registered by ``repro.kernels.ops`` — imported lazily on first miss).
+    """
+    import_err = None
+    if name not in _LEVEL_BACKENDS:
+        try:  # kernel-backed backends register at import time
+            import repro.kernels.ops  # noqa: F401
+        except ImportError as e:
+            import_err = e
+    try:
+        return _LEVEL_BACKENDS[name]
+    except KeyError:
+        msg = (f"unknown sampling backend {name!r}; "
+               f"available: {available_backends()}")
+        if import_err is not None:
+            msg += f" (importing repro.kernels.ops failed: {import_err})"
+        raise KeyError(msg) from import_err
+
+
+register_backend("reference", sample_level)
+register_backend("unfused", sample_level_unfused)
+
+
 def sample_mfgs(graph: CSCGraph, seeds: jnp.ndarray,
                 fanouts: Sequence[int], salt: jnp.ndarray | int,
-                level_fn=sample_level) -> list[MFG]:
+                level_fn=None, backend: str | None = None) -> list[MFG]:
     """Recursive L-level sampling (eqs. 4–5).
 
     fanouts: (N_L, ..., N_1) — top level first, matching the paper's
     (N_3, N_2, N_1) notation.  Returns MFGs top-level first; a GNN consumes
     them in reverse (layer 1 eats the bottom-most MFG).
 
-    ``level_fn`` lets callers swap in the fused Pallas kernel
-    (repro.kernels.ops.fused_sample_level) for the two-step reference.
+    The per-level kernel is chosen by ``backend`` name (registry above) or
+    by passing ``level_fn`` directly; the default is the ``"reference"``
+    path.  ``backend="fused_pallas"`` swaps in the fused Pallas kernel.
     """
+    if level_fn is not None and backend is not None:
+        raise ValueError("pass either level_fn or backend, not both")
+    if level_fn is None:
+        level_fn = resolve_backend(backend or "reference")
     mfgs = []
     frontier = seeds
     for depth, fanout in enumerate(fanouts):

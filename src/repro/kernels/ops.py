@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.core.graph import CSCGraph
 from repro.core.mfg import MFG
-from repro.core.sampler import build_indptr, relabel
+from repro.core.sampler import build_indptr, register_backend, relabel
 from repro.kernels import fused_sample as _fs
 from repro.kernels import sage_aggregate as _agg
 
@@ -40,6 +40,10 @@ def fused_sample_level(graph: CSCGraph, seeds: jnp.ndarray, fanout: int,
     edges, src_nodes, num_src = relabel(seeds, samples, valid)
     return MFG(dst_nodes=seeds, src_nodes=src_nodes, num_src=num_src,
                edges=edges, edge_mask=valid, indptr=indptr)
+
+
+# resolvable by name through the level-backend registry (repro.core.sampler)
+register_backend("fused_pallas", fused_sample_level)
 
 
 def sage_aggregate(mfg: MFG, h_src: jnp.ndarray, *, tile_s: int = 128,

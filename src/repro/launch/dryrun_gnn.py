@@ -10,6 +10,11 @@ counts (the host run in train_gnn.py uses 4-8 workers), and reports the
 collective schedule of each scheme — the 2L-vs-2 round structure shows up
 directly as all-to-all op counts in the compiled HLO.
 
+The per-worker program is the unified ``repro.pipeline.worker`` step (the
+same one ``Pipeline`` executes); data here is abstract ShapeDtypeStructs,
+so the full ``Pipeline.build`` (which partitions a concrete graph) is
+bypassed and the step is bound to the mesh directly.
+
   PYTHONPATH=src python -m repro.launch.dryrun_gnn --workers 256 \
       --scheme hybrid
 """
@@ -36,8 +41,11 @@ def main():
     from jax.sharding import PartitionSpec as P
 
     from repro import roofline
+    from repro.compat import make_mesh, shard_map
     from repro.core import dist
     from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+    from repro.pipeline import PipelineSpec
+    from repro.pipeline.worker import make_worker_step
 
     W = args.workers
     n_max = args.nodes_per_worker
@@ -69,34 +77,36 @@ def main():
     def loss_fn(p, mfgs, h_src, labels, valid):
         return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
 
-    mesh = jax.make_mesh((W,), (dist.AXIS,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((W,), (dist.AXIS,))
 
     schemes = ["vanilla", "hybrid"] if args.scheme == "both" \
         else [args.scheme]
     for scheme in schemes:
+        spec = PipelineSpec.from_scheme(scheme, num_parts=W,
+                                        fanouts=cfg.fanouts)
         counter = dist.RoundCounter()
         # hybrid needs concrete replicated topology at trace time only for
         # shapes — pass structs through a wrapper that treats it as arg
         def worker(params, shards1, seeds1, graph_indptr, graph_indices):
             g = CSCGraph(indptr=graph_indptr, indices=graph_indices)
-            step = dist.make_worker_step(
-                graph_replicated=g if scheme == "hybrid" else None,
+            step = make_worker_step(
                 offsets=offsets, num_parts=W, fanouts=cfg.fanouts,
-                scheme=scheme, loss_fn=loss_fn, counter=counter)
+                loss_fn=loss_fn, scheme=spec.plan.scheme,
+                graph_replicated=g if spec.plan.scheme == "hybrid" else None,
+                backend=spec.sampler.backend, counter=counter)
             return step(params, shards1, seeds1, jnp.uint32(1))
 
         def wrapper(params, shards_, seeds_, gi, gx):
             sq = lambda a: a[0]
-            loss, grads = worker(params, jax.tree.map(sq, shards_),
-                                 seeds_[0], gi, gx)
+            loss, grads, _metrics = worker(params, jax.tree.map(sq, shards_),
+                                           seeds_[0], gi, gx)
             return loss, grads
 
-        smap = jax.shard_map(
+        smap = shard_map(
             wrapper, mesh=mesh,
             in_specs=(P(), P(dist.AXIS), P(dist.AXIS), P(), P()),
             out_specs=(P(), P()),
-            check_vma=False)
+            check=False)
 
         with mesh:
             lowered = jax.jit(smap).lower(params, shards, seeds,
@@ -108,7 +118,7 @@ def main():
             "workload": "gnn-distributed-train",
             "scheme": scheme, "workers": W,
             "rounds_traced": counter.rounds,
-            "expected_rounds": 2 if scheme == "hybrid" else 2 * cfg.num_layers,
+            "expected_rounds": spec.expected_rounds,
             "collective_counts": coll["counts"],
             "collective_bytes_per_device": coll["total_bytes"],
             "peak_estimate_bytes": (mem.argument_size_in_bytes

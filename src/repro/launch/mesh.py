@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False, model_parallel: int = 16):
     """16x16 (256 chips) per pod; (2,16,16) across 2 pods = 512 chips.
@@ -18,17 +20,15 @@ def make_production_mesh(*, multi_pod: bool = False, model_parallel: int = 16):
     dp = 256 // model_parallel
     shape = (2, dp, model_parallel) if multi_pod else (dp, model_parallel)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Whatever devices exist on this host (examples / subprocess tests)."""
     n = len(jax.devices())
     assert n % model_parallel == 0
-    return jax.make_mesh((n // model_parallel, model_parallel),
-                         ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model_parallel, model_parallel),
+                     ("data", "model"))
 
 
 # TPU v5e hardware constants for the roofline (per chip)

@@ -1,8 +1,11 @@
-"""Distributed GNN training launcher — the paper's workload, under
-shard_map on real (or host-placeholder) devices.
+"""Distributed GNN training launcher — the paper's workload through the
+``repro.pipeline`` API, under vmap simulation or shard_map on real (or
+host-placeholder) devices.
 
   PYTHONPATH=src python -m repro.launch.train_gnn --devices 8 \
       --scheme hybrid+fused --epochs 3
+  PYTHONPATH=src python -m repro.launch.train_gnn --devices 4 \
+      --scheme hybrid --cache-capacity 4096 --shard-map
 """
 import argparse
 
@@ -13,6 +16,9 @@ def main():
                     help="workers (host placeholder devices on CPU)")
     ap.add_argument("--scheme", default="hybrid+fused",
                     choices=["vanilla", "hybrid", "hybrid+fused"])
+    ap.add_argument("--cache-capacity", type=int, default=0,
+                    help="per-worker hot-remote-feature cache entries "
+                         "(0 = off); composes with any scheme")
     ap.add_argument("--nodes", type=int, default=20000)
     ap.add_argument("--avg-degree", type=int, default=10)
     ap.add_argument("--epochs", type=int, default=3)
@@ -31,92 +37,55 @@ def main():
 
     import jax
     import jax.numpy as jnp
-    import numpy as np
-    from jax.sharding import PartitionSpec as P
 
-    from repro.core import dist
-    from repro.core.partition import (build_layout, build_vanilla,
-                                      edge_cut, partition_graph,
-                                      seeds_per_worker)
     from repro.data.synthetic_graph import make_power_law_graph
     from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
-    from repro.optim import apply_updates, init_opt_state
-    from repro.optim.optimizers import clip_by_global_norm
+    from repro.optim import init_opt_state
+    from repro.pipeline import Pipeline, PipelineSpec
 
-    P_ = args.devices
     ds = make_power_law_graph(args.nodes, args.avg_degree,
                               num_features=100, num_classes=47, seed=0)
     print(f"graph: {ds.graph.num_nodes:,} nodes {ds.graph.num_edges:,} edges")
-    assign = partition_graph(ds.graph, P_, ds.labeled_mask, seed=0)
-    cut = edge_cut(ds.graph, assign)
-    print(f"partitioned into {P_}: edge-cut {cut/ds.graph.num_edges:.1%}")
-    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P_)
-    vplan = build_vanilla(layout)
 
     cfg = GNNConfig(in_dim=100, hidden_dim=256, num_classes=47,
                     num_layers=3, fanouts=(10, 10, 5), dropout=0.0)
-    shards = dist.WorkerShard(features=layout.features, labels=layout.labels,
-                              local_indptr=vplan.local_indptr,
-                              local_indices=vplan.local_indices)
-
-    level_fn = None
-    if args.scheme == "hybrid+fused":
-        from repro.kernels.ops import fused_sample_level
-        level_fn = fused_sample_level
-    else:
-        from repro.core.sampler import sample_level_unfused
-        level_fn = sample_level_unfused
-
-    counter = dist.RoundCounter()
+    spec = PipelineSpec.from_scheme(
+        args.scheme, num_parts=args.devices, fanouts=cfg.fanouts,
+        cache_capacity=args.cache_capacity,
+        executor="shard_map" if args.shard_map else "vmap")
+    pipe = Pipeline.build(ds.graph, ds.features, ds.labels, spec)
+    print(f"partitioned into {args.devices}: "
+          f"edge-cut {pipe.edge_cut_fraction:.1%}")
 
     def loss_fn(p, mfgs, h_src, labels, valid):
         return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
 
-    step = dist.make_worker_step(
-        graph_replicated=(layout.graph if args.scheme.startswith("hybrid")
-                          else None),
-        offsets=layout.offsets, num_parts=P_, fanouts=cfg.fanouts,
-        scheme="hybrid" if args.scheme.startswith("hybrid") else "vanilla",
-        loss_fn=loss_fn, level_fn=level_fn, counter=counter)
+    train_step = pipe.train_step(loss_fn, lr=args.lr, optimizer="adamw",
+                                 grad_clip=1.0)
 
     params = init_gnn_params(jax.random.key(0), cfg)
     opt_state = init_opt_state(params, kind="adamw")
 
-    if args.shard_map:
-        mesh = jax.make_mesh((P_,), (dist.AXIS,),
-                             axis_types=(jax.sharding.AxisType.Auto,))
-        smap = dist.make_shard_map_step(step, mesh, P(), P(dist.AXIS),
-                                        P(dist.AXIS))
-
-        @jax.jit
-        def train_step(params, opt_state, seeds, salt):
-            loss, grads = smap(params, shards, seeds, salt)
-            grads, _ = clip_by_global_norm(grads, 1.0)
-            params, opt_state = apply_updates(params, grads, opt_state,
-                                              kind="adamw", lr=args.lr)
-            return params, opt_state, loss
-    else:
-        @jax.jit
-        def train_step(params, opt_state, seeds, salt):
-            loss, grads = dist.run_stacked(step, params, shards, seeds, salt)
-            grads, _ = clip_by_global_norm(grads, 1.0)
-            params, opt_state = apply_updates(params, grads, opt_state,
-                                              kind="adamw", lr=args.lr)
-            return params, opt_state, loss
-
     import time
-    print(f"scheme={args.scheme}: {counter.rounds or '?'} comm rounds/step "
-          f"(vanilla=2L={2*cfg.num_layers}, hybrid=2)")
     for epoch in range(args.epochs):
         t0 = time.time()
         for s in range(args.steps_per_epoch):
-            seeds = seeds_per_worker(layout, args.batch,
-                                     epoch_salt=epoch * 1000 + s)
-            params, opt_state, loss = train_step(
-                params, opt_state, seeds, jnp.uint32(epoch * 1000 + s))
-        print(f"epoch {epoch}: loss {float(loss):.4f} "
-              f"rounds/step {counter.rounds} "
-              f"time {time.time()-t0:.2f}s")
+            salt = epoch * 1000 + s
+            seeds = pipe.seeds(args.batch, epoch_salt=salt)
+            params, opt_state, loss, metrics = train_step(
+                params, opt_state, seeds, jnp.uint32(salt))
+            if epoch == 0 and s == 0:
+                # the round counter fills at first trace — report it only
+                # once a step has actually traced
+                print(f"scheme={args.scheme}: {pipe.counter.rounds} comm "
+                      f"rounds/step (vanilla=2L={2*cfg.num_layers}, "
+                      f"hybrid=2)")
+        msg = (f"epoch {epoch}: loss {float(loss):.4f} "
+               f"rounds/step {pipe.counter.rounds} "
+               f"time {time.time()-t0:.2f}s")
+        if args.cache_capacity:
+            msg += f" cache-hit {float(metrics['cache_hit_rate']):.1%}"
+        print(msg)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,136 @@
+"""Executor abstraction: how the per-worker program runs.
+
+The seed repo duplicated "vmap simulation vs shard_map mesh" dispatch in
+every launcher; here it is a registry of executors sharing one contract:
+
+    executor.bind(pipeline, step) -> run(params, seeds, salt)
+        -> (loss, grads, metrics)
+
+where ``step`` is a ``repro.pipeline.worker`` step.  Both executors bind
+the pipeline's shards (and cache, when present) so callers only supply
+the per-call arguments.
+
+  * ``"vmap"``      — single-device simulation: vmap over the stacked
+                      worker axis; bit-identical collective semantics.
+  * ``"shard_map"`` — production path on a device mesh (one worker per
+                      device along ``dist.AXIS``).  Requires the process
+                      to expose >= num_parts devices.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.core import dist
+
+
+_EXECUTORS: dict[str, Callable] = {}
+
+
+def register_executor(name: str, factory: Callable, *,
+                      overwrite: bool = False) -> None:
+    """Register an executor factory (``factory() -> executor``)."""
+    if not overwrite and name in _EXECUTORS \
+            and _EXECUTORS[name] is not factory:
+        raise ValueError(f"executor {name!r} already registered")
+    _EXECUTORS[name] = factory
+
+
+def available_executors() -> tuple[str, ...]:
+    return tuple(sorted(_EXECUTORS))
+
+
+def resolve_executor(name: str):
+    try:
+        return _EXECUTORS[name]()
+    except KeyError:
+        raise KeyError(f"unknown executor {name!r}; "
+                       f"available: {available_executors()}") from None
+
+
+class VmapExecutor:
+    """Single-device simulation: vmap over the stacked worker axis."""
+
+    name = "vmap"
+
+    def bind(self, pipeline, step):
+        use_cache = pipeline.cache is not None
+        in_axes = (None, 0, 0, None) + ((0,) if use_cache else ())
+        vstep = jax.vmap(step, in_axes=in_axes, axis_name=dist.AXIS)
+
+        def run(params, seeds, salt):
+            args = (params, pipeline.shards, seeds, salt)
+            if use_cache:
+                args += (pipeline.cache,)
+            loss, grads, metrics = vstep(*args)
+            # pmean makes every worker's copy identical; take worker 0's
+            take0 = lambda x: x[0]
+            return loss[0], jax.tree.map(take0, grads), \
+                jax.tree.map(take0, metrics)
+
+        return run
+
+
+class ShardMapExecutor:
+    """Production path: the same per-worker program under shard_map.
+
+    ``mesh`` defaults to a fresh 1-D mesh of ``num_parts`` devices along
+    ``dist.AXIS`` (pass an existing mesh to embed the worker axis in a
+    larger topology).
+    """
+
+    name = "shard_map"
+
+    def __init__(self, mesh=None):
+        self.mesh = mesh
+
+    def bind(self, pipeline, step):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import make_mesh, shard_map
+
+        num_parts = pipeline.spec.plan.num_parts
+        mesh = self.mesh
+        if mesh is None:
+            if len(jax.devices()) < num_parts:
+                raise RuntimeError(
+                    f"shard_map executor needs >= {num_parts} devices, "
+                    f"found {len(jax.devices())} (set "
+                    f"--xla_force_host_platform_device_count for a CPU "
+                    f"placeholder mesh)")
+            mesh = make_mesh((num_parts,), (dist.AXIS,))
+        use_cache = pipeline.cache is not None
+        squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
+
+        if use_cache:
+            def wrapper(params, shards, seeds, cache, salt):
+                return step(params, squeeze(shards), seeds[0], salt,
+                            squeeze(cache))
+
+            smap = shard_map(
+                wrapper, mesh=mesh,
+                in_specs=(P(), P(dist.AXIS), P(dist.AXIS), P(dist.AXIS),
+                          P()),
+                out_specs=(P(), P(), P()), check=False)
+
+            def run(params, seeds, salt):
+                return smap(params, pipeline.shards, seeds,
+                            pipeline.cache, salt)
+        else:
+            def wrapper(params, shards, seeds, salt):
+                return step(params, squeeze(shards), seeds[0], salt)
+
+            smap = shard_map(
+                wrapper, mesh=mesh,
+                in_specs=(P(), P(dist.AXIS), P(dist.AXIS), P()),
+                out_specs=(P(), P(), P()), check=False)
+
+            def run(params, seeds, salt):
+                return smap(params, pipeline.shards, seeds, salt)
+
+        return run
+
+
+register_executor("vmap", VmapExecutor)
+register_executor("shard_map", ShardMapExecutor)

@@ -1,0 +1,183 @@
+"""``Pipeline`` — the one-call factory for distributed GNN training.
+
+``Pipeline.build(graph, features, labels, spec)`` runs the whole data
+preparation chain — partition -> relabel/layout -> placement plan ->
+worker shards -> feature caches — and returns an object whose
+``train_step`` / ``step_fn`` methods execute the paper's per-worker
+program under the spec'd executor.  See ``repro.pipeline.__init__`` for
+the API overview and examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dist
+from repro.core.graph import CSCGraph
+from repro.pipeline import worker as _worker
+from repro.pipeline.executor import resolve_executor
+from repro.pipeline.specs import PipelineSpec
+
+
+@dataclasses.dataclass
+class Pipeline:
+    """A fully-materialized distributed training pipeline.
+
+    Attributes
+    ----------
+    spec:              the ``PipelineSpec`` this pipeline was built from.
+    layout:            relabeled topology + ownership metadata.
+    shards:            per-worker data (stacked on the worker axis).
+    graph_replicated:  the replicated topology (hybrid scheme), else None.
+    cache:             stacked ``FeatureCache`` when cache_capacity > 0.
+    counter:           trace-time communication-round counter; filled the
+                       first time a step traces.
+    edge_cut_fraction: fraction of edges crossing partitions (computed
+                       lazily on first access).
+    """
+    spec: PipelineSpec
+    layout: "PartitionLayout"                       # noqa: F821
+    shards: dist.WorkerShard
+    graph_replicated: CSCGraph | None
+    cache: "FeatureCache | None"                    # noqa: F821
+    counter: dist.RoundCounter
+    _edge_cut: float | None = None
+
+    # ---------------------------------------------------------------- build
+
+    @classmethod
+    def build(cls, graph: CSCGraph, features, labels,
+              spec: PipelineSpec, *, labeled_mask=None) -> "Pipeline":
+        """Partition ``graph`` and assemble every stage the spec asks for.
+
+        ``labeled_mask`` defaults to ``labels >= 0``.
+        """
+        from repro.core.partition import build_layout, partition_graph
+
+        plan = spec.plan
+        labels = np.asarray(labels)
+        if labeled_mask is None:
+            labeled_mask = labels >= 0
+        assign = partition_graph(graph, plan.num_parts,
+                                 np.asarray(labeled_mask),
+                                 seed=plan.partition_seed,
+                                 slack=plan.node_slack,
+                                 labeled_slack=plan.labeled_slack)
+        layout = build_layout(graph, np.asarray(features), labels, assign,
+                              plan.num_parts)
+        return cls.from_layout(layout, spec)
+
+    @classmethod
+    def from_layout(cls, layout, spec: PipelineSpec) -> "Pipeline":
+        """Assemble a pipeline over an existing ``PartitionLayout``
+        (lets several specs — e.g. scheme ablations — share one
+        partitioning)."""
+        from repro.core.cache import degree_caches
+        from repro.core.partition import build_vanilla
+
+        plan = spec.plan
+        if layout.num_parts != plan.num_parts:
+            raise ValueError(
+                f"layout has {layout.num_parts} parts, spec asks for "
+                f"{plan.num_parts}")
+
+        if plan.scheme == "vanilla":
+            vplan = build_vanilla(layout)
+            local_indptr = vplan.local_indptr
+            local_indices = vplan.local_indices
+            graph_replicated = None
+        else:
+            # hybrid workers never touch the local CSC; keep placeholders
+            # so the shard pytree has a leading worker axis everywhere
+            P = plan.num_parts
+            local_indptr = jnp.zeros((P, 2), jnp.int32)
+            local_indices = jnp.full((P, 1), -1, jnp.int32)
+            graph_replicated = layout.graph
+
+        shards = dist.WorkerShard(features=layout.features,
+                                  labels=layout.labels,
+                                  local_indptr=local_indptr,
+                                  local_indices=local_indices)
+
+        cache = None
+        if plan.cache_capacity > 0:
+            cache = degree_caches(layout, capacity=plan.cache_capacity)
+
+        return cls(spec=spec, layout=layout, shards=shards,
+                   graph_replicated=graph_replicated, cache=cache,
+                   counter=dist.RoundCounter())
+
+    # ------------------------------------------------------------- programs
+
+    def make_step(self, loss_fn):
+        """The raw per-worker program (advanced use; most callers want
+        ``step_fn`` or ``train_step``)."""
+        plan, sampler = self.spec.plan, self.spec.sampler
+        return _worker.make_worker_step(
+            offsets=self.layout.offsets, num_parts=plan.num_parts,
+            fanouts=sampler.fanouts, loss_fn=loss_fn, scheme=plan.scheme,
+            graph_replicated=self.graph_replicated,
+            backend=sampler.backend, counter=self.counter,
+            use_cache=self.cache is not None)
+
+    def step_fn(self, loss_fn, executor=None):
+        """Executor-bound forward/backward:
+        ``fn(params, seeds, salt) -> (loss, grads, metrics)``."""
+        if executor is None:
+            executor = resolve_executor(self.spec.executor)
+        return executor.bind(self, self.make_step(loss_fn))
+
+    def train_step(self, loss_fn, *, lr: float = 1e-3,
+                   optimizer: str = "adamw", grad_clip: float | None = 1.0,
+                   executor=None, jit: bool = True):
+        """Full optimizer-applied train step:
+        ``fn(params, opt_state, seeds, salt)
+            -> (params, opt_state, loss, metrics)``.
+        """
+        from repro.optim import apply_updates
+        from repro.optim.optimizers import clip_by_global_norm
+
+        run = self.step_fn(loss_fn, executor=executor)
+
+        def fn(params, opt_state, seeds, salt):
+            loss, grads, metrics = run(params, seeds, salt)
+            if grad_clip is not None:
+                grads, gnorm = clip_by_global_norm(grads, grad_clip)
+                metrics = dict(metrics, grad_norm=gnorm)
+            params, opt_state = apply_updates(params, grads, opt_state,
+                                              kind=optimizer, lr=lr)
+            return params, opt_state, loss, metrics
+
+        return jax.jit(fn) if jit else fn
+
+    # ------------------------------------------------------------ utilities
+
+    def seeds(self, batch: int, epoch_salt: int) -> jnp.ndarray:
+        """(P, batch) per-worker minibatch seeds drawn from each worker's
+        own labeled nodes (deterministic in ``epoch_salt``)."""
+        from repro.core.partition import seeds_per_worker
+        return seeds_per_worker(self.layout, batch, epoch_salt=epoch_salt)
+
+    @property
+    def edge_cut_fraction(self) -> float:
+        """Fraction of edges crossing partitions (O(E) scan, cached)."""
+        if self._edge_cut is None:
+            from repro.core.partition import edge_cut
+            offsets = np.asarray(self.layout.offsets)
+            assign = (np.searchsorted(
+                offsets, np.arange(self.layout.graph.num_nodes),
+                side="right") - 1)
+            cut = edge_cut(self.layout.graph, assign)
+            self._edge_cut = cut / max(self.layout.graph.num_edges, 1)
+        return self._edge_cut
+
+    @property
+    def expected_rounds(self) -> int:
+        return self.spec.expected_rounds
+
+    @property
+    def num_parts(self) -> int:
+        return self.spec.plan.num_parts

@@ -1,0 +1,121 @@
+"""Declarative configuration for the ``repro.pipeline`` API.
+
+The seed repo conflated three independent axes in one scheme string:
+*where data lives* ("vanilla" vs "hybrid" placement), *which kernel builds
+a sampling level* (reference / unfused / fused Pallas), and *how the
+per-worker program executes* (vmap simulation vs shard_map).  These specs
+pull them apart:
+
+  * ``PlanSpec``     — partitioning & placement (+ optional feature cache);
+  * ``SamplerSpec``  — fanouts + level-backend name (registry lookup);
+  * ``PipelineSpec`` — the pair above + the executor name.
+
+``PipelineSpec.from_scheme`` parses the legacy
+``"vanilla" | "hybrid" | "hybrid+fused"`` strings for callers migrating
+from the old ``dist.make_worker_step`` API.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+SCHEMES = ("vanilla", "hybrid")
+LEGACY_SCHEMES = ("vanilla", "hybrid", "hybrid+fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSpec:
+    """Partitioning & placement plan (paper §3.3 + the §5 cache).
+
+    scheme:         "vanilla" (topology + features partitioned) or
+                    "hybrid" (topology replicated, features partitioned).
+    cache_capacity: per-worker hot-remote-feature cache entries; 0 = off.
+                    The cache composes with EITHER scheme (it is a stage of
+                    the feature fetch, not a fork of the sampler).
+    node_slack / labeled_slack: partitioner balance targets (labeled_slack
+                    defaults to node_slack when None).
+    """
+    num_parts: int
+    scheme: str = "hybrid"
+    cache_capacity: int = 0
+    node_slack: float = 1.05
+    labeled_slack: float | None = None
+    partition_seed: int = 0
+
+    def __post_init__(self):
+        if self.scheme not in SCHEMES:
+            raise ValueError(
+                f"unknown scheme {self.scheme!r}; valid: {SCHEMES} "
+                f"(legacy 'hybrid+fused' = scheme 'hybrid' + backend "
+                f"'fused_pallas'; see PipelineSpec.from_scheme)")
+        if self.num_parts < 1:
+            raise ValueError(f"num_parts must be >= 1, got {self.num_parts}")
+        if self.cache_capacity < 0:
+            raise ValueError("cache_capacity must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec:
+    """Layered-sampling config: fanouts + level-backend registry name.
+
+    fanouts: (N_L, ..., N_1) — top level first (paper notation).
+    backend: name registered with ``repro.core.sampler.register_backend``;
+             built-ins are "reference", "unfused", "fused_pallas".
+    """
+    fanouts: tuple[int, ...]
+    backend: str = "reference"
+
+    def __post_init__(self):
+        fanouts = tuple(int(f) for f in self.fanouts)
+        if not fanouts or any(f < 1 for f in fanouts):
+            raise ValueError(f"fanouts must be positive ints, got {fanouts}")
+        object.__setattr__(self, "fanouts", fanouts)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.fanouts)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    """Everything ``Pipeline.build`` needs: plan + sampler + executor."""
+    plan: PlanSpec
+    sampler: SamplerSpec
+    executor: str = "vmap"           # "vmap" | "shard_map" (registry)
+
+    @property
+    def expected_rounds(self) -> int:
+        """Paper §3.3 accounting: hybrid = 2 (features only); vanilla =
+        2(L-1) sampling rounds + 2 feature rounds = 2L."""
+        if self.plan.scheme == "hybrid":
+            return 2
+        return 2 * self.sampler.num_layers
+
+    @classmethod
+    def from_scheme(cls, scheme: str, *, num_parts: int,
+                    fanouts, cache_capacity: int = 0,
+                    executor: str = "vmap",
+                    fused_backend: str = "fused_pallas",
+                    unfused_backend: str = "unfused",
+                    partition_seed: int = 0) -> "PipelineSpec":
+        """Parse a legacy scheme string into a spec.
+
+          vanilla       -> scheme=vanilla, backend=unfused_backend
+          hybrid        -> scheme=hybrid,  backend=unfused_backend
+          hybrid+fused  -> scheme=hybrid,  backend=fused_backend
+
+        ``fused_backend`` defaults to the Pallas kernel; benchmarks that
+        time the *algorithm* rather than the interpret-mode kernel pass
+        ``fused_backend="reference"``.
+        """
+        if scheme not in LEGACY_SCHEMES:
+            raise ValueError(f"unknown scheme {scheme!r}; "
+                             f"valid: {LEGACY_SCHEMES}")
+        placement = "hybrid" if scheme.startswith("hybrid") else "vanilla"
+        backend = fused_backend if scheme == "hybrid+fused" \
+            else unfused_backend
+        return cls(
+            plan=PlanSpec(num_parts=num_parts, scheme=placement,
+                          cache_capacity=cache_capacity,
+                          partition_seed=partition_seed),
+            sampler=SamplerSpec(fanouts=tuple(fanouts), backend=backend),
+            executor=executor)

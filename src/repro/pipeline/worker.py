@@ -1,0 +1,113 @@
+"""The unified per-worker train-step program.
+
+One builder replaces the seed repo's ``dist.make_worker_step`` /
+``cache.make_cached_worker_step`` fork: placement scheme, level backend,
+and feature cache are independent arguments, and the returned step always
+has the same contract:
+
+    step(params, shard, seeds, salt[, cache])
+        -> (loss, grads, metrics)
+
+with ``loss``/``grads``/``metrics`` already pmean-ed over the worker axis
+(every worker returns identical values).  ``metrics`` is a dict pytree —
+currently ``{"cache_hit_rate": f32}`` (0 when no cache is attached).
+
+The program is written against the named axis ``dist.AXIS`` and runs
+unchanged under ``jax.vmap`` (single-device simulation) or ``shard_map``
+(production mesh) — see ``repro.pipeline.executor``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import dist
+from repro.core.graph import CSCGraph
+from repro.core.sampler import resolve_backend
+
+
+def make_worker_step(*, offsets: jnp.ndarray, num_parts: int,
+                     fanouts: Sequence[int], loss_fn: Callable,
+                     scheme: str = "hybrid",
+                     graph_replicated: CSCGraph | None = None,
+                     backend: str | None = None,
+                     level_fn: Callable | None = None,
+                     counter: dist.RoundCounter | None = None,
+                     use_cache: bool = False,
+                     vanilla_fused: bool | None = None):
+    """Build the per-worker program for any (scheme, backend, cache) combo.
+
+    loss_fn(params, mfgs, h_src, seed_labels, seed_valid) -> scalar loss.
+
+    scheme:  "vanilla" (partitioned topology, 2 rounds per lower level) or
+             "hybrid" (replicated topology, local sampling).
+    backend: level-backend registry name (default "reference");
+             ``level_fn`` passes a kernel directly instead — mutually
+             exclusive with ``backend``.
+    use_cache: when True the returned step takes a trailing
+             ``FeatureCache`` argument, served as a stage of the feature
+             fetch (rows bit-identical either way).
+    vanilla_fused: for the vanilla scheme, whether level construction uses
+             the fused path (True) or pays the DGL-style COO->CSC passes
+             (False).  Defaults to ``backend != "unfused"`` when resolving
+             by name, and to False (the conservative baseline) when a raw
+             ``level_fn`` is supplied.
+    """
+    if scheme not in ("vanilla", "hybrid"):
+        raise ValueError(f"unknown scheme {scheme!r}")
+    if scheme == "hybrid" and graph_replicated is None:
+        raise ValueError("hybrid scheme needs the replicated topology")
+    if backend is not None and level_fn is not None:
+        raise ValueError("pass either backend or level_fn, not both")
+    if level_fn is None:
+        backend = backend or "reference"
+        level_fn = resolve_backend(backend)
+    if vanilla_fused is None:
+        vanilla_fused = backend is not None and backend != "unfused"
+
+    def _body(params, shard: dist.WorkerShard, seeds, salt, cache):
+        if scheme == "hybrid":
+            mfgs = dist.hybrid_sample(graph_replicated, seeds, fanouts,
+                                      salt, level_fn=level_fn)
+        else:
+            mfgs = dist.vanilla_sample(shard, offsets, num_parts, seeds,
+                                       fanouts, salt, counter,
+                                       fused=vanilla_fused)
+
+        src = mfgs[-1].src_nodes
+        if cache is not None:
+            h_src, hits = dist.fetch_features_cached(
+                src, offsets, num_parts, shard.features, cache, counter)
+        else:
+            h_src = dist.fetch_features(src, offsets, num_parts,
+                                        shard.features, counter)
+            hits = jnp.zeros((), jnp.int32)
+
+        me = lax.axis_index(dist.AXIS)
+        local_seed = jnp.clip(seeds - offsets[me], 0,
+                              shard.labels.shape[0] - 1)
+        seed_labels = shard.labels[local_seed]
+        seed_valid = seeds >= 0
+
+        def objective(p):
+            return loss_fn(p, mfgs, h_src, seed_labels, seed_valid)
+
+        loss, grads = jax.value_and_grad(objective)(params)
+        grads = lax.pmean(grads, dist.AXIS)
+        loss = lax.pmean(loss, dist.AXIS)
+        hit_rate = hits / jnp.maximum(jnp.sum(src >= 0), 1)
+        metrics = {"cache_hit_rate": lax.pmean(
+            hit_rate.astype(jnp.float32), dist.AXIS)}
+        return loss, grads, metrics
+
+    if use_cache:
+        def step(params, shard, seeds, salt, cache):
+            return _body(params, shard, seeds, salt, cache)
+    else:
+        def step(params, shard, seeds, salt):
+            return _body(params, shard, seeds, salt, None)
+
+    return step

@@ -11,85 +11,60 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ModelConfig
-from repro.core import dist
-from repro.core.partition import (HybridPlan, PartitionLayout, VanillaPlan,
-                                  seeds_per_worker)
+from repro.core.partition import PartitionLayout
 from repro.models import lm
 from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
 from repro.optim import apply_updates, init_opt_state
 from repro.optim.optimizers import clip_by_global_norm
+from repro.pipeline import Pipeline, PipelineSpec
 
 
 @dataclasses.dataclass
 class GNNTrainer:
     """Distributed sampling-based GNN training (the paper's §4 setup).
 
-    scheme: 'vanilla' | 'hybrid' | 'hybrid+fused'.
-    Runs the per-worker program under vmap (single-device simulation) —
-    launch/train_gnn.py runs the identical program under shard_map.
+    scheme: 'vanilla' | 'hybrid' | 'hybrid+fused' (legacy strings, parsed
+    by ``PipelineSpec.from_scheme``); ``cache_capacity`` attaches the §5
+    feature cache.  Runs the per-worker program under vmap (single-device
+    simulation) — launch/train_gnn.py runs the identical program under
+    shard_map.
     """
     layout: PartitionLayout
     cfg: GNNConfig
     scheme: str = "hybrid+fused"
     lr: float = 0.006            # paper's §4 learning rate
     batch_per_worker: int = 1000 # paper's §4 batch size
+    cache_capacity: int = 0
 
     def __post_init__(self):
-        from repro.core.partition import build_vanilla
-        self.counter = dist.RoundCounter()
-        level_fn = None
-        if self.scheme == "hybrid+fused":
-            from repro.kernels.ops import fused_sample_level
-            level_fn = fused_sample_level
-        else:
-            from repro.core.sampler import sample_level_unfused
-            level_fn = sample_level_unfused
-
-        vplan = build_vanilla(self.layout)
-        self.shards = dist.WorkerShard(
-            features=self.layout.features,
-            labels=self.layout.labels,
-            local_indptr=vplan.local_indptr,
-            local_indices=vplan.local_indices)
+        spec = PipelineSpec.from_scheme(
+            self.scheme, num_parts=self.layout.num_parts,
+            fanouts=self.cfg.fanouts, cache_capacity=self.cache_capacity)
+        self.pipeline = Pipeline.from_layout(self.layout, spec)
+        self.counter = self.pipeline.counter
+        self.shards = self.pipeline.shards
 
         def loss_fn(p, mfgs, h_src, labels, valid):
             return gnn_loss(p, mfgs, h_src, labels, valid, self.cfg)
 
-        self.step_fn = dist.make_worker_step(
-            graph_replicated=(self.layout.graph
-                              if self.scheme.startswith("hybrid") else None),
-            offsets=self.layout.offsets,
-            num_parts=self.layout.num_parts,
-            fanouts=self.cfg.fanouts,
-            scheme="hybrid" if self.scheme.startswith("hybrid") else "vanilla",
-            loss_fn=loss_fn,
-            level_fn=level_fn,
-            counter=self.counter)
+        self._jit_step = self.pipeline.train_step(
+            loss_fn, lr=self.lr, optimizer="adamw", grad_clip=1.0)
 
         key = jax.random.key(0)
         self.params = init_gnn_params(key, self.cfg)
         self.opt_state = init_opt_state(self.params, kind="adamw")
-        self._jit_step = jax.jit(self._train_step)
-
-    def _train_step(self, params, opt_state, seeds, salt):
-        loss, grads = dist.run_stacked(self.step_fn, params, self.shards,
-                                       seeds, salt)
-        grads, gnorm = clip_by_global_norm(grads, 1.0)
-        params, opt_state = apply_updates(params, grads, opt_state,
-                                          kind="adamw", lr=self.lr)
-        return params, opt_state, loss, gnorm
 
     def run_epoch(self, epoch: int, steps_per_epoch: int = 10):
-        losses = []
         t0 = time.perf_counter()
         for s in range(steps_per_epoch):
-            seeds = seeds_per_worker(self.layout, self.batch_per_worker,
-                                     epoch_salt=epoch * 1000 + s)
-            self.params, self.opt_state, loss, gnorm = self._jit_step(
+            seeds = self.pipeline.seeds(self.batch_per_worker,
+                                        epoch_salt=epoch * 1000 + s)
+            self.params, self.opt_state, loss, metrics = self._jit_step(
                 self.params, self.opt_state, seeds,
                 jnp.uint32(epoch * 1000 + s))
         return {"loss": float(loss), "epoch_time": time.perf_counter() - t0,
-                "comm_rounds_per_step": self.counter.rounds}
+                "comm_rounds_per_step": self.counter.rounds,
+                "cache_hit_rate": float(metrics["cache_hit_rate"])}
 
 
 def make_lm_train_step(cfg: ModelConfig, *, lr: float = 3e-4,

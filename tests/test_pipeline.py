@@ -1,0 +1,237 @@
+"""The ``repro.pipeline`` API: level-backend registry equivalence,
+structural round counts, scheme/cache equivalence, spec validation, and
+deprecation hygiene — all driven through ``Pipeline``, not raw ``dist``
+internals."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dist
+from repro.core.partition import build_layout, partition_graph
+from repro.core.sampler import (available_backends, register_backend,
+                                resolve_backend, sample_mfgs)
+from repro.data.synthetic_graph import make_power_law_graph
+from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+from repro.pipeline import (Pipeline, PipelineSpec, PlanSpec, SamplerSpec,
+                            available_executors, resolve_executor)
+
+P_ = 4
+BACKENDS = ("reference", "unfused", "fused_pallas")
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = make_power_law_graph(1500, 7, num_features=12, num_classes=5,
+                              seed=0)
+    assign = partition_graph(ds.graph, P_, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P_)
+    cfg = GNNConfig(in_dim=12, hidden_dim=16, num_classes=5, num_layers=3,
+                    fanouts=(4, 3, 3), dropout=0.0)
+    params = init_gnn_params(jax.random.key(1), cfg)
+    return ds, layout, cfg, params
+
+
+def _spec(scheme="hybrid", backend="unfused", cache=0, fanouts=(4, 3, 3)):
+    return PipelineSpec(
+        plan=PlanSpec(num_parts=P_, scheme=scheme, cache_capacity=cache),
+        sampler=SamplerSpec(fanouts=fanouts, backend=backend))
+
+
+def _loss_fn(cfg):
+    def loss_fn(p, mfgs, h_src, labels, valid):
+        return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
+    return loss_fn
+
+
+# --------------------------------------------------------------------------
+# level-backend registry
+# --------------------------------------------------------------------------
+
+def test_registry_builtin_backends():
+    for name in BACKENDS:
+        assert callable(resolve_backend(name))
+    assert set(BACKENDS) <= set(available_backends())
+
+
+def test_unknown_backend_raises_with_available_list():
+    with pytest.raises(KeyError, match="no-such-backend"):
+        resolve_backend("no-such-backend")
+
+
+def test_backend_equivalence_bit_identical_mfgs(world):
+    """All registered sampling backends emit bit-identical minibatches for
+    the same seeds and salt (paper §4.2 'mathematically equivalent')."""
+    ds, layout, cfg, params = world
+    rng = np.random.default_rng(0)
+    labeled = np.nonzero(np.asarray(layout.labels).reshape(-1) >= 0)[0]
+    seeds = jnp.asarray(rng.integers(0, layout.graph.num_nodes, 32)
+                        .astype(np.int32))
+
+    ref = None
+    for backend in BACKENDS:
+        mfgs = sample_mfgs(layout.graph, seeds, cfg.fanouts, salt=17,
+                           backend=backend)
+        fields = [(m.dst_nodes, m.src_nodes, m.num_src, m.edges,
+                   m.edge_mask, m.indptr) for m in mfgs]
+        if ref is None:
+            ref = (backend, fields)
+            continue
+        for lvl, (a, b) in enumerate(zip(ref[1], fields)):
+            for fa, fb in zip(a, b):
+                np.testing.assert_array_equal(
+                    np.asarray(fa), np.asarray(fb),
+                    err_msg=f"{ref[0]} vs {backend}, level {lvl}")
+
+
+def test_third_party_backend_plugs_in(world):
+    ds, layout, cfg, params = world
+    from repro.core.sampler import sample_level
+
+    calls = []
+
+    def custom_level(graph, seeds, fanout, salt):
+        calls.append(fanout)
+        return sample_level(graph, seeds, fanout, salt)
+
+    register_backend("test_custom", custom_level, overwrite=True)
+    pipe = Pipeline.from_layout(layout, _spec(backend="test_custom"))
+    fn = pipe.step_fn(_loss_fn(cfg))
+    loss, _, _ = fn(params, pipe.seeds(8, 1), jnp.uint32(3))
+    assert calls == [4, 3, 3]
+    assert np.isfinite(float(loss))
+
+
+# --------------------------------------------------------------------------
+# structural round counts (through Pipeline, not raw dist)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme,cache,bound", [
+    ("vanilla", 0, 6),        # 2L, L=3
+    ("hybrid", 0, 2),
+    ("hybrid", 128, 2),       # cache hits stay local -> still <= 2
+])
+def test_pipeline_round_counts(world, scheme, cache, bound):
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec(scheme=scheme, cache=cache))
+    fn = pipe.step_fn(_loss_fn(cfg))
+    fn(params, pipe.seeds(8, 1), jnp.uint32(5))       # trace exactly once
+    if cache:
+        assert pipe.counter.rounds <= bound
+    else:
+        assert pipe.counter.rounds == bound
+    assert pipe.expected_rounds == bound
+
+
+# --------------------------------------------------------------------------
+# scheme / cache / backend equivalence end to end
+# --------------------------------------------------------------------------
+
+def test_pipeline_variants_bit_identical(world):
+    """vanilla, hybrid, hybrid+fused_pallas, and hybrid+cache produce
+    identical losses AND gradients for the same seeds/salt."""
+    ds, layout, cfg, params = world
+    variants = {
+        "vanilla": _spec(scheme="vanilla", backend="unfused"),
+        "hybrid": _spec(scheme="hybrid", backend="unfused"),
+        "hybrid+fused": _spec(scheme="hybrid", backend="fused_pallas"),
+        "hybrid+cache": _spec(scheme="hybrid", cache=128),
+    }
+    out = {}
+    for name, spec in variants.items():
+        pipe = Pipeline.from_layout(layout, spec)
+        fn = pipe.step_fn(_loss_fn(cfg))
+        loss, grads, metrics = fn(params, pipe.seeds(16, 2), jnp.uint32(7))
+        out[name] = (float(loss), grads, metrics)
+
+    ref_loss, ref_grads, _ = out["vanilla"]
+    for name, (loss, grads, _) in out.items():
+        assert loss == ref_loss, name
+        for a, b in zip(jax.tree.leaves(ref_grads), jax.tree.leaves(grads)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+    assert float(out["hybrid+cache"][2]["cache_hit_rate"]) > 0.0
+
+
+def test_train_step_reduces_loss(world):
+    ds, layout, cfg, params = world
+    from repro.optim import init_opt_state
+    pipe = Pipeline.from_layout(layout, _spec(cache=64))
+    train = pipe.train_step(_loss_fn(cfg), lr=0.01)
+    opt = init_opt_state(params)
+    p = params
+    losses = []
+    for s in range(4):
+        p, opt, loss, metrics = train(p, opt, pipe.seeds(16, s),
+                                      jnp.uint32(s))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+    assert "cache_hit_rate" in metrics and "grad_norm" in metrics
+
+
+# --------------------------------------------------------------------------
+# specs + executors
+# --------------------------------------------------------------------------
+
+def test_from_scheme_parses_legacy_strings():
+    spec = PipelineSpec.from_scheme("hybrid+fused", num_parts=4,
+                                    fanouts=(4, 3))
+    assert spec.plan.scheme == "hybrid"
+    assert spec.sampler.backend == "fused_pallas"
+    assert spec.expected_rounds == 2
+
+    spec = PipelineSpec.from_scheme("vanilla", num_parts=4, fanouts=(4, 3))
+    assert spec.plan.scheme == "vanilla"
+    assert spec.expected_rounds == 4      # 2L, L=2
+
+    with pytest.raises(ValueError, match="unknown scheme"):
+        PipelineSpec.from_scheme("metis", num_parts=4, fanouts=(4,))
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        PlanSpec(num_parts=4, scheme="hybrid+fused")   # legacy string
+    with pytest.raises(ValueError):
+        PlanSpec(num_parts=0)
+    with pytest.raises(ValueError):
+        PlanSpec(num_parts=4, cache_capacity=-1)
+    with pytest.raises(ValueError):
+        SamplerSpec(fanouts=())
+    with pytest.raises(ValueError):
+        SamplerSpec(fanouts=(4, 0))
+
+
+def test_executor_registry():
+    assert {"vmap", "shard_map"} <= set(available_executors())
+    assert resolve_executor("vmap") is not None
+    with pytest.raises(KeyError, match="warp-drive"):
+        resolve_executor("warp-drive")
+
+
+# --------------------------------------------------------------------------
+# deprecation hygiene
+# --------------------------------------------------------------------------
+
+def test_deprecated_shims_warn_and_delegate(world):
+    ds, layout, cfg, params = world
+    from repro.core.cache import build_degree_caches
+    from repro.core.partition import seeds_per_worker
+
+    with pytest.warns(DeprecationWarning, match="repro.pipeline"):
+        step = dist.make_worker_step(
+            graph_replicated=layout.graph, offsets=layout.offsets,
+            num_parts=P_, fanouts=cfg.fanouts, scheme="hybrid",
+            loss_fn=_loss_fn(cfg))
+
+    with pytest.warns(DeprecationWarning, match="repro.pipeline"):
+        cache = build_degree_caches(layout, capacity=32)
+    assert cache.ids.shape == (P_, 32)    # stacked per-worker caches
+
+    # the shim's numbers match the pipeline's
+    pipe = Pipeline.from_layout(layout, _spec())
+    seeds = seeds_per_worker(layout, 16, epoch_salt=2)
+    loss_old, _ = dist.run_stacked(step, params, pipe.shards, seeds,
+                                   jnp.uint32(7))
+    loss_new, _, _ = pipe.step_fn(_loss_fn(cfg))(params, seeds,
+                                                 jnp.uint32(7))
+    assert float(loss_old) == float(loss_new)
