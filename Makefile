@@ -2,10 +2,14 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench dev-install
+.PHONY: test bench-smoke bench dev-install docs-check
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+# docs must run: executes README/docs code blocks + checks intra-repo links
+docs-check:
+	$(PYTHON) tools/check_docs.py
 
 # quick benchmark sanity (one figure, minutes not hours)
 bench-smoke:

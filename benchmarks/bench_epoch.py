@@ -53,11 +53,15 @@ def run(ds, P, batch=256, steps=3):
             jax.block_until_ready(jstep(params, seeds, jnp.uint32(s)))
         dt = (time.perf_counter() - t0) / steps
 
-        emit(f"fig6/P{P}/{scheme}/step_time_us", dt * 1e6, "")
+        # label every row with the executor + prefetch depth that produced
+        # it, so A/B runs against other configs stay unambiguous
+        label = (f"executor={spec.executor} "
+                 f"prefetch={spec.prefetch.depth}")
+        emit(f"fig6/P{P}/{scheme}/step_time_us", dt * 1e6, label)
         emit(f"fig6/P{P}/{scheme}/comm_rounds", pipe.counter.rounds,
-             "per-step")
+             f"per-step {label}")
         emit(f"fig6/P{P}/{scheme}/comm_bytes",
-             sum(pipe.counter.bytes_per_round), "per-step")
+             sum(pipe.counter.bytes_per_round), f"per-step {label}")
 
 
 def main() -> None:

@@ -37,16 +37,26 @@ def load(dir_):
     return recs
 
 
+def exec_label(r):
+    """Which executor / prefetch depth produced a record (A/B clarity).
+
+    Old records predate the fields; show "-" rather than guessing.
+    """
+    ex = r.get("executor", "-")
+    pf = r.get("prefetch_depth", "-")
+    return f"{ex}/pf{pf}"
+
+
 def dryrun_table(recs, mesh):
-    rows = ["| arch | shape | status | per-dev peak mem | collectives "
-            "(AR/AG/RS/A2A/CP) | compile |",
-            "|---|---|---|---|---|---|"]
+    rows = ["| arch | shape | exec/prefetch | status | per-dev peak mem "
+            "| collectives (AR/AG/RS/A2A/CP) | compile |",
+            "|---|---|---|---|---|---|---|"]
     for r in recs:
         if r["mesh"] != mesh:
             continue
         if r["status"] == "skipped":
-            rows.append(f"| {r['arch']} | {r['shape']} | SKIP "
-                        f"({r['reason'][:42]}…) | - | - | - |")
+            rows.append(f"| {r['arch']} | {r['shape']} | {exec_label(r)} "
+                        f"| SKIP ({r['reason'][:42]}…) | - | - | - |")
             continue
         mem = r.get("memory", {})
         cs = r.get("collective_schedule_counts", {})
@@ -54,16 +64,17 @@ def dryrun_table(recs, mesh):
                         ("all-reduce", "all-gather", "reduce-scatter",
                          "all-to-all", "collective-permute"))
         rows.append(
-            f"| {r['arch']} | {r['shape']} | {r['status']} "
+            f"| {r['arch']} | {r['shape']} | {exec_label(r)} "
+            f"| {r['status']} "
             f"| {fmt_bytes(mem.get('peak_estimate_bytes'))} "
             f"| {coll} | {r.get('compile_s', '-')}s |")
     return "\n".join(rows)
 
 
 def roofline_table(recs, mesh="pod"):
-    rows = ["| arch | shape | t_compute | t_memory (adj) | t_collective "
-            "| dominant | MODEL/HLO flops |",
-            "|---|---|---|---|---|---|---|"]
+    rows = ["| arch | shape | exec/prefetch | t_compute | t_memory (adj) "
+            "| t_collective | dominant | MODEL/HLO flops |",
+            "|---|---|---|---|---|---|---|---|"]
     for r in recs:
         if r["mesh"] != mesh or r["status"] != "ok" or "roofline" not in r:
             continue
@@ -71,7 +82,8 @@ def roofline_table(recs, mesh="pod"):
         adj = rf.get("t_memory_adjusted_s")
         adj_s = f" ({fmt_s(adj)})" if adj is not None else ""
         rows.append(
-            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['t_compute_s'])} "
+            f"| {r['arch']} | {r['shape']} | {exec_label(r)} "
+            f"| {fmt_s(rf['t_compute_s'])} "
             f"| {fmt_s(rf['t_memory_s'])}{adj_s} "
             f"| {fmt_s(rf['t_collective_s'])} "
             f"| **{rf['dominant']}** "

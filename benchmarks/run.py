@@ -6,13 +6,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_sampling — Fig. 5 fused vs two-step sampling sweep + train step
   * bench_epoch    — Fig. 6 vanilla / hybrid / hybrid+fused epoch times
   * bench_kernels  — §3.2 memory-movement model + level-path timing
+  * bench_prefetch — double-buffered prefetch overlap (steps/s at depth
+                     0/1/2 per scheme)
 """
 import sys
 
 
 def main() -> None:
     from benchmarks import (bench_cache, bench_epoch, bench_kernels,
-                            bench_sampling, bench_storage, bench_table1)
+                            bench_prefetch, bench_sampling, bench_storage,
+                            bench_table1)
     mods = {
         "table1": bench_table1,
         "storage": bench_storage,
@@ -20,6 +23,7 @@ def main() -> None:
         "epoch": bench_epoch,
         "kernels": bench_kernels,
         "cache": bench_cache,
+        "prefetch": bench_prefetch,
     }
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -17,6 +17,11 @@ Communication schemes (paper's accounting):
 
 Every ``exchange`` call increments a trace-time round counter so tests can
 assert the 2L -> 2 reduction structurally.
+
+These primitives are composed into the per-step program by
+``repro.pipeline.worker`` (fused) and ``repro.pipeline.prefetch`` (split
+at the prefetch boundary for double-buffered execution); see
+``docs/architecture.md`` for the data-flow walkthrough.
 """
 from __future__ import annotations
 
@@ -38,13 +43,33 @@ AXIS = "data"
 
 
 class RoundCounter:
-    """Counts communication rounds at trace time (program structure)."""
+    """Counts communication rounds at *trace* time (program structure).
+
+    Every ``exchange`` in a traced step ticks the counter once, so after
+    one trace ``rounds`` is the per-step round count — the quantity the
+    paper's 2L -> 2 claim is about — independent of how many steps run.
+
+    Attributes
+    ----------
+    rounds : int
+        all_to_all rounds traced so far.
+    bytes_per_round : list[int]
+        Buffer capacity (bytes) of each round — *capacity*, not utilized
+        bytes; padding slots count.
+
+    Examples
+    --------
+    >>> c = RoundCounter()
+    >>> c.rounds
+    0
+    """
 
     def __init__(self):
         self.rounds = 0
         self.bytes_per_round: list[int] = []
 
     def tick(self, buf) -> None:
+        """Record one round carrying the pytree ``buf``."""
         self.rounds += 1
         self.bytes_per_round.append(
             sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(buf)))
@@ -53,9 +78,25 @@ class RoundCounter:
 def exchange(buf: jnp.ndarray, counter: RoundCounter | None) -> jnp.ndarray:
     """One all_to_all communication round over the worker axis.
 
-    Per-worker ``buf`` has shape (P, cap, ...): row q is the payload destined
-    for worker q.  Returns the same layout where row q is the payload
-    *received from* worker q.
+    Parameters
+    ----------
+    buf : jnp.ndarray
+        Per-worker buffer of shape (P, cap, ...): row q is the payload
+        destined for worker q.
+    counter : RoundCounter or None
+        Ticked at trace time when given.
+
+    Returns
+    -------
+    jnp.ndarray
+        Same layout where row q is the payload *received from* worker q.
+
+    Examples
+    --------
+    Under vmap simulation with P=2 workers, row exchange is a transpose
+    of the stacked (P, P, cap) buffer::
+
+        out = jax.vmap(lambda b: exchange(b, None), axis_name=AXIS)(bufs)
     """
     if counter is not None:
         counter.tick(buf)
@@ -67,14 +108,50 @@ def exchange(buf: jnp.ndarray, counter: RoundCounter | None) -> jnp.ndarray:
 # --------------------------------------------------------------------------
 
 def owner_of(offsets: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Owning worker of each (relabeled, contiguously-owned) node id.
+
+    Parameters
+    ----------
+    offsets : jnp.ndarray
+        (P + 1,) partition boundaries from the layout.
+    ids : jnp.ndarray
+        Global node ids (any shape).
+
+    Returns
+    -------
+    jnp.ndarray
+        int32 worker indices, same shape as ``ids``.
+
+    Examples
+    --------
+    >>> import jax.numpy as jnp
+    >>> list(owner_of(jnp.array([0, 3, 6]), jnp.array([0, 2, 3, 5])))
+    [Array(0, dtype=int32), Array(0, dtype=int32), Array(1, dtype=int32), Array(1, dtype=int32)]
+    """
     return (jnp.searchsorted(offsets, ids, side="right") - 1).astype(jnp.int32)
 
 
 def pack_by_owner(ids: jnp.ndarray, owner: jnp.ndarray, num_parts: int):
     """Group ``ids`` into per-peer request buffers of static capacity N.
 
-    Returns (buf (P, N) int32 padded -1, owner_idx (N,), slot_idx (N,)) such
-    that element i of ``ids`` sits at buf[owner_idx[i], slot_idx[i]].
+    The inverse mapping is kept so replies can be scattered back to the
+    original positions — the pattern every communication round uses.
+
+    Parameters
+    ----------
+    ids : jnp.ndarray
+        (N,) node ids; -1 marks padding (dropped from every buffer).
+    owner : jnp.ndarray
+        (N,) owning worker per id (``owner_of``).
+    num_parts : int
+        Number of workers P.
+
+    Returns
+    -------
+    (buf, owner_idx, slot_idx)
+        ``buf`` (P, N) int32 padded -1; element i of ``ids`` sits at
+        ``buf[owner_idx[i], slot_idx[i]]`` so a reply indexed the same
+        way restores the original order.
     """
     N = ids.shape[0]
     key = jnp.where(ids >= 0, owner, num_parts)
@@ -168,7 +245,27 @@ class WorkerShard:
 def hybrid_sample(graph: CSCGraph, seeds: jnp.ndarray,
                   fanouts: Sequence[int], salt,
                   level_fn=sample_level) -> list[MFG]:
-    """Topology replicated -> sampling is entirely local (0 rounds)."""
+    """Multi-level sampling under the hybrid scheme: topology replicated,
+    so sampling is entirely local (0 communication rounds).
+
+    Parameters
+    ----------
+    graph : CSCGraph
+        The replicated topology.
+    seeds : jnp.ndarray
+        (batch,) seed node ids (-1 padding allowed).
+    fanouts : Sequence[int]
+        Per-level fanouts, top level first.
+    salt
+        uint32 sampling salt (the deterministic hash stream).
+    level_fn : Callable, optional
+        Level backend (see ``repro.core.sampler.resolve_backend``).
+
+    Returns
+    -------
+    list[MFG]
+        One message-flow graph per level, top first.
+    """
     return sample_mfgs(graph, seeds, fanouts, salt, level_fn=level_fn)
 
 
@@ -177,12 +274,33 @@ def vanilla_sample(shard: WorkerShard, offsets: jnp.ndarray,
                    fanouts: Sequence[int], salt,
                    counter: RoundCounter | None,
                    fused: bool = False) -> list[MFG]:
-    """Topology partitioned -> 2 rounds per level below the top (Fig. 3).
+    """Multi-level sampling under the vanilla scheme: topology
+    partitioned -> 2 rounds per level below the top (Fig. 3).
 
-    fused=False additionally pays the DGL-style COO->CSC conversion per
-    level (paper Fig. 6 'vanilla' scenario); fused=True composes the
-    partitioned protocol with fused level construction (an ablation the
-    paper doesn't run but our harness can).
+    Each lower level packs its frontier by owner (``pack_by_owner``),
+    ``exchange``s requests, samples on the owning worker
+    (``sample_neighbors_local``), and ``exchange``s replies.  Draw
+    semantics are identical to ``hybrid_sample`` — the schemes produce
+    bit-identical minibatches (paper §4.2).
+
+    Parameters
+    ----------
+    shard, offsets, num_parts
+        Per-worker data + partition boundaries.
+    seeds, fanouts, salt
+        As in ``hybrid_sample``.
+    counter : RoundCounter or None
+        Ticked once per ``exchange`` at trace time.
+    fused : bool, default False
+        False additionally pays the DGL-style COO->CSC conversion per
+        level (paper Fig. 6 'vanilla' scenario); True composes the
+        partitioned protocol with fused level construction (an ablation
+        the paper doesn't run but our harness can).
+
+    Returns
+    -------
+    list[MFG]
+        One message-flow graph per level, top first.
     """
     me = lax.axis_index(AXIS)
     my_offset = offsets[me]
@@ -232,11 +350,26 @@ def fetch_features(src_nodes: jnp.ndarray, offsets: jnp.ndarray,
                    cache=None) -> jnp.ndarray:
     """The 2 feature rounds shared by both schemes (ids out, rows back).
 
-    ``cache`` (an optional ``repro.core.cache.FeatureCache``) makes hot
-    remote features a first-class stage of the fetch: hits are served
-    locally and only misses ride the all_to_all.  Rows are bit-identical
-    with or without a cache; use ``fetch_features_cached`` to also get the
-    hit count.
+    Parameters
+    ----------
+    src_nodes : jnp.ndarray
+        (N,) global ids to fetch (-1 padding yields zero rows).
+    offsets, num_parts
+        Partition boundaries / worker count.
+    features_local : jnp.ndarray
+        (n_local_max, D) this worker's feature shard.
+    counter : RoundCounter or None
+        Ticked twice (id round + row round) at trace time.
+    cache : repro.core.cache.FeatureCache, optional
+        Makes hot remote features a first-class stage of the fetch: hits
+        are served locally and only misses ride the all_to_all.  Rows are
+        bit-identical with or without a cache; use
+        ``fetch_features_cached`` to also get the hit count.
+
+    Returns
+    -------
+    jnp.ndarray
+        (N, D) feature rows aligned with ``src_nodes``.
     """
     if cache is not None:
         h, _ = fetch_features_cached(src_nodes, offsets, num_parts,

@@ -117,6 +117,7 @@ def main():
         rec = {
             "workload": "gnn-distributed-train",
             "scheme": scheme, "workers": W,
+            "executor": "shard_map", "prefetch_depth": 0,
             "rounds_traced": counter.rounds,
             "expected_rounds": spec.expected_rounds,
             "collective_counts": coll["counts"],

@@ -5,7 +5,7 @@ host-placeholder) devices.
   PYTHONPATH=src python -m repro.launch.train_gnn --devices 8 \
       --scheme hybrid+fused --epochs 3
   PYTHONPATH=src python -m repro.launch.train_gnn --devices 4 \
-      --scheme hybrid --cache-capacity 4096 --shard-map
+      --scheme hybrid --cache-capacity 4096 --shard-map --prefetch-depth 1
 """
 import argparse
 
@@ -19,6 +19,11 @@ def main():
     ap.add_argument("--cache-capacity", type=int, default=0,
                     help="per-worker hot-remote-feature cache entries "
                          "(0 = off); composes with any scheme")
+    ap.add_argument("--prefetch-depth", type=int, default=0,
+                    help="double-buffered prefetch depth: overlap step "
+                         "k's sampling/feature all_to_all with step k-1's "
+                         "compute (0 = synchronous; results are "
+                         "bit-identical at any depth)")
     ap.add_argument("--nodes", type=int, default=20000)
     ap.add_argument("--avg-degree", type=int, default=10)
     ap.add_argument("--epochs", type=int, default=3)
@@ -36,7 +41,6 @@ def main():
             f"--xla_force_host_platform_device_count={args.devices}")
 
     import jax
-    import jax.numpy as jnp
 
     from repro.data.synthetic_graph import make_power_law_graph
     from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
@@ -52,7 +56,8 @@ def main():
     spec = PipelineSpec.from_scheme(
         args.scheme, num_parts=args.devices, fanouts=cfg.fanouts,
         cache_capacity=args.cache_capacity,
-        executor="shard_map" if args.shard_map else "vmap")
+        executor="shard_map" if args.shard_map else "vmap",
+        prefetch_depth=args.prefetch_depth)
     pipe = Pipeline.build(ds.graph, ds.features, ds.labels, spec)
     print(f"partitioned into {args.devices}: "
           f"edge-cut {pipe.edge_cut_fraction:.1%}")
@@ -60,8 +65,8 @@ def main():
     def loss_fn(p, mfgs, h_src, labels, valid):
         return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
 
-    train_step = pipe.train_step(loss_fn, lr=args.lr, optimizer="adamw",
-                                 grad_clip=1.0)
+    driver = pipe.train_driver(loss_fn, batch=args.batch, lr=args.lr,
+                               optimizer="adamw", grad_clip=1.0)
 
     params = init_gnn_params(jax.random.key(0), cfg)
     opt_state = init_opt_state(params, kind="adamw")
@@ -70,16 +75,16 @@ def main():
     for epoch in range(args.epochs):
         t0 = time.time()
         for s in range(args.steps_per_epoch):
-            salt = epoch * 1000 + s
-            seeds = pipe.seeds(args.batch, epoch_salt=salt)
-            params, opt_state, loss, metrics = train_step(
-                params, opt_state, seeds, jnp.uint32(salt))
+            params, opt_state, loss, metrics = driver.step(params,
+                                                           opt_state)
             if epoch == 0 and s == 0:
                 # the round counter fills at first trace — report it only
                 # once a step has actually traced
-                print(f"scheme={args.scheme}: {pipe.counter.rounds} comm "
-                      f"rounds/step (vanilla=2L={2*cfg.num_layers}, "
-                      f"hybrid=2)")
+                print(f"scheme={args.scheme} executor={spec.executor} "
+                      f"prefetch={args.prefetch_depth}: "
+                      f"{pipe.counter.rounds} comm rounds/step "
+                      f"(vanilla=2L={2*cfg.num_layers}, hybrid=2)")
+        jax.block_until_ready(loss)
         msg = (f"epoch {epoch}: loss {float(loss):.4f} "
                f"rounds/step {pipe.counter.rounds} "
                f"time {time.time()-t0:.2f}s")

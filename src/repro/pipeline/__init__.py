@@ -6,7 +6,7 @@ Pipeline API
 
 The paper's claim (FastSample, arXiv 2311.17847) is that the partitioning
 scheme and the sampling kernel are *synergistic* yet independent choices.
-This package makes that the shape of the code: four orthogonal components,
+This package makes that the shape of the code: five orthogonal components,
 each swappable without touching the others.
 
   ``PlanSpec``      where data lives: "vanilla" (topology + features
@@ -19,35 +19,45 @@ each swappable without touching the others.
                     ``repro.core.sampler`` ("reference", "unfused",
                     "fused_pallas", or anything third parties register
                     with ``register_backend``).
-  executor          how the per-worker program runs: "vmap"
+  executor          how the per-worker program runs, resolved through the
+                    registry in ``repro.pipeline.executor``: "vmap"
                     (single-device simulation, bit-identical collective
-                    semantics) or "shard_map" (device mesh) — see
-                    ``repro.pipeline.executor``.
+                    semantics) or "shard_map" (device mesh).  Executors
+                    also implement the double-buffered prefetch binding.
+  ``PrefetchSpec``  how far minibatch *preparation* (sampling +
+                    pack_by_owner + feature all_to_all / cache lookup)
+                    runs ahead of model compute.  ``depth=0`` is the
+                    synchronous path (driver registry name "sync");
+                    ``depth>=1`` double-buffers ("double_buffer") —
+                    bit-identical results either way, see
+                    ``repro.pipeline.prefetch``.
   ``Pipeline``      the factory tying them together:
                     partition -> layout -> plan -> shards -> caches in
                     one ``build`` call.
 
-Example — the paper's hybrid+fused scenario with a 4096-entry cache::
+Example — the paper's hybrid+fused scenario with a 4096-entry cache and
+depth-1 prefetch::
 
-    from repro.pipeline import Pipeline, PipelineSpec, PlanSpec, SamplerSpec
+    from repro.pipeline import (Pipeline, PipelineSpec, PlanSpec,
+                                PrefetchSpec, SamplerSpec)
 
     spec = PipelineSpec(
         plan=PlanSpec(num_parts=8, scheme="hybrid", cache_capacity=4096),
         sampler=SamplerSpec(fanouts=(15, 10, 5), backend="fused_pallas"),
-        executor="vmap")
+        executor="vmap", prefetch=PrefetchSpec(depth=1))
     pipe = Pipeline.build(graph, features, labels, spec)
 
-    train = pipe.train_step(loss_fn, lr=6e-3)        # jitted
-    for s in range(steps):
-        seeds = pipe.seeds(batch=1024, epoch_salt=s)
-        params, opt_state, loss, metrics = train(params, opt_state,
-                                                 seeds, jnp.uint32(s))
+    driver = pipe.train_driver(loss_fn, lr=6e-3, batch=1024)
+    for k in range(steps):
+        params, opt_state, loss, metrics = driver.step(params, opt_state)
     # pipe.counter.rounds  -> communication rounds traced per step
     # metrics["cache_hit_rate"] -> fraction of features served locally
 
-Legacy scheme strings parse via ``PipelineSpec.from_scheme("hybrid+fused",
-num_parts=8, fanouts=(15, 10, 5))``.  Scheme ablations can share one
-partitioning through ``Pipeline.from_layout(layout, spec)``.
+``Pipeline.train_step`` remains the raw synchronous per-step function for
+callers that manage their own seeds.  Legacy scheme strings parse via
+``PipelineSpec.from_scheme("hybrid+fused", num_parts=8,
+fanouts=(15, 10, 5))``.  Scheme ablations can share one partitioning
+through ``Pipeline.from_layout(layout, spec)``.
 
 Migration from the seed API
 ---------------------------
@@ -62,10 +72,18 @@ from repro.pipeline.executor import (ShardMapExecutor, VmapExecutor,
                                      available_executors, register_executor,
                                      resolve_executor)
 from repro.pipeline.pipeline import Pipeline
-from repro.pipeline.specs import PipelineSpec, PlanSpec, SamplerSpec
+from repro.pipeline.prefetch import (DoubleBufferDriver, PreparedBatch,
+                                     SeedStream, SyncDriver,
+                                     available_prefetchers,
+                                     register_prefetcher,
+                                     resolve_prefetcher)
+from repro.pipeline.specs import (PipelineSpec, PlanSpec, PrefetchSpec,
+                                  SamplerSpec)
 
 __all__ = [
-    "Pipeline", "PipelineSpec", "PlanSpec", "SamplerSpec",
+    "Pipeline", "PipelineSpec", "PlanSpec", "SamplerSpec", "PrefetchSpec",
     "VmapExecutor", "ShardMapExecutor",
     "register_executor", "resolve_executor", "available_executors",
+    "PreparedBatch", "SeedStream", "SyncDriver", "DoubleBufferDriver",
+    "register_prefetcher", "resolve_prefetcher", "available_prefetchers",
 ]

@@ -15,6 +15,22 @@ the per-call arguments.
   * ``"shard_map"`` — production path on a device mesh (one worker per
                       device along ``dist.AXIS``).  Requires the process
                       to expose >= num_parts devices.
+
+Executors additionally implement ``bind_prefetch`` — the double-buffered
+execution mode behind ``repro.pipeline.prefetch.DoubleBufferDriver``.  It
+binds the *prepare* / *consume* halves of the step program and returns a
+runner whose ``step`` overlaps step *k*'s prepare with step *k-1*'s
+consume:
+
+  * ``VmapExecutor``     keeps prepare and consume as two separate jitted
+    programs and relies on JAX's async dispatch — the next prepare is
+    enqueued on the device stream *before* the consume's results are
+    blocked on, so no host-side ``block_until_ready`` sits between them.
+  * ``ShardMapExecutor`` fuses consume(k-1) + update + prepare(k) into ONE
+    jitted program whose prepared-batch FIFO argument is donated
+    (``donate_argnums``): XLA reuses the rotation's buffers as true double
+    buffers and its scheduler can overlap the prepare's all_to_all traffic
+    with the consume's compute.
 """
 from __future__ import annotations
 
@@ -30,7 +46,22 @@ _EXECUTORS: dict[str, Callable] = {}
 
 def register_executor(name: str, factory: Callable, *,
                       overwrite: bool = False) -> None:
-    """Register an executor factory (``factory() -> executor``)."""
+    """Register an executor factory under ``name``.
+
+    Parameters
+    ----------
+    name : str
+        Registry key, e.g. ``"vmap"``.
+    factory : Callable
+        Zero-argument callable returning an executor (an object with a
+        ``bind(pipeline, step)`` method, optionally ``bind_prefetch``).
+    overwrite : bool, default False
+        Allow replacing an existing entry.
+
+    Examples
+    --------
+    >>> register_executor("vmap", VmapExecutor)   # idempotent re-register
+    """
     if not overwrite and name in _EXECUTORS \
             and _EXECUTORS[name] is not factory:
         raise ValueError(f"executor {name!r} already registered")
@@ -38,10 +69,26 @@ def register_executor(name: str, factory: Callable, *,
 
 
 def available_executors() -> tuple[str, ...]:
+    """Sorted names of registered executors.
+
+    Examples
+    --------
+    >>> set(available_executors()) >= {"shard_map", "vmap"}
+    True
+    """
     return tuple(sorted(_EXECUTORS))
 
 
 def resolve_executor(name: str):
+    """Instantiate the executor registered under ``name``.
+
+    Raises ``KeyError`` (listing the available names) when unknown.
+
+    Examples
+    --------
+    >>> resolve_executor("vmap").name
+    'vmap'
+    """
     try:
         return _EXECUTORS[name]()
     except KeyError:
@@ -49,12 +96,64 @@ def resolve_executor(name: str):
                        f"available: {available_executors()}") from None
 
 
+class _AsyncDispatchRunner:
+    """Prefetch runner for ``VmapExecutor``: two jitted halves + JAX async
+    dispatch.  ``step`` enqueues the next prepare *before* consuming the
+    oldest queued batch, so on an async backend the two execute
+    concurrently without any host-side synchronisation."""
+
+    def __init__(self, prepare_j, consume_j):
+        self._prep = prepare_j
+        self._cons = consume_j
+
+    def prepare(self, seeds, salt):
+        """Dispatch one prepare (used by the driver to fill the queue)."""
+        return self._prep(seeds, salt)
+
+    def step(self, params, opt_state, queue, seeds_next, salt_next):
+        nxt = self._prep(seeds_next, salt_next)       # dispatched async ...
+        params, opt_state, loss, metrics = self._cons(params, opt_state,
+                                                      queue[0])
+        # ... and only now does anyone block on device values
+        return params, opt_state, loss, metrics, queue[1:] + (nxt,)
+
+
+class _RotatingBufferRunner:
+    """Prefetch runner for ``ShardMapExecutor``: consume + update +
+    prepare fused in one jitted program with the batch FIFO donated, so
+    XLA rotates the prepared-batch double buffers in place."""
+
+    def __init__(self, warm_j, fused_j):
+        self._warm = warm_j
+        self._fused = fused_j
+
+    def prepare(self, seeds, salt):
+        """Warmup-only prepare (separate jit; its trace does not tick the
+        pipeline's RoundCounter)."""
+        return self._warm(seeds, salt)
+
+    def step(self, params, opt_state, queue, seeds_next, salt_next):
+        return self._fused(params, opt_state, queue, seeds_next, salt_next)
+
+
 class VmapExecutor:
-    """Single-device simulation: vmap over the stacked worker axis."""
+    """Single-device simulation: vmap over the stacked worker axis.
+
+    Examples
+    --------
+    >>> run = VmapExecutor().bind(pipe, step)                # doctest: +SKIP
+    >>> loss, grads, metrics = run(params, seeds, salt)      # doctest: +SKIP
+    """
 
     name = "vmap"
 
     def bind(self, pipeline, step):
+        """Bind ``step`` (a ``repro.pipeline.worker`` program) to the
+        pipeline's shards/cache under ``jax.vmap``.
+
+        Returns ``run(params, seeds, salt) -> (loss, grads, metrics)``
+        with the worker axis already reduced (worker 0's pmean-ed copy).
+        """
         use_cache = pipeline.cache is not None
         in_axes = (None, 0, 0, None) + ((0,) if use_cache else ())
         vstep = jax.vmap(step, in_axes=in_axes, axis_name=dist.AXIS)
@@ -71,6 +170,44 @@ class VmapExecutor:
 
         return run
 
+    def bind_prefetch(self, pipeline, prepare, prepare_warm, consume,
+                      update):
+        """Bind the split step program for double-buffered execution.
+
+        ``prepare``/``consume`` are the halves from
+        ``Pipeline.make_prepare_consume``; ``update`` applies
+        grad-clip + optimizer (``repro.pipeline.prefetch.make_update_fn``).
+        Returns a runner whose ``step(params, opt_state, queue, seeds_next,
+        salt_next)`` dispatches the next prepare asynchronously before
+        consuming ``queue[0]``.  ``prepare_warm`` is unused here — the
+        same jitted prepare serves warmup and steady state (it traces,
+        and therefore ticks the round counter, exactly once).
+        """
+        use_cache = pipeline.cache is not None
+        cache_ax = 0 if use_cache else None
+        vprep = jax.vmap(prepare, in_axes=(0, 0, None, cache_ax),
+                         axis_name=dist.AXIS)
+        vcons = jax.vmap(consume, in_axes=(None, 0, 0, cache_ax),
+                         axis_name=dist.AXIS)
+        shards, cache = pipeline.shards, pipeline.cache
+
+        @jax.jit
+        def prepare_j(seeds, salt):
+            return vprep(shards, seeds, salt, cache)
+
+        @jax.jit
+        def consume_j(params, opt_state, batch):
+            take0 = lambda x: x[0]
+            loss, grads, metrics = vcons(params, shards, batch, cache)
+            loss = loss[0]
+            grads = jax.tree.map(take0, grads)
+            metrics = jax.tree.map(take0, metrics)
+            params, opt_state, metrics = update(params, opt_state, grads,
+                                                metrics)
+            return params, opt_state, loss, metrics
+
+        return _AsyncDispatchRunner(prepare_j, consume_j)
+
 
 class ShardMapExecutor:
     """Production path: the same per-worker program under shard_map.
@@ -85,10 +222,8 @@ class ShardMapExecutor:
     def __init__(self, mesh=None):
         self.mesh = mesh
 
-    def bind(self, pipeline, step):
-        from jax.sharding import PartitionSpec as P
-
-        from repro.compat import make_mesh, shard_map
+    def _resolve_mesh(self, pipeline):
+        from repro.compat import make_mesh
 
         num_parts = pipeline.spec.plan.num_parts
         mesh = self.mesh
@@ -100,6 +235,20 @@ class ShardMapExecutor:
                     f"--xla_force_host_platform_device_count for a CPU "
                     f"placeholder mesh)")
             mesh = make_mesh((num_parts,), (dist.AXIS,))
+        return mesh
+
+    def bind(self, pipeline, step):
+        """Bind ``step`` to the pipeline's shards/cache under ``shard_map``
+        on the executor's mesh (built lazily when not supplied).
+
+        Returns ``run(params, seeds, salt) -> (loss, grads, metrics)``
+        with replicated (pmean-ed) outputs.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+
+        mesh = self._resolve_mesh(pipeline)
         use_cache = pipeline.cache is not None
         squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
 
@@ -130,6 +279,102 @@ class ShardMapExecutor:
                 return smap(params, pipeline.shards, seeds, salt)
 
         return run
+
+    def bind_prefetch(self, pipeline, prepare, prepare_warm, consume,
+                      update):
+        """Bind the split step program as ONE jitted shard_map pipeline.
+
+        The returned runner's ``step`` executes::
+
+            loss, grads, metrics = consume(queue[0])        # step k-1
+            params, opt_state    = update(grads)
+            queue                = queue[1:] + (prepare(seeds_next),)  # k
+
+        in a single XLA program with ``queue`` donated
+        (``donate_argnums``), i.e. the prepared-batch FIFO rotates through
+        donated double buffers and the prepare's all_to_all rounds can be
+        scheduled against the consume's compute.  ``prepare_warm`` (an
+        uncounted twin of ``prepare``) fills the queue initially from a
+        separate jit so warmup traces don't inflate the pipeline's
+        RoundCounter.
+        """
+        from functools import partial
+
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+
+        mesh = self._resolve_mesh(pipeline)
+        use_cache = pipeline.cache is not None
+        shards, cache = pipeline.shards, pipeline.cache
+        squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
+        expand = lambda t: jax.tree.map(lambda a: a[None], t)
+        A = dist.AXIS
+
+        def _smap_prepare(fn):
+            if use_cache:
+                def wrapper(shards_, seeds, cache_, salt):
+                    return expand(fn(squeeze(shards_), seeds[0], salt,
+                                     squeeze(cache_)))
+
+                return shard_map(
+                    wrapper, mesh=mesh,
+                    in_specs=(P(A), P(A), P(A), P()), out_specs=P(A),
+                    check=False)
+
+            def wrapper(shards_, seeds, salt):
+                return expand(fn(squeeze(shards_), seeds[0], salt, None))
+
+            return shard_map(
+                wrapper, mesh=mesh,
+                in_specs=(P(A), P(A), P()), out_specs=P(A), check=False)
+
+        smap_prep = _smap_prepare(prepare)
+        smap_prep_warm = _smap_prepare(prepare_warm)
+
+        def _call_prep(smap, seeds, salt):
+            if use_cache:
+                return smap(shards, seeds, cache, salt)
+            return smap(shards, seeds, salt)
+
+        if use_cache:
+            def cons_wrapper(params, batch, shards_, cache_):
+                return consume(params, squeeze(shards_), squeeze(batch),
+                               squeeze(cache_))
+
+            smap_cons = shard_map(
+                cons_wrapper, mesh=mesh,
+                in_specs=(P(), P(A), P(A), P(A)),
+                out_specs=(P(), P(), P()), check=False)
+
+            def _consume(params, batch):
+                return smap_cons(params, batch, shards, cache)
+        else:
+            def cons_wrapper(params, batch, shards_):
+                return consume(params, squeeze(shards_), squeeze(batch),
+                               None)
+
+            smap_cons = shard_map(
+                cons_wrapper, mesh=mesh,
+                in_specs=(P(), P(A), P(A)),
+                out_specs=(P(), P(), P()), check=False)
+
+            def _consume(params, batch):
+                return smap_cons(params, batch, shards)
+
+        @partial(jax.jit, donate_argnums=(2,))
+        def fused_j(params, opt_state, queue, seeds_next, salt_next):
+            loss, grads, metrics = _consume(params, queue[0])
+            params, opt_state, metrics = update(params, opt_state, grads,
+                                                metrics)
+            nxt = _call_prep(smap_prep, seeds_next, salt_next)
+            return params, opt_state, loss, metrics, queue[1:] + (nxt,)
+
+        @jax.jit
+        def warm_j(seeds, salt):
+            return _call_prep(smap_prep_warm, seeds, salt)
+
+        return _RotatingBufferRunner(warm_j, fused_j)
 
 
 register_executor("vmap", VmapExecutor)

@@ -113,8 +113,21 @@ class Pipeline:
     # ------------------------------------------------------------- programs
 
     def make_step(self, loss_fn):
-        """The raw per-worker program (advanced use; most callers want
-        ``step_fn`` or ``train_step``)."""
+        """Build the raw fused per-worker program (advanced use; most
+        callers want ``step_fn``, ``train_step``, or ``train_driver``).
+
+        Parameters
+        ----------
+        loss_fn : Callable
+            ``loss_fn(params, mfgs, h_src, seed_labels, seed_valid) ->
+            scalar``.
+
+        Returns
+        -------
+        Callable
+            ``step(params, shard, seeds, salt[, cache]) ->
+            (loss, grads, metrics)`` written against ``dist.AXIS``.
+        """
         plan, sampler = self.spec.plan, self.spec.sampler
         return _worker.make_worker_step(
             offsets=self.layout.offsets, num_parts=plan.num_parts,
@@ -123,9 +136,46 @@ class Pipeline:
             backend=sampler.backend, counter=self.counter,
             use_cache=self.cache is not None)
 
+    def make_prepare_consume(self, loss_fn, *, counted: bool = True):
+        """Build the per-worker *prepare* / *consume* halves of the step —
+        the prefetch boundary (see ``repro.pipeline.prefetch``).
+
+        Parameters
+        ----------
+        loss_fn : Callable
+            Same contract as ``make_step``.
+        counted : bool, default True
+            Whether traces of these halves tick the pipeline's
+            ``RoundCounter`` (drivers pass ``False`` for warmup-only
+            twins so rounds reflect one steady-state step).
+
+        Returns
+        -------
+        (prepare, consume)
+            ``prepare(shard, seeds, salt, cache) -> PreparedBatch`` and
+            ``consume(params, shard, batch, cache) ->
+            (loss, grads, metrics)``.
+        """
+        from repro.pipeline import prefetch as _prefetch
+
+        plan, sampler = self.spec.plan, self.spec.sampler
+        return _prefetch.make_prepare_consume(
+            offsets=self.layout.offsets, num_parts=plan.num_parts,
+            fanouts=sampler.fanouts, loss_fn=loss_fn, scheme=plan.scheme,
+            graph_replicated=self.graph_replicated,
+            backend=sampler.backend,
+            counter=self.counter if counted else None,
+            features=self.spec.prefetch.features)
+
     def step_fn(self, loss_fn, executor=None):
-        """Executor-bound forward/backward:
-        ``fn(params, seeds, salt) -> (loss, grads, metrics)``."""
+        """Bind the fused step to the spec'd executor.
+
+        Returns
+        -------
+        Callable
+            ``fn(params, seeds, salt) -> (loss, grads, metrics)`` taking
+            stacked (P, batch) seeds; outputs are worker-axis reduced.
+        """
         if executor is None:
             executor = resolve_executor(self.spec.executor)
         return executor.bind(self, self.make_step(loss_fn))
@@ -133,25 +183,85 @@ class Pipeline:
     def train_step(self, loss_fn, *, lr: float = 1e-3,
                    optimizer: str = "adamw", grad_clip: float | None = 1.0,
                    executor=None, jit: bool = True):
-        """Full optimizer-applied train step:
-        ``fn(params, opt_state, seeds, salt)
-            -> (params, opt_state, loss, metrics)``.
+        """Build the full optimizer-applied *synchronous* train step.
+
+        This is the one-program-per-step path; for prefetch-depth-aware
+        execution (including the ``prefetch_depth=0`` sync driver) use
+        ``train_driver``, which also owns the deterministic seed stream.
+
+        Parameters
+        ----------
+        loss_fn : Callable
+            Same contract as ``make_step``.
+        lr, optimizer, grad_clip
+            Optimizer settings (``grad_clip=None`` disables clipping).
+        executor : optional
+            Executor instance; defaults to ``spec.executor`` by registry.
+        jit : bool, default True
+            Wrap the returned function in ``jax.jit``.
+
+        Returns
+        -------
+        Callable
+            ``fn(params, opt_state, seeds, salt) ->
+            (params, opt_state, loss, metrics)``.
         """
-        from repro.optim import apply_updates
-        from repro.optim.optimizers import clip_by_global_norm
+        from repro.pipeline.prefetch import make_update_fn
 
         run = self.step_fn(loss_fn, executor=executor)
+        update = make_update_fn(lr=lr, optimizer=optimizer,
+                                grad_clip=grad_clip)
 
         def fn(params, opt_state, seeds, salt):
             loss, grads, metrics = run(params, seeds, salt)
-            if grad_clip is not None:
-                grads, gnorm = clip_by_global_norm(grads, grad_clip)
-                metrics = dict(metrics, grad_norm=gnorm)
-            params, opt_state = apply_updates(params, grads, opt_state,
-                                              kind=optimizer, lr=lr)
+            params, opt_state, metrics = update(params, opt_state, grads,
+                                                metrics)
             return params, opt_state, loss, metrics
 
         return jax.jit(fn) if jit else fn
+
+    def train_driver(self, loss_fn, *, batch: int, lr: float = 1e-3,
+                     optimizer: str = "adamw",
+                     grad_clip: float | None = 1.0, executor=None,
+                     base_salt: int = 0, mode: str | None = None):
+        """Build the step driver selected by ``spec.prefetch``.
+
+        The driver owns a deterministic ``SeedStream`` and (for
+        ``prefetch_depth >= 1``) the in-flight prepared-batch queue, so
+        callers just iterate ``driver.step(...)``.
+
+        Parameters
+        ----------
+        batch : int
+            Per-worker minibatch size (feeds the seed stream).
+        lr, optimizer, grad_clip, executor
+            As in ``train_step``.
+        base_salt : int, default 0
+            Offset for the seed stream (restart a run from the same value
+            to replay it).
+        mode : str, optional
+            Override the prefetch-driver registry name (defaults to
+            ``spec.prefetch.mode``: ``"sync"`` when depth is 0, else
+            ``"double_buffer"``).
+
+        Returns
+        -------
+        driver
+            Object with ``step(params, opt_state, step_idx=None) ->
+            (params, opt_state, loss, metrics)`` and ``reset()``.
+
+        Examples
+        --------
+        >>> driver = pipe.train_driver(loss_fn, batch=512)   # doctest: +SKIP
+        >>> for k in range(100):                             # doctest: +SKIP
+        ...     params, opt, loss, m = driver.step(params, opt)
+        """
+        from repro.pipeline.prefetch import resolve_prefetcher
+
+        cls = resolve_prefetcher(mode or self.spec.prefetch.mode)
+        return cls(self, loss_fn, batch=batch, lr=lr, optimizer=optimizer,
+                   grad_clip=grad_clip, executor=executor,
+                   base_salt=base_salt)
 
     # ------------------------------------------------------------ utilities
 

@@ -1,0 +1,443 @@
+"""Double-buffered prefetch: overlap minibatch preparation with compute.
+
+FastSample (§3–5) removes communication rounds; this module hides the
+rounds that remain.  Following "Accelerating Training and Inference of
+GNNs with Fast Sampling and Pipelining" (arXiv 2110.08450), the per-step
+program splits at a *prefetch boundary* into two halves:
+
+  prepare(shard, seeds, salt, cache) -> PreparedBatch
+      multi-level sampling (``dist.hybrid_sample`` / ``dist.vanilla_sample``,
+      including ``pack_by_owner`` + ``exchange`` rounds for the vanilla
+      scheme), the seed-label gather, and — unless
+      ``PrefetchSpec(features=False)`` — the feature ``exchange`` / cache
+      lookup.  No model parameters are read, so step *k*'s prepare can run
+      concurrently with step *k-1*'s compute.
+
+  consume(params, shard, batch, cache) -> (loss, grads, metrics)
+      the MFG forward/backward + worker-axis pmean (and the feature fetch,
+      when it was left out of the prepare half).
+
+Drivers resolve by registry name from ``PrefetchSpec.mode``:
+
+  * ``"sync"``          — depth 0: one fused program per step, bit-identical
+                          to the plain ``Pipeline.train_step`` path.
+  * ``"double_buffer"`` — depth >= 1: a FIFO of prepared batches.  The vmap
+                          executor overlaps via async JAX dispatch (prepare
+                          of step k+depth is dispatched *before* blocking on
+                          step k's consume); the shard_map executor rotates
+                          donated double buffers inside one jitted program
+                          (see ``ShardMapExecutor.bind_prefetch``).
+
+Determinism: a ``SeedStream`` derives step *k*'s minibatch seeds and salt
+from the step index alone, so any prefetch depth — and any restart — replays
+the identical sample sequence, which is what makes ``depth > 0`` bit-identical
+to ``"sync"`` (asserted in ``tests/test_prefetch.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import dist
+from repro.core.sampler import resolve_backend
+from repro.pipeline.specs import SEED_STREAMS
+
+
+# --------------------------------------------------------------------------
+# the prepared minibatch crossing the prefetch boundary
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PreparedBatch:
+    """Everything the consume half needs, as one pytree.
+
+    Attributes
+    ----------
+    mfgs : tuple[MFG, ...]
+        The L sampled message-flow graphs, top level first.
+    h_src : jnp.ndarray | None
+        (src_capacity, D) gathered input features, or ``None`` when the
+        feature stage was not prefetched (``PrefetchSpec(features=False)``)
+        — the consume half then performs the fetch itself.
+    seed_labels : jnp.ndarray
+        (batch,) labels of the seed nodes (gathered from the local shard).
+    seed_valid : jnp.ndarray
+        (batch,) bool mask of non-padding seeds.
+    hits : jnp.ndarray
+        () int32 feature-cache hit count (0 when no cache / not prefetched).
+
+    Examples
+    --------
+    >>> prepare, consume = pipe.make_prepare_consume(loss_fn)  # doctest: +SKIP
+    >>> batch = prepare(shard, seeds, salt, cache)             # doctest: +SKIP
+    >>> loss, grads, metrics = consume(params, shard, batch, cache)  # doctest: +SKIP
+    """
+    mfgs: tuple
+    h_src: Any
+    seed_labels: jnp.ndarray
+    seed_valid: jnp.ndarray
+    hits: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.mfgs, self.h_src, self.seed_labels, self.seed_valid,
+                self.hits), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+# --------------------------------------------------------------------------
+# the split per-worker program
+# --------------------------------------------------------------------------
+
+def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
+                         fanouts: Sequence[int], loss_fn: Callable,
+                         scheme: str = "hybrid",
+                         graph_replicated=None,
+                         backend: str | None = None,
+                         level_fn: Callable | None = None,
+                         counter: dist.RoundCounter | None = None,
+                         vanilla_fused: bool | None = None,
+                         features: bool = True):
+    """Build the per-worker *prepare* / *consume* halves of the step program.
+
+    This is the prefetch boundary: ``consume(params, shard,
+    prepare(shard, seeds, salt, cache), cache)`` is op-for-op the fused
+    program ``repro.pipeline.worker.make_worker_step`` builds (which is
+    implemented as exactly that composition).
+
+    Parameters
+    ----------
+    offsets, num_parts, fanouts, loss_fn, scheme, graph_replicated, backend,
+    level_fn, counter, vanilla_fused
+        As in ``repro.pipeline.worker.make_worker_step``.
+    features : bool, default True
+        Whether the feature ``exchange`` / cache lookup belongs to the
+        prepare half (True) or stays in the consume half (False).
+
+    Returns
+    -------
+    (prepare, consume)
+        ``prepare(shard, seeds, salt, cache) -> PreparedBatch`` and
+        ``consume(params, shard, batch, cache) -> (loss, grads, metrics)``.
+        Both must run under the named worker axis ``dist.AXIS`` (vmap or
+        shard_map); ``cache`` is ``None`` when no feature cache is attached.
+    """
+    if scheme not in ("vanilla", "hybrid"):
+        raise ValueError(f"unknown scheme {scheme!r}")
+    if scheme == "hybrid" and graph_replicated is None:
+        raise ValueError("hybrid scheme needs the replicated topology")
+    if backend is not None and level_fn is not None:
+        raise ValueError("pass either backend or level_fn, not both")
+    if level_fn is None:
+        backend = backend or "reference"
+        level_fn = resolve_backend(backend)
+    if vanilla_fused is None:
+        vanilla_fused = backend is not None and backend != "unfused"
+
+    def _fetch(src, shard, cache):
+        if cache is not None:
+            return dist.fetch_features_cached(
+                src, offsets, num_parts, shard.features, cache, counter)
+        h = dist.fetch_features(src, offsets, num_parts, shard.features,
+                                counter)
+        return h, jnp.zeros((), jnp.int32)
+
+    def prepare(shard: dist.WorkerShard, seeds, salt, cache=None):
+        if scheme == "hybrid":
+            mfgs = dist.hybrid_sample(graph_replicated, seeds, fanouts,
+                                      salt, level_fn=level_fn)
+        else:
+            mfgs = dist.vanilla_sample(shard, offsets, num_parts, seeds,
+                                       fanouts, salt, counter,
+                                       fused=vanilla_fused)
+        me = lax.axis_index(dist.AXIS)
+        local_seed = jnp.clip(seeds - offsets[me], 0,
+                              shard.labels.shape[0] - 1)
+        seed_labels = shard.labels[local_seed]
+        seed_valid = seeds >= 0
+        if features:
+            h_src, hits = _fetch(mfgs[-1].src_nodes, shard, cache)
+        else:
+            h_src, hits = None, jnp.zeros((), jnp.int32)
+        return PreparedBatch(mfgs=tuple(mfgs), h_src=h_src,
+                             seed_labels=seed_labels, seed_valid=seed_valid,
+                             hits=hits)
+
+    def consume(params, shard: dist.WorkerShard, batch: PreparedBatch,
+                cache=None):
+        mfgs = list(batch.mfgs)
+        if batch.h_src is not None:
+            h_src, hits = batch.h_src, batch.hits
+        else:
+            h_src, hits = _fetch(mfgs[-1].src_nodes, shard, cache)
+
+        def objective(p):
+            return loss_fn(p, mfgs, h_src, batch.seed_labels,
+                           batch.seed_valid)
+
+        loss, grads = jax.value_and_grad(objective)(params)
+        grads = lax.pmean(grads, dist.AXIS)
+        loss = lax.pmean(loss, dist.AXIS)
+        hit_rate = hits / jnp.maximum(jnp.sum(mfgs[-1].src_nodes >= 0), 1)
+        metrics = {"cache_hit_rate": lax.pmean(
+            hit_rate.astype(jnp.float32), dist.AXIS)}
+        return loss, grads, metrics
+
+    return prepare, consume
+
+
+def make_update_fn(*, lr: float = 1e-3, optimizer: str = "adamw",
+                   grad_clip: float | None = 1.0):
+    """Gradient-clip + optimizer apply, shared by the sync and prefetch
+    paths (same ops as ``Pipeline.train_step`` — the bit-equivalence of
+    the two paths depends on it).
+
+    Returns
+    -------
+    update(params, opt_state, grads, metrics)
+        -> (params, opt_state, metrics) with ``grad_norm`` added to
+        ``metrics`` when ``grad_clip`` is set.
+    """
+    from repro.optim import apply_updates
+    from repro.optim.optimizers import clip_by_global_norm
+
+    def update(params, opt_state, grads, metrics):
+        if grad_clip is not None:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+            metrics = dict(metrics, grad_norm=gnorm)
+        params, opt_state = apply_updates(params, grads, opt_state,
+                                          kind=optimizer, lr=lr)
+        return params, opt_state, metrics
+
+    return update
+
+
+# --------------------------------------------------------------------------
+# deterministic seed streams
+# --------------------------------------------------------------------------
+
+class SeedStream:
+    """Derive step *k*'s minibatch seeds and sampling salt from *k* alone.
+
+    A stream constructed with the same ``(pipeline spec, batch, strategy,
+    base_salt)`` produces identical ``seeds(k)`` / ``salt(k)`` for every
+    *k* — across prefetch depths, restarts, and processes.  That property
+    is what lets the double-buffer driver look ``depth`` steps ahead and
+    still replay the synchronous path bit-for-bit.
+
+    Parameters
+    ----------
+    pipeline : repro.pipeline.Pipeline
+        Supplies ``pipeline.seeds`` (per-worker labeled-node draws).
+    batch : int
+        Per-worker minibatch size.
+    strategy : str, default "counter"
+        ``"counter"``: salt_k = base_salt + k.
+        ``"fold"``:    salt_k = Knuth-hash(k) ^ mixed base_salt —
+        decorrelates neighbouring steps' hash streams.
+    base_salt : int, default 0
+
+    Examples
+    --------
+    >>> a = SeedStream(pipe, batch=64)                       # doctest: +SKIP
+    >>> b = SeedStream(pipe, batch=64)                       # doctest: +SKIP
+    >>> bool((a.seeds(7) == b.seeds(7)).all())               # doctest: +SKIP
+    True
+    """
+
+    def __init__(self, pipeline, batch: int, strategy: str = "counter",
+                 base_salt: int = 0):
+        if strategy not in SEED_STREAMS:
+            raise ValueError(f"unknown seed-stream strategy {strategy!r}; "
+                             f"valid: {SEED_STREAMS}")
+        self._pipeline = pipeline
+        self.batch = int(batch)
+        self.strategy = strategy
+        self.base_salt = int(base_salt)
+
+    def salt_int(self, k: int) -> int:
+        """Python-int sampling salt for step ``k`` (deterministic)."""
+        if self.strategy == "counter":
+            return (self.base_salt + int(k)) % (2 ** 32)
+        # "fold": Knuth multiplicative hash of the step index, mixed with
+        # the base salt — pure Python so restarts agree exactly
+        return ((int(k) * 2654435761) ^ (self.base_salt * 40503)) % (2 ** 32)
+
+    def salt(self, k: int) -> jnp.ndarray:
+        """uint32 device salt for step ``k`` (feeds the sampling hash)."""
+        return jnp.uint32(self.salt_int(k))
+
+    def seeds(self, k: int) -> jnp.ndarray:
+        """(P, batch) per-worker seed node ids for step ``k``."""
+        return self._pipeline.seeds(self.batch, epoch_salt=self.salt_int(k))
+
+
+# --------------------------------------------------------------------------
+# prefetch drivers (registry)
+# --------------------------------------------------------------------------
+
+class SyncDriver:
+    """Depth-0 driver: one fused synchronous program per step.
+
+    ``step(params, opt_state, k)`` calls the exact jitted function
+    ``Pipeline.train_step`` returns, with seeds/salt from the
+    ``SeedStream`` — bit-identical to driving that function by hand.
+    """
+
+    mode = "sync"
+
+    def __init__(self, pipeline, loss_fn, *, batch: int, lr: float = 1e-3,
+                 optimizer: str = "adamw", grad_clip: float | None = 1.0,
+                 executor=None, base_salt: int = 0):
+        self.pipeline = pipeline
+        self.depth = 0
+        self._fn = pipeline.train_step(loss_fn, lr=lr, optimizer=optimizer,
+                                       grad_clip=grad_clip,
+                                       executor=executor)
+        self.stream = SeedStream(pipeline, batch,
+                                 strategy=pipeline.spec.prefetch.seed_stream,
+                                 base_salt=base_salt)
+        self._next = 0
+
+    def step(self, params, opt_state, step_idx: int | None = None):
+        """Run step ``step_idx`` (defaults to the next sequential index).
+
+        Returns ``(params, opt_state, loss, metrics)``.
+        """
+        k = self._next if step_idx is None else int(step_idx)
+        out = self._fn(params, opt_state, self.stream.seeds(k),
+                       self.stream.salt(k))
+        self._next = k + 1
+        return out
+
+    def reset(self) -> None:
+        """Restart the sequential step counter at 0."""
+        self._next = 0
+
+
+class DoubleBufferDriver:
+    """Depth-``d`` driver: a FIFO of ``d`` prepared batches rides ahead of
+    compute.
+
+    On ``step(k)`` the driver (1) hands the executor's runner the seeds for
+    step ``k + depth`` so its prepare is dispatched *before* step ``k``'s
+    consume blocks, and (2) consumes the oldest queued batch.  The queue is
+    (re)filled whenever the requested step index breaks the sequence —
+    restarting at any ``k`` therefore reproduces the continuous run exactly
+    (the ``SeedStream`` is a pure function of ``k``).
+
+    The executor supplies the overlap mechanism via ``bind_prefetch``:
+    async JAX dispatch for ``"vmap"``; donated, explicitly rotated double
+    buffers inside one jitted shard_map program for ``"shard_map"``.
+    """
+
+    mode = "double_buffer"
+
+    def __init__(self, pipeline, loss_fn, *, batch: int, lr: float = 1e-3,
+                 optimizer: str = "adamw", grad_clip: float | None = 1.0,
+                 executor=None, base_salt: int = 0):
+        from repro.pipeline.executor import resolve_executor
+
+        spec = pipeline.spec
+        self.depth = spec.prefetch.depth
+        if self.depth < 1:
+            raise ValueError(
+                "double_buffer driver needs prefetch depth >= 1 "
+                f"(got {self.depth}); depth 0 is the 'sync' driver")
+        prepare, consume = pipeline.make_prepare_consume(loss_fn)
+        # an uncounted twin for warmup-only traces, so the RoundCounter
+        # reflects one steady-state step, not warmup + steady state
+        prepare_warm, _ = pipeline.make_prepare_consume(loss_fn,
+                                                        counted=False)
+        update = make_update_fn(lr=lr, optimizer=optimizer,
+                                grad_clip=grad_clip)
+        if executor is None:
+            executor = resolve_executor(spec.executor)
+        bind = getattr(executor, "bind_prefetch", None)
+        if bind is None:
+            raise TypeError(
+                f"executor {getattr(executor, 'name', executor)!r} does not "
+                f"support prefetch (no bind_prefetch method)")
+        self.pipeline = pipeline
+        self._runner = bind(pipeline, prepare, prepare_warm, consume, update)
+        self.stream = SeedStream(pipeline, batch,
+                                 strategy=spec.prefetch.seed_stream,
+                                 base_salt=base_salt)
+        self._queue = None
+        self._next = 0
+
+    def _warmup(self, k: int) -> None:
+        self._queue = tuple(
+            self._runner.prepare(self.stream.seeds(k + i),
+                                 self.stream.salt(k + i))
+            for i in range(self.depth))
+
+    def step(self, params, opt_state, step_idx: int | None = None):
+        """Run step ``step_idx`` (defaults to the next sequential index).
+
+        Returns ``(params, opt_state, loss, metrics)``; internally rotates
+        the prepared-batch FIFO and dispatches the prepare for step
+        ``step_idx + depth``.
+        """
+        k = self._next if step_idx is None else int(step_idx)
+        if self._queue is None or k != self._next:
+            self._warmup(k)
+        params, opt_state, loss, metrics, self._queue = self._runner.step(
+            params, opt_state, self._queue,
+            self.stream.seeds(k + self.depth),
+            self.stream.salt(k + self.depth))
+        self._next = k + 1
+        return params, opt_state, loss, metrics
+
+    def reset(self) -> None:
+        """Drop in-flight batches and restart the step counter at 0."""
+        self._queue = None
+        self._next = 0
+
+
+_PREFETCHERS: dict[str, Callable] = {}
+
+
+def register_prefetcher(name: str, driver_cls: Callable, *,
+                        overwrite: bool = False) -> None:
+    """Register a prefetch-driver class under ``name``.
+
+    ``driver_cls(pipeline, loss_fn, *, batch, lr, optimizer, grad_clip,
+    executor, base_salt)`` must yield an object with
+    ``step(params, opt_state, step_idx=None)`` and ``reset()``.
+    """
+    if not overwrite and name in _PREFETCHERS \
+            and _PREFETCHERS[name] is not driver_cls:
+        raise ValueError(f"prefetcher {name!r} already registered")
+    _PREFETCHERS[name] = driver_cls
+
+
+def available_prefetchers() -> tuple[str, ...]:
+    """Sorted names of registered prefetch drivers."""
+    return tuple(sorted(_PREFETCHERS))
+
+
+def resolve_prefetcher(name: str) -> Callable:
+    """Look up a prefetch-driver class by registry name.
+
+    Examples
+    --------
+    >>> sorted(available_prefetchers())
+    ['double_buffer', 'sync']
+    """
+    try:
+        return _PREFETCHERS[name]
+    except KeyError:
+        raise KeyError(f"unknown prefetcher {name!r}; "
+                       f"available: {available_prefetchers()}") from None
+
+
+register_prefetcher("sync", SyncDriver)
+register_prefetcher("double_buffer", DoubleBufferDriver)

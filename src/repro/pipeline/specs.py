@@ -8,7 +8,9 @@ pull them apart:
 
   * ``PlanSpec``     — partitioning & placement (+ optional feature cache);
   * ``SamplerSpec``  — fanouts + level-backend name (registry lookup);
-  * ``PipelineSpec`` — the pair above + the executor name.
+  * ``PrefetchSpec`` — double-buffered prefetch: how many steps of
+                       minibatch preparation run ahead of model compute;
+  * ``PipelineSpec`` — all of the above + the executor name.
 
 ``PipelineSpec.from_scheme`` parses the legacy
 ``"vanilla" | "hybrid" | "hybrid+fused"`` strings for callers migrating
@@ -20,6 +22,7 @@ import dataclasses
 
 SCHEMES = ("vanilla", "hybrid")
 LEGACY_SCHEMES = ("vanilla", "hybrid", "hybrid+fused")
+SEED_STREAMS = ("counter", "fold")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,11 +79,98 @@ class SamplerSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class PrefetchSpec:
+    """Double-buffered prefetch: overlap minibatch *preparation* (sampling +
+    ``pack_by_owner`` + feature ``exchange``/cache lookup) of step *k* with
+    the *consume* half (MFG forward/backward + update) of step *k-1*.
+
+    Parameters
+    ----------
+    depth : int, default 0
+        Number of prepared minibatches kept in flight ahead of compute.
+        ``0`` selects the ``"sync"`` driver — bit-identical to the plain
+        synchronous ``Pipeline.train_step`` path.  ``depth >= 1`` selects
+        the ``"double_buffer"`` driver (see ``repro.pipeline.prefetch``).
+    seed_stream : str, default "counter"
+        How the per-step sampling salt is derived from the step index so
+        lookahead and restarts replay the identical seed sequence:
+        ``"counter"`` (salt = base_salt + k) or ``"fold"`` (a Knuth
+        multiplicative hash of k — decorrelates neighbouring steps).
+    sampling : bool, default True
+        Run the multi-level sampling stage in the prepare half.
+    features : bool, default True
+        Run the feature exchange / cache lookup in the prepare half; when
+        False the feature fetch stays in the consume half (only sampling
+        is prefetched).
+
+    Examples
+    --------
+    >>> PrefetchSpec(depth=2).mode
+    'double_buffer'
+    >>> PrefetchSpec().mode          # depth 0 -> the synchronous driver
+    'sync'
+    """
+    depth: int = 0
+    seed_stream: str = "counter"
+    sampling: bool = True
+    features: bool = True
+
+    def __post_init__(self):
+        if self.depth < 0:
+            raise ValueError(f"prefetch depth must be >= 0, got {self.depth}")
+        if self.seed_stream not in SEED_STREAMS:
+            raise ValueError(
+                f"unknown seed_stream {self.seed_stream!r}; "
+                f"valid: {SEED_STREAMS}")
+        if self.features and not self.sampling:
+            raise ValueError(
+                "cannot prefetch features without sampling: the feature "
+                "fetch consumes the sampled frontier")
+        if self.depth > 0 and not self.sampling:
+            raise ValueError(
+                "prefetch depth > 0 with every stage disabled prefetches "
+                "nothing; set sampling=True (and optionally features=True) "
+                "or use depth=0")
+
+    @property
+    def mode(self) -> str:
+        """Prefetch-driver registry name: ``"sync"`` when ``depth == 0``,
+        else ``"double_buffer"`` (see
+        ``repro.pipeline.prefetch.resolve_prefetcher``)."""
+        return "sync" if self.depth == 0 else "double_buffer"
+
+
+@dataclasses.dataclass(frozen=True)
 class PipelineSpec:
-    """Everything ``Pipeline.build`` needs: plan + sampler + executor."""
+    """Everything ``Pipeline.build`` needs: plan + sampler + executor
+    (+ optional prefetch).
+
+    Parameters
+    ----------
+    plan : PlanSpec
+        Partitioning & placement (+ optional feature cache).
+    sampler : SamplerSpec
+        Fanouts + level-backend registry name.
+    executor : str, default "vmap"
+        Executor registry name: ``"vmap"`` (single-device simulation) or
+        ``"shard_map"`` (device mesh).
+    prefetch : PrefetchSpec, default PrefetchSpec()
+        Double-buffering config; the default (depth 0) is the synchronous
+        path.
+
+    Examples
+    --------
+    >>> spec = PipelineSpec(
+    ...     plan=PlanSpec(num_parts=4, scheme="hybrid"),
+    ...     sampler=SamplerSpec(fanouts=(10, 5), backend="reference"),
+    ...     prefetch=PrefetchSpec(depth=1))
+    >>> spec.expected_rounds
+    2
+    """
     plan: PlanSpec
     sampler: SamplerSpec
     executor: str = "vmap"           # "vmap" | "shard_map" (registry)
+    prefetch: PrefetchSpec = dataclasses.field(default_factory=PrefetchSpec)
 
     @property
     def expected_rounds(self) -> int:
@@ -96,7 +186,8 @@ class PipelineSpec:
                     executor: str = "vmap",
                     fused_backend: str = "fused_pallas",
                     unfused_backend: str = "unfused",
-                    partition_seed: int = 0) -> "PipelineSpec":
+                    partition_seed: int = 0,
+                    prefetch_depth: int = 0) -> "PipelineSpec":
         """Parse a legacy scheme string into a spec.
 
           vanilla       -> scheme=vanilla, backend=unfused_backend
@@ -105,7 +196,8 @@ class PipelineSpec:
 
         ``fused_backend`` defaults to the Pallas kernel; benchmarks that
         time the *algorithm* rather than the interpret-mode kernel pass
-        ``fused_backend="reference"``.
+        ``fused_backend="reference"``.  ``prefetch_depth`` attaches a
+        default ``PrefetchSpec`` (0 = synchronous).
         """
         if scheme not in LEGACY_SCHEMES:
             raise ValueError(f"unknown scheme {scheme!r}; "
@@ -118,4 +210,5 @@ class PipelineSpec:
                           cache_capacity=cache_capacity,
                           partition_seed=partition_seed),
             sampler=SamplerSpec(fanouts=tuple(fanouts), backend=backend),
-            executor=executor)
+            executor=executor,
+            prefetch=PrefetchSpec(depth=prefetch_depth))

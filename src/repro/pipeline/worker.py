@@ -15,18 +15,22 @@ currently ``{"cache_hit_rate": f32}`` (0 when no cache is attached).
 The program is written against the named axis ``dist.AXIS`` and runs
 unchanged under ``jax.vmap`` (single-device simulation) or ``shard_map``
 (production mesh) — see ``repro.pipeline.executor``.
+
+Internally the step is the composition of the *prepare* and *consume*
+halves built by ``repro.pipeline.prefetch.make_prepare_consume`` — the
+prefetch boundary used by double-buffered execution.  Composing the same
+halves here keeps the synchronous path op-for-op identical to the
+prefetched one (the bit-equivalence ``tests/test_prefetch.py`` asserts).
 """
 from __future__ import annotations
 
 from typing import Callable, Sequence
 
-import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.core import dist
 from repro.core.graph import CSCGraph
-from repro.core.sampler import resolve_backend
+from repro.pipeline.prefetch import make_prepare_consume
 
 
 def make_worker_step(*, offsets: jnp.ndarray, num_parts: int,
@@ -56,52 +60,15 @@ def make_worker_step(*, offsets: jnp.ndarray, num_parts: int,
              by name, and to False (the conservative baseline) when a raw
              ``level_fn`` is supplied.
     """
-    if scheme not in ("vanilla", "hybrid"):
-        raise ValueError(f"unknown scheme {scheme!r}")
-    if scheme == "hybrid" and graph_replicated is None:
-        raise ValueError("hybrid scheme needs the replicated topology")
-    if backend is not None and level_fn is not None:
-        raise ValueError("pass either backend or level_fn, not both")
-    if level_fn is None:
-        backend = backend or "reference"
-        level_fn = resolve_backend(backend)
-    if vanilla_fused is None:
-        vanilla_fused = backend is not None and backend != "unfused"
+    prepare, consume = make_prepare_consume(
+        offsets=offsets, num_parts=num_parts, fanouts=fanouts,
+        loss_fn=loss_fn, scheme=scheme, graph_replicated=graph_replicated,
+        backend=backend, level_fn=level_fn, counter=counter,
+        vanilla_fused=vanilla_fused, features=True)
 
     def _body(params, shard: dist.WorkerShard, seeds, salt, cache):
-        if scheme == "hybrid":
-            mfgs = dist.hybrid_sample(graph_replicated, seeds, fanouts,
-                                      salt, level_fn=level_fn)
-        else:
-            mfgs = dist.vanilla_sample(shard, offsets, num_parts, seeds,
-                                       fanouts, salt, counter,
-                                       fused=vanilla_fused)
-
-        src = mfgs[-1].src_nodes
-        if cache is not None:
-            h_src, hits = dist.fetch_features_cached(
-                src, offsets, num_parts, shard.features, cache, counter)
-        else:
-            h_src = dist.fetch_features(src, offsets, num_parts,
-                                        shard.features, counter)
-            hits = jnp.zeros((), jnp.int32)
-
-        me = lax.axis_index(dist.AXIS)
-        local_seed = jnp.clip(seeds - offsets[me], 0,
-                              shard.labels.shape[0] - 1)
-        seed_labels = shard.labels[local_seed]
-        seed_valid = seeds >= 0
-
-        def objective(p):
-            return loss_fn(p, mfgs, h_src, seed_labels, seed_valid)
-
-        loss, grads = jax.value_and_grad(objective)(params)
-        grads = lax.pmean(grads, dist.AXIS)
-        loss = lax.pmean(loss, dist.AXIS)
-        hit_rate = hits / jnp.maximum(jnp.sum(src >= 0), 1)
-        metrics = {"cache_hit_rate": lax.pmean(
-            hit_rate.astype(jnp.float32), dist.AXIS)}
-        return loss, grads, metrics
+        batch = prepare(shard, seeds, salt, cache)
+        return consume(params, shard, batch, cache)
 
     if use_cache:
         def step(params, shard, seeds, salt, cache):

@@ -8,7 +8,6 @@ import time
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ModelConfig
 from repro.core.partition import PartitionLayout
@@ -25,9 +24,11 @@ class GNNTrainer:
 
     scheme: 'vanilla' | 'hybrid' | 'hybrid+fused' (legacy strings, parsed
     by ``PipelineSpec.from_scheme``); ``cache_capacity`` attaches the §5
-    feature cache.  Runs the per-worker program under vmap (single-device
-    simulation) — launch/train_gnn.py runs the identical program under
-    shard_map.
+    feature cache; ``prefetch_depth`` double-buffers minibatch preparation
+    against model compute (0 = synchronous — same seed stream either way,
+    so results are bit-identical across depths).  Runs the per-worker
+    program under vmap (single-device simulation) — launch/train_gnn.py
+    runs the identical program under shard_map.
     """
     layout: PartitionLayout
     cfg: GNNConfig
@@ -35,11 +36,13 @@ class GNNTrainer:
     lr: float = 0.006            # paper's §4 learning rate
     batch_per_worker: int = 1000 # paper's §4 batch size
     cache_capacity: int = 0
+    prefetch_depth: int = 0
 
     def __post_init__(self):
         spec = PipelineSpec.from_scheme(
             self.scheme, num_parts=self.layout.num_parts,
-            fanouts=self.cfg.fanouts, cache_capacity=self.cache_capacity)
+            fanouts=self.cfg.fanouts, cache_capacity=self.cache_capacity,
+            prefetch_depth=self.prefetch_depth)
         self.pipeline = Pipeline.from_layout(self.layout, spec)
         self.counter = self.pipeline.counter
         self.shards = self.pipeline.shards
@@ -47,21 +50,23 @@ class GNNTrainer:
         def loss_fn(p, mfgs, h_src, labels, valid):
             return gnn_loss(p, mfgs, h_src, labels, valid, self.cfg)
 
-        self._jit_step = self.pipeline.train_step(
-            loss_fn, lr=self.lr, optimizer="adamw", grad_clip=1.0)
+        self.driver = self.pipeline.train_driver(
+            loss_fn, batch=self.batch_per_worker, lr=self.lr,
+            optimizer="adamw", grad_clip=1.0)
 
         key = jax.random.key(0)
         self.params = init_gnn_params(key, self.cfg)
         self.opt_state = init_opt_state(self.params, kind="adamw")
 
     def run_epoch(self, epoch: int, steps_per_epoch: int = 10):
+        """Run steps ``epoch*steps_per_epoch .. +steps_per_epoch`` of the
+        deterministic seed stream (re-running an epoch replays its exact
+        minibatches); returns summary metrics."""
         t0 = time.perf_counter()
         for s in range(steps_per_epoch):
-            seeds = self.pipeline.seeds(self.batch_per_worker,
-                                        epoch_salt=epoch * 1000 + s)
-            self.params, self.opt_state, loss, metrics = self._jit_step(
-                self.params, self.opt_state, seeds,
-                jnp.uint32(epoch * 1000 + s))
+            self.params, self.opt_state, loss, metrics = self.driver.step(
+                self.params, self.opt_state,
+                step_idx=epoch * steps_per_epoch + s)
         return {"loss": float(loss), "epoch_time": time.perf_counter() - t0,
                 "comm_rounds_per_step": self.counter.rounds,
                 "cache_hit_rate": float(metrics["cache_hit_rate"])}
