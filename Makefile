@@ -2,18 +2,23 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench dev-install docs-check
+.PHONY: test lint bench-smoke bench dev-install docs-check
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+# critical-rule lint gate (ruff.toml); CI runs this as its own job
+lint:
+	$(PYTHON) -m ruff check .
 
 # docs must run: executes README/docs code blocks + checks intra-repo links
 docs-check:
 	$(PYTHON) tools/check_docs.py
 
-# quick benchmark sanity (one figure, minutes not hours)
+# quick benchmark sanity (minutes not hours): the §5 cache figure + the
+# placement-scheme sweep, which exercises every registry dispatch path
 bench-smoke:
-	$(PYTHON) -m benchmarks.run cache
+	$(PYTHON) -m benchmarks.run cache schemes
 
 # the full paper-figure sweep
 bench:

@@ -1,11 +1,13 @@
-"""Paper Fig. 6: distributed epoch time — vanilla vs hybrid vs hybrid+fused.
+"""Paper Fig. 6: distributed epoch time — vanilla vs hybrid vs hybrid+fused
+vs degree-aware partial replication.
 
-Runs the three schemes on a partitioned synthetic graph (4 and 8 workers,
+Runs the schemes on a partitioned synthetic graph (4 and 8 workers,
 matching the paper's machine counts) through the ``repro.pipeline`` API in
 the single-device stacked simulation and reports: epoch wall-time,
-communication rounds per step, and bytes communicated per step.  The
-rounds/bytes columns carry the architectural claim (2L -> 2); wall time
-shows the end-to-end effect of the removed passes + rounds on this host.
+communication rounds per step (split sampling vs feature), and bytes
+communicated per step.  The rounds/bytes columns carry the architectural
+claim (2L -> 2, with ``hybrid_partial`` interpolating); wall time shows
+the end-to-end effect of the removed passes + rounds on this host.
 """
 import time
 
@@ -18,7 +20,7 @@ from repro.data.synthetic_graph import products_like
 from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
 from repro.pipeline import Pipeline, PipelineSpec
 
-SCHEMES = ("vanilla", "hybrid", "hybrid+fused")
+SCHEMES = ("vanilla", "hybrid", "hybrid+fused", "hybrid_partial(0.25)")
 
 
 def run(ds, P, batch=256, steps=3):
@@ -59,7 +61,11 @@ def run(ds, P, batch=256, steps=3):
                  f"prefetch={spec.prefetch.depth}")
         emit(f"fig6/P{P}/{scheme}/step_time_us", dt * 1e6, label)
         emit(f"fig6/P{P}/{scheme}/comm_rounds", pipe.counter.rounds,
-             f"per-step {label}")
+             f"per-step {pipe.counter.sampling_rounds}samp+"
+             f"{pipe.counter.feature_rounds}feat {label}")
+        emit(f"fig6/P{P}/{scheme}/expected_rounds",
+             pipe.expected_rounds_estimate,
+             "data-dependent utilized estimate")
         emit(f"fig6/P{P}/{scheme}/comm_bytes",
              sum(pipe.counter.bytes_per_round), f"per-step {label}")
 

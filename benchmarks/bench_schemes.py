@@ -1,0 +1,102 @@
+"""Placement-scheme sweep (the registry's smoke benchmark).
+
+Runs every built-in placement scheme — vanilla, hybrid, and the
+degree-aware ``hybrid_partial`` at a few replication fractions — through
+one pipeline step on a shared partitioning and reports, per scheme:
+
+  * trace-time rounds, split sampling vs feature (``RoundCounter`` kinds);
+  * the data-dependent expected-round estimate (where ``hybrid_partial``
+    lands between hybrid's 2 and vanilla's 2L);
+  * utilized communication bytes per category (step metrics);
+  * the replicated-edge fraction (the memory side of the trade-off).
+
+Also writes one JSON record per scheme under ``experiments/schemes`` so
+``benchmarks.report`` can render the interpolation table.
+
+  PYTHONPATH=src python -m benchmarks.run schemes
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.partition import build_layout, partition_graph
+from repro.data.synthetic_graph import make_power_law_graph
+from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+from repro.pipeline import Pipeline, PipelineSpec, PlanSpec, SamplerSpec
+
+P = 4
+SCHEMES = ("vanilla", "hybrid", "hybrid_partial(0.1)",
+           "hybrid_partial(0.5)", "hybrid_partial(1.0)")
+OUT_DIR = os.path.join("experiments", "schemes")
+
+
+def main() -> None:
+    ds = make_power_law_graph(3000, 8, num_features=16, num_classes=8,
+                              seed=0)
+    assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
+    cfg = GNNConfig(in_dim=16, hidden_dim=32, num_classes=8, num_layers=3,
+                    fanouts=(5, 5, 5), dropout=0.0)
+    params = init_gnn_params(jax.random.key(0), cfg)
+    L = cfg.num_layers
+
+    def loss_fn(p, mfgs, h_src, labels, valid):
+        return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    losses = set()
+    for scheme in SCHEMES:
+        spec = PipelineSpec(
+            plan=PlanSpec(num_parts=P, scheme=scheme),
+            sampler=SamplerSpec(fanouts=cfg.fanouts, backend="unfused"))
+        pipe = Pipeline.from_layout(layout, spec)
+        step = jax.jit(pipe.step_fn(loss_fn))
+        loss, _, metrics = step(params, pipe.seeds(128, 1), jnp.uint32(3))
+        losses.add(float(loss))
+
+        tag = scheme.replace("(", "").replace(")", "").replace(".", "")
+        c = pipe.counter
+        rep_frac = getattr(pipe.placement, "replicated_edge_fraction",
+                           1.0 if scheme == "hybrid" else 0.0)
+        emit(f"schemes/{tag}/rounds", c.rounds,
+             f"{c.sampling_rounds}samp+{c.feature_rounds}feat")
+        emit(f"schemes/{tag}/expected_rounds_estimate",
+             pipe.expected_rounds_estimate,
+             f"hybrid=2 vanilla={2 * L}")
+        emit(f"schemes/{tag}/sampling_utilized_bytes",
+             float(metrics["sampling_utilized_bytes"]),
+             f"capacity {c.capacity_bytes('sampling')}")
+        emit(f"schemes/{tag}/feature_utilized_bytes",
+             float(metrics["feature_utilized_bytes"]),
+             f"capacity {c.capacity_bytes('feature')}")
+        emit(f"schemes/{tag}/replicated_edge_pct", 100.0 * rep_frac, "")
+
+        rec = {
+            "workload": "scheme-sweep", "scheme": scheme,
+            "num_layers": L, "workers": P,
+            "rounds_traced": c.rounds,
+            "sampling_rounds_traced": c.sampling_rounds,
+            "feature_rounds_traced": c.feature_rounds,
+            "expected_rounds_estimate": pipe.expected_rounds_estimate,
+            "sampling_utilized_bytes":
+                float(metrics["sampling_utilized_bytes"]),
+            "feature_utilized_bytes":
+                float(metrics["feature_utilized_bytes"]),
+            "sampling_capacity_bytes": c.capacity_bytes("sampling"),
+            "feature_capacity_bytes": c.capacity_bytes("feature"),
+            "replicated_edge_fraction": rep_frac,
+            "loss": float(loss),
+        }
+        with open(os.path.join(OUT_DIR, f"scheme__{tag}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+
+    # the equivalence claim, checked on every smoke run: one loss value
+    assert len(losses) == 1, f"schemes diverged: {losses}"
+    emit("schemes/bit_identical", 1.0, f"{len(SCHEMES)} schemes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,11 @@
 """Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md roofline
-tables.
+tables, plus the placement-scheme round table from
+experiments/schemes/*.json (written by ``benchmarks.bench_schemes``) —
+the data-dependent accounting of where ``hybrid_partial`` lands between
+hybrid's 2 and vanilla's 2L rounds.
 
-  PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+  PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun] \
+      [--schemes-dir experiments/schemes]
 """
 import argparse
 import glob
@@ -45,6 +49,40 @@ def exec_label(r):
     ex = r.get("executor", "-")
     pf = r.get("prefetch_depth", "-")
     return f"{ex}/pf{pf}"
+
+
+def rounds_label(r):
+    """Traced round split "S+F" when a record carries it, else total."""
+    s = r.get("sampling_rounds_traced")
+    f = r.get("feature_rounds_traced")
+    if s is None or f is None:
+        return str(r.get("rounds_traced", "-"))
+    return f"{s}s+{f}f"
+
+
+def schemes_table(recs):
+    """Placement-scheme interpolation table (bench_schemes records):
+    traced rounds (sampling + feature), the data-dependent expected-round
+    estimate, utilized bytes per category, and replicated-edge fraction."""
+    rows = ["| scheme | rounds traced | expected rounds (est) "
+            "| utilized KB (samp/feat) | capacity KB (samp/feat) "
+            "| replicated edges |",
+            "|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("workload") != "scheme-sweep":
+            continue
+        cap_s = r.get("sampling_capacity_bytes")
+        cap_f = r.get("feature_capacity_bytes")
+        cap = "-" if cap_s is None else \
+            f"{cap_s/1024:.1f}/{cap_f/1024:.1f}"
+        rows.append(
+            f"| {r['scheme']} | {rounds_label(r)} "
+            f"| {r['expected_rounds_estimate']:.2f} "
+            f"| {r['sampling_utilized_bytes']/1024:.1f}/"
+            f"{r['feature_utilized_bytes']/1024:.1f} "
+            f"| {cap} "
+            f"| {100.0 * r['replicated_edge_fraction']:.1f}% |")
+    return "\n".join(rows)
 
 
 def dryrun_table(recs, mesh):
@@ -95,12 +133,18 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--schemes-dir", default="experiments/schemes")
     args = ap.parse_args()
     recs = load(args.dir)
     print(f"## Dry-run ({args.mesh})\n")
     print(dryrun_table(recs, args.mesh))
     print(f"\n## Roofline ({args.mesh})\n")
     print(roofline_table(recs, args.mesh))
+    scheme_recs = load(args.schemes_dir) if os.path.isdir(args.schemes_dir) \
+        else []
+    if scheme_recs:
+        print("\n## Placement schemes (rounds: hybrid=2 .. vanilla=2L)\n")
+        print(schemes_table(scheme_recs))
 
 
 if __name__ == "__main__":

@@ -4,18 +4,25 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_table1   — Table 1 dataset statistics
   * bench_storage  — Fig. 4 topology-vs-features storage breakdown
   * bench_sampling — Fig. 5 fused vs two-step sampling sweep + train step
-  * bench_epoch    — Fig. 6 vanilla / hybrid / hybrid+fused epoch times
+  * bench_epoch    — Fig. 6 scheme sweep (vanilla / hybrid / hybrid+fused
+                     / hybrid_partial) epoch times + round split
   * bench_kernels  — §3.2 memory-movement model + level-path timing
+  * bench_cache    — §5 feature cache hit rate / volume vs capacity
+  * bench_schemes  — placement-scheme registry sweep: round split,
+                     expected-round interpolation, utilized bytes
   * bench_prefetch — double-buffered prefetch overlap (steps/s at depth
                      0/1/2 per scheme)
+
+Pass section names to run a subset: ``python -m benchmarks.run cache
+schemes``.
 """
 import sys
 
 
 def main() -> None:
     from benchmarks import (bench_cache, bench_epoch, bench_kernels,
-                            bench_prefetch, bench_sampling, bench_storage,
-                            bench_table1)
+                            bench_prefetch, bench_sampling, bench_schemes,
+                            bench_storage, bench_table1)
     mods = {
         "table1": bench_table1,
         "storage": bench_storage,
@@ -23,12 +30,17 @@ def main() -> None:
         "epoch": bench_epoch,
         "kernels": bench_kernels,
         "cache": bench_cache,
+        "schemes": bench_schemes,
         "prefetch": bench_prefetch,
     }
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = set(sys.argv[1:])
+    unknown = only - set(mods)
+    if unknown:
+        raise SystemExit(f"unknown benchmark section(s) {sorted(unknown)}; "
+                         f"available: {sorted(mods)}")
     print("name,us_per_call,derived")
     for name, mod in mods.items():
-        if only and name != only:
+        if only and name not in only:
             continue
         mod.main()
 

@@ -4,10 +4,22 @@
  cache frequently accessed remote node features in order to reduce
  communication volume"
 
-Under uniform neighbor sampling, a node's access frequency is proportional
-to its in-degree, so each worker statically caches the features of the
-top-K highest-degree nodes it does NOT own.  During the feature-fetch
-rounds, cache hits are served locally and only misses ride the all_to_all.
+Cache *construction* is a registry of ``CachePolicy`` entries (mirroring
+``repro.core.placement`` / ``repro.core.sampler``), selected by
+``PlanSpec(cache_policy=...)``:
+
+  * ``"degree"``     — static top-K by in-degree: under uniform neighbor
+                       sampling a node's access frequency is proportional
+                       to its in-degree, so each worker caches the hottest
+                       remote nodes it does NOT own.
+  * ``"frequency"``  — top-K by *observed* access frequency: replays a
+                       short trace of the actual deterministic sampler
+                       hash stream (the same seeds/salts training will
+                       draw) and caches the remote nodes each worker
+                       actually fetched most often.
+
+During the feature-fetch rounds, cache hits are served locally and only
+misses ride the all_to_all — for ANY policy and ANY placement scheme.
 
 Static shapes throughout: the cache is (K, D) with a sorted id vector, hits
 resolved by searchsorted.  Communication volume accounting distinguishes
@@ -19,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -51,26 +64,24 @@ class FeatureCache:
         return self.ids.shape[0]
 
 
-def degree_caches(layout: PartitionLayout, capacity: int) -> FeatureCache:
-    """Host-side: per worker, cache the top-`capacity` highest-in-degree
-    nodes owned by OTHER workers.  Returns stacked (P, K) / (P, K, D).
+def _assemble_cache(layout: PartitionLayout, capacity: int,
+                    per_worker_ids) -> FeatureCache:
+    """Stack per-worker remote-id picks into a ``FeatureCache``.
 
-    Prefer ``repro.pipeline.PlanSpec(cache_capacity=K)`` — ``Pipeline.build``
-    then constructs the cache and threads it through the feature fetch.
+    ``per_worker_ids[p]`` is a (<= capacity,) int array of *remote* global
+    node ids worker p caches; rows are gathered from the owning worker's
+    feature shard.  Ids are sorted ascending per worker with the -1 padding
+    replaced by a large sentinel so lookup stays one searchsorted.
     """
-    deg = np.asarray(layout.graph.degrees())
     offsets = np.asarray(layout.offsets)
     feats = np.asarray(layout.features)
     P = layout.num_parts
     D = feats.shape[2]
 
-    all_ids = np.argsort(-deg, kind="stable")
     ids_out = np.full((P, capacity), -1, np.int32)
     rows_out = np.zeros((P, capacity, D), feats.dtype)
     for p in range(P):
-        owner = np.searchsorted(offsets, all_ids, side="right") - 1
-        remote = all_ids[owner != p][:capacity]
-        remote = np.sort(remote)
+        remote = np.sort(np.asarray(per_worker_ids[p])[:capacity])
         k = remote.size
         ids_out[p, :k] = remote
         own = np.searchsorted(offsets, remote, side="right") - 1
@@ -81,6 +92,119 @@ def degree_caches(layout: PartitionLayout, capacity: int) -> FeatureCache:
     ids_sorted = np.where(ids_out < 0, sentinel, ids_out)
     return FeatureCache(ids=jnp.asarray(ids_sorted),
                         rows=jnp.asarray(rows_out))
+
+
+def degree_caches(layout: PartitionLayout, capacity: int,
+                  **_ignored) -> FeatureCache:
+    """Host-side: per worker, cache the top-`capacity` highest-in-degree
+    nodes owned by OTHER workers.  Returns stacked (P, K) / (P, K, D).
+
+    Prefer ``repro.pipeline.PlanSpec(cache_capacity=K)`` — ``Pipeline.build``
+    then constructs the cache and threads it through the feature fetch.
+    """
+    deg = np.asarray(layout.graph.degrees())
+    offsets = np.asarray(layout.offsets)
+    P = layout.num_parts
+
+    all_ids = np.argsort(-deg, kind="stable")
+    # loop-invariant: ownership of the degree-ranked ids
+    owner = np.searchsorted(offsets, all_ids, side="right") - 1
+    picks = [all_ids[owner != p][:capacity] for p in range(P)]
+    return _assemble_cache(layout, capacity, picks)
+
+
+def frequency_caches(layout: PartitionLayout, capacity: int, *,
+                     fanouts, trace_steps: int = 4, trace_batch: int = 64,
+                     seed: int = 0, **_ignored) -> FeatureCache:
+    """Access-traced policy: replay ``trace_steps`` steps of the actual
+    deterministic sampler hash stream (the same ``seeds_per_worker`` draws
+    + per-step salts training uses) and cache, per worker, the remote
+    nodes whose features it fetched most often.
+
+    Because the sampler is a stateless hash of (node id, salt, slot), this
+    short trace is an exact prefix of the access stream a ``"counter"``
+    seed-stream training run with ``base_salt=seed`` would produce — not a
+    proxy distribution.
+    """
+    from repro.core.partition import seeds_per_worker
+    from repro.core.sampler import sample_mfgs
+
+    if fanouts is None:
+        raise ValueError("frequency cache policy needs the sampler fanouts "
+                         "(pass fanouts=... or use the pipeline API)")
+    graph = layout.graph
+    offsets = np.asarray(layout.offsets)
+    P = layout.num_parts
+    n = graph.num_nodes
+
+    counts = np.zeros((P, n), np.int64)
+    for s in range(trace_steps):
+        salt = (seed + s) % (2 ** 32)
+        seeds = np.asarray(seeds_per_worker(layout, trace_batch,
+                                            epoch_salt=salt))
+        for p in range(P):
+            mfgs = sample_mfgs(graph, jnp.asarray(seeds[p]), fanouts,
+                               jnp.uint32(salt))
+            src = np.asarray(mfgs[-1].src_nodes)
+            src = src[src >= 0]
+            np.add.at(counts[p], src, 1)
+
+    owner = np.searchsorted(offsets, np.arange(n), side="right") - 1
+    picks = []
+    for p in range(P):
+        c = counts[p].copy()
+        c[owner == p] = 0                      # local rows are free anyway
+        accessed = np.nonzero(c > 0)[0]
+        # deterministic order: by observed frequency desc, then id asc
+        ranked = accessed[np.lexsort((accessed, -c[accessed]))]
+        picks.append(ranked[:capacity])
+    return _assemble_cache(layout, capacity, picks)
+
+
+# --------------------------------------------------------------------------
+# cache-policy registry
+# --------------------------------------------------------------------------
+# A *cache policy* is any ``policy(layout, capacity, *, fanouts=None, ...)
+# -> FeatureCache``.  Registering by name lets ``PlanSpec(cache_policy=...)``
+# select construction declaratively, and third-party policies plug in
+# without touching the fetch path (which is policy-agnostic).
+
+_CACHE_POLICIES: dict[str, Callable] = {}
+
+
+def register_cache_policy(name: str, policy: Callable, *,
+                          overwrite: bool = False) -> None:
+    """Register ``policy(layout, capacity, *, fanouts=None, ...)`` under
+    ``name`` (see ``resolve_cache_policy``)."""
+    if not overwrite and name in _CACHE_POLICIES \
+            and _CACHE_POLICIES[name] is not policy:
+        raise ValueError(f"cache policy {name!r} already registered; "
+                         f"pass overwrite=True to replace it")
+    _CACHE_POLICIES[name] = policy
+
+
+def available_cache_policies() -> tuple[str, ...]:
+    """Sorted names of registered cache policies.
+
+    Examples
+    --------
+    >>> set(available_cache_policies()) >= {"degree", "frequency"}
+    True
+    """
+    return tuple(sorted(_CACHE_POLICIES))
+
+
+def resolve_cache_policy(name: str) -> Callable:
+    """Look up a cache policy by registry name (KeyError lists names)."""
+    try:
+        return _CACHE_POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown cache policy {name!r}; "
+                       f"available: {available_cache_policies()}") from None
+
+
+register_cache_policy("degree", degree_caches)
+register_cache_policy("frequency", frequency_caches)
 
 
 def build_degree_caches(layout: PartitionLayout, capacity: int

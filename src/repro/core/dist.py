@@ -15,8 +15,13 @@ Communication schemes (paper's accounting):
                round; feature fetch needs 2 more.           -> 2L rounds.
   * hybrid   : topology replicated, features partitioned.   -> 2 rounds.
 
-Every ``exchange`` call increments a trace-time round counter so tests can
-assert the 2L -> 2 reduction structurally.
+Placement is pluggable: ``repro.core.placement`` wraps these programs (plus
+the degree-aware ``hybrid_partial`` scheme that interpolates between them)
+in a ``PlacementScheme`` registry the pipeline dispatches through.
+
+Every ``exchange`` call increments a trace-time round counter — categorized
+as sampling vs feature rounds — so tests can assert the 2L -> 2 reduction
+structurally.
 
 These primitives are composed into the per-step program by
 ``repro.pipeline.worker`` (fused) and ``repro.pipeline.prefetch`` (split
@@ -36,7 +41,7 @@ from jax import lax
 
 from repro.core.graph import CSCGraph
 from repro.core.mfg import MFG
-from repro.core.sampler import (build_indptr, hash_u32, relabel,
+from repro.core.sampler import (build_indptr, hash_u32, level_salt, relabel,
                                 sample_level, sample_mfgs)
 
 AXIS = "data"
@@ -49,33 +54,62 @@ class RoundCounter:
     one trace ``rounds`` is the per-step round count — the quantity the
     paper's 2L -> 2 claim is about — independent of how many steps run.
 
+    Rounds are categorized by what they carry — ``"sampling"`` (frontier
+    ids / neighbor replies of the partitioned protocols) vs ``"feature"``
+    (the 2 id/row rounds of the feature fetch) — so reports can show where
+    partial-replication schemes land between the hybrid (2) and vanilla
+    (2L) extremes.  ``rounds`` stays the category sum for backward
+    compatibility.
+
     Attributes
     ----------
-    rounds : int
-        all_to_all rounds traced so far.
+    kinds : list[str]
+        Category of each traced round, in trace order.
     bytes_per_round : list[int]
         Buffer capacity (bytes) of each round — *capacity*, not utilized
-        bytes; padding slots count.
+        bytes; padding slots count.  (Utilized bytes are data-dependent;
+        the step program reports them per category in its ``metrics``.)
 
     Examples
     --------
     >>> c = RoundCounter()
-    >>> c.rounds
-    0
+    >>> (c.rounds, c.sampling_rounds, c.feature_rounds)
+    (0, 0, 0)
     """
 
     def __init__(self):
-        self.rounds = 0
+        self.kinds: list[str] = []
         self.bytes_per_round: list[int] = []
 
-    def tick(self, buf) -> None:
-        """Record one round carrying the pytree ``buf``."""
-        self.rounds += 1
+    @property
+    def rounds(self) -> int:
+        """Total all_to_all rounds traced (all categories)."""
+        return len(self.kinds)
+
+    @property
+    def sampling_rounds(self) -> int:
+        """Rounds carrying sampling requests/replies."""
+        return sum(k == "sampling" for k in self.kinds)
+
+    @property
+    def feature_rounds(self) -> int:
+        """Rounds carrying feature ids/rows."""
+        return sum(k == "feature" for k in self.kinds)
+
+    def capacity_bytes(self, kind: str | None = None) -> int:
+        """Summed buffer capacity over rounds of ``kind`` (None = all)."""
+        return sum(b for k, b in zip(self.kinds, self.bytes_per_round)
+                   if kind is None or k == kind)
+
+    def tick(self, buf, kind: str = "other") -> None:
+        """Record one round of category ``kind`` carrying pytree ``buf``."""
+        self.kinds.append(kind)
         self.bytes_per_round.append(
             sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(buf)))
 
 
-def exchange(buf: jnp.ndarray, counter: RoundCounter | None) -> jnp.ndarray:
+def exchange(buf: jnp.ndarray, counter: RoundCounter | None,
+             kind: str = "other") -> jnp.ndarray:
     """One all_to_all communication round over the worker axis.
 
     Parameters
@@ -85,6 +119,8 @@ def exchange(buf: jnp.ndarray, counter: RoundCounter | None) -> jnp.ndarray:
         destined for worker q.
     counter : RoundCounter or None
         Ticked at trace time when given.
+    kind : str, default "other"
+        Round category recorded by the counter ("sampling" / "feature").
 
     Returns
     -------
@@ -99,7 +135,7 @@ def exchange(buf: jnp.ndarray, counter: RoundCounter | None) -> jnp.ndarray:
         out = jax.vmap(lambda b: exchange(b, None), axis_name=AXIS)(bufs)
     """
     if counter is not None:
-        counter.tick(buf)
+        counter.tick(buf, kind=kind)
     return lax.all_to_all(buf, AXIS, split_axis=0, concat_axis=0)
 
 
@@ -212,6 +248,64 @@ def sample_neighbors_local(local_indptr: jnp.ndarray,
     return jnp.where(valid, samples, -1)
 
 
+def exchange_sample_level(shard: "WorkerShard", offsets: jnp.ndarray,
+                          num_parts: int, frontier: jnp.ndarray,
+                          fanout: int, salt,
+                          counter: RoundCounter | None):
+    """One lower level of the partitioned sampling protocol (2 rounds):
+    pack the frontier by owner, ``exchange`` requests, draw on the owning
+    worker, ``exchange`` replies back to the requesting slots.
+
+    Shared by every scheme that falls back to owner-side sampling (the
+    vanilla scheme for its whole frontier, ``hybrid_partial`` for the cold
+    remainder), so the protocol — and its utilized-byte accounting — has
+    one implementation.
+
+    Returns
+    -------
+    (samples, utilized_bytes)
+        ``samples`` (N, fanout) int32 global ids (-1 where the frontier
+        slot was padding/invalid); ``utilized_bytes`` traced f32 scalar of
+        valid request-id + reply payload bytes this worker contributed.
+    """
+    me = lax.axis_index(AXIS)
+    my_offset = offsets[me]
+    n_local = offsets[me + 1] - my_offset
+
+    own = owner_of(offsets, frontier)
+    buf, oidx, sidx = pack_by_owner(frontier, own, num_parts)
+    reqs = exchange(buf, counter, kind="sampling")              # round: ids
+    got = sample_neighbors_local(
+        shard.local_indptr, shard.local_indices, my_offset, n_local,
+        reqs.reshape(-1), fanout, salt)
+    reply = exchange(got.reshape(num_parts, -1, fanout),
+                     counter, kind="sampling")                  # round: nbrs
+    samples = reply[oidx, sidx]
+    samples = jnp.where((frontier >= 0)[:, None], samples, -1)
+    m = jnp.sum((frontier >= 0).astype(jnp.float32))
+    return samples, m * 4.0 * (1.0 + fanout)
+
+
+def finish_level(frontier: jnp.ndarray, samples: jnp.ndarray,
+                 fused: bool) -> MFG:
+    """Turn one level's raw draws into its MFG — the level-construction
+    tail every partitioned sampling protocol shares.
+
+    ``fused`` selects direct row-pointer construction (the paper's fused
+    kernel semantics); False pays the DGL-style COO->CSC conversion passes
+    first (values are identical either way, cost is not).
+    """
+    valid = samples >= 0
+    if fused:
+        indptr = build_indptr(valid)
+    else:
+        from repro.core.sampler import unfused_coo_csc_pass
+        samples, valid, indptr = unfused_coo_csc_pass(samples, valid)
+    edges, src_nodes, num_src = relabel(frontier, samples, valid)
+    return MFG(dst_nodes=frontier, src_nodes=src_nodes, num_src=num_src,
+               edges=edges, edge_mask=valid, indptr=indptr)
+
+
 # --------------------------------------------------------------------------
 # per-worker state
 # --------------------------------------------------------------------------
@@ -273,7 +367,8 @@ def vanilla_sample(shard: WorkerShard, offsets: jnp.ndarray,
                    num_parts: int, seeds: jnp.ndarray,
                    fanouts: Sequence[int], salt,
                    counter: RoundCounter | None,
-                   fused: bool = False) -> list[MFG]:
+                   fused: bool = False,
+                   with_stats: bool = False):
     """Multi-level sampling under the vanilla scheme: topology
     partitioned -> 2 rounds per level below the top (Fig. 3).
 
@@ -296,19 +391,21 @@ def vanilla_sample(shard: WorkerShard, offsets: jnp.ndarray,
         level (paper Fig. 6 'vanilla' scenario); True composes the
         partitioned protocol with fused level construction (an ablation
         the paper doesn't run but our harness can).
+    with_stats : bool, default False
+        Also return the traced f32 scalar of *utilized* sampling-exchange
+        bytes this worker contributed (valid request ids + their replies).
 
     Returns
     -------
-    list[MFG]
-        One message-flow graph per level, top first.
+    list[MFG] or (list[MFG], jnp.ndarray)
+        One message-flow graph per level, top first; with ``with_stats``,
+        also the utilized sampling bytes.
     """
     me = lax.axis_index(AXIS)
     my_offset = offsets[me]
     n_local = offsets[me + 1] - my_offset
 
-    def level_salt(depth):
-        return jnp.uint32(salt) * jnp.uint32(1000003) + depth
-
+    util = jnp.zeros((), jnp.float32)
     mfgs = []
     frontier = seeds
     for depth, fanout in enumerate(fanouts):
@@ -317,30 +414,17 @@ def vanilla_sample(shard: WorkerShard, offsets: jnp.ndarray,
             # top level: seeds are local labeled nodes -> no communication
             samples = sample_neighbors_local(
                 shard.local_indptr, shard.local_indices, my_offset, n_local,
-                frontier, fanout, level_salt(depth))
+                frontier, fanout, level_salt(salt, depth))
         else:
-            own = owner_of(offsets, frontier)
-            buf, oidx, sidx = pack_by_owner(frontier, own, num_parts)
-            reqs = exchange(buf, counter)                       # round: ids
-            flat = reqs.reshape(-1)
-            got = sample_neighbors_local(
-                shard.local_indptr, shard.local_indices, my_offset, n_local,
-                flat, fanout, level_salt(depth))
-            reply = exchange(got.reshape(num_parts, -1, fanout),
-                             counter)                           # round: nbrs
-            samples = reply[oidx, sidx]
-            samples = jnp.where((frontier >= 0)[:, None], samples, -1)
-        valid = samples >= 0
-        if fused:
-            indptr = build_indptr(valid)
-        else:
-            from repro.core.sampler import unfused_coo_csc_pass
-            samples, valid, indptr = unfused_coo_csc_pass(samples, valid)
-        edges, src_nodes, num_src = relabel(frontier, samples, valid)
-        mfgs.append(MFG(dst_nodes=frontier, src_nodes=src_nodes,
-                        num_src=num_src, edges=edges, edge_mask=valid,
-                        indptr=indptr))
-        frontier = src_nodes
+            samples, level_bytes = exchange_sample_level(
+                shard, offsets, num_parts, frontier, fanout,
+                level_salt(salt, depth), counter)
+            util = util + level_bytes
+        mfg = finish_level(frontier, samples, fused)
+        mfgs.append(mfg)
+        frontier = mfg.src_nodes
+    if with_stats:
+        return mfgs, util
     return mfgs
 
 
@@ -381,12 +465,12 @@ def fetch_features(src_nodes: jnp.ndarray, offsets: jnp.ndarray,
 
     own = owner_of(offsets, src_nodes)
     buf, oidx, sidx = pack_by_owner(src_nodes, own, num_parts)
-    reqs = exchange(buf, counter)                               # round: ids
+    reqs = exchange(buf, counter, kind="feature")               # round: ids
     local = reqs - my_offset
     ok = (reqs >= 0) & (local >= 0) & (local < n_local)
     rows = features_local[jnp.clip(local, 0, n_local - 1)]
     rows = rows * ok[..., None].astype(rows.dtype)
-    reps = exchange(rows, counter)                              # round: rows
+    reps = exchange(rows, counter, kind="feature")              # round: rows
     h = reps[oidx, sidx]
     return h * (src_nodes >= 0)[:, None].astype(h.dtype)
 

@@ -16,10 +16,12 @@ range [offsets[p], offsets[p+1]).  Ownership then costs one searchsorted and
 a local index is ``id - offsets[p]`` — the TPU-friendly replacement for
 DistDGL's hash-map node maps.
 
-Two deployment plans:
-  * ``VanillaPlan``   — topology AND features partitioned (paper's baseline).
-  * ``HybridPlan``    — topology replicated, features partitioned (the
-                        paper's contribution).
+Deployment plans live in ``repro.core.placement`` as a PlacementScheme
+registry ("vanilla" | "hybrid" | "hybrid_partial" | third-party entries);
+the legacy ``VanillaPlan`` / ``HybridPlan`` dataclasses and their
+``build_vanilla`` / ``build_hybrid`` constructors remain here (the vanilla
+slice builder is what the registry schemes use), but new code should select
+placement by name through ``repro.pipeline.PlanSpec(scheme=...)``.
 """
 from __future__ import annotations
 
@@ -156,7 +158,11 @@ class PartitionLayout:
 
 @dataclasses.dataclass(frozen=True)
 class VanillaPlan:
-    """Paper baseline: each worker stores only its partition's in-edges."""
+    """Paper baseline: each worker stores only its partition's in-edges.
+
+    Legacy container — the registry equivalent is
+    ``repro.core.placement.resolve_scheme("vanilla").build(layout)``.
+    """
     layout: PartitionLayout
     local_indptr: jnp.ndarray    # (P, n_max+1)
     local_indices: jnp.ndarray   # (P, nnz_max) global src ids, -1 pad
@@ -164,7 +170,11 @@ class VanillaPlan:
 
 @dataclasses.dataclass(frozen=True)
 class HybridPlan:
-    """The contribution: topology replicated, features partitioned."""
+    """The contribution: topology replicated, features partitioned.
+
+    Legacy container — the registry equivalent is
+    ``repro.core.placement.resolve_scheme("hybrid").build(layout)``.
+    """
     layout: PartitionLayout
 
 
@@ -239,22 +249,43 @@ def build_hybrid(layout: PartitionLayout) -> HybridPlan:
     return HybridPlan(layout=layout)
 
 
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """SplitMix64 finalizer, vectorized (uint64 in/out, wraps silently)."""
+    x = (x ^ (x >> 30)) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> 27)) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> 31)
+
+
 def seeds_per_worker(layout: PartitionLayout, batch: int,
                      epoch_salt: int) -> jnp.ndarray:
     """Each worker draws its minibatch from ITS OWN labeled nodes (paper §4:
     'top level sampling seeds are drawn from the labeled nodes' of the local
     partition).  Deterministic given epoch_salt.  Returns (P, batch) global
-    ids, -1 padded."""
+    ids, -1 padded.
+
+    Vectorized over workers: each labeled node gets a hash rank from
+    (global id, epoch_salt) and every worker takes its ``batch``
+    lowest-ranked labeled nodes — one argsort over the (P, n_max) table
+    replaces the per-partition ``rng.choice`` loop.  Sampling without
+    replacement is preserved (distinct nodes hash to distinct ranks with
+    overwhelming probability; ties break by column order).
+    """
     P = layout.num_parts
-    offsets = np.asarray(layout.offsets)
+    offsets = np.asarray(layout.offsets).astype(np.int64)
     labels = np.asarray(layout.labels)
+    n_max = labels.shape[1]
+
+    gids = offsets[:-1, None] + np.arange(n_max, dtype=np.int64)[None, :]
+    # fold the salt in Python-int space (arbitrary precision, then wrap)
+    salt64 = np.uint64((int(epoch_salt) * 0x9E3779B97F4A7C15) % (2 ** 64))
+    key = _mix64(gids.astype(np.uint64) + salt64)
+    key = np.where(labels >= 0, key, np.uint64(np.iinfo(np.uint64).max))
+
+    m = min(batch, n_max)
+    order = np.argsort(key, axis=1, kind="stable")[:, :m]
+    picked = np.take_along_axis(gids, order, axis=1)
+    take = np.minimum((labels >= 0).sum(axis=1), m)
+    valid = np.arange(m)[None, :] < take[:, None]
     out = np.full((P, batch), -1, np.int32)
-    for p in range(P):
-        local_labeled = np.nonzero(labels[p] >= 0)[0]
-        if local_labeled.size == 0:
-            continue
-        rng = np.random.default_rng(epoch_salt * 1009 + p)
-        take = min(batch, local_labeled.size)
-        pick = rng.choice(local_labeled, size=take, replace=False)
-        out[p, :take] = pick + offsets[p]
+    out[:, :m] = np.where(valid, picked, -1)
     return jnp.asarray(out)

@@ -35,6 +35,18 @@ def hash_u32(x: jnp.ndarray, salt: jnp.ndarray | int) -> jnp.ndarray:
     return x ^ (x >> 16)
 
 
+def level_salt(salt, depth: int) -> jnp.ndarray:
+    """Per-level sampling salt: the ONE derivation every scheme uses.
+
+    Cross-scheme bit-identity of minibatches (paper §4.2) requires that a
+    node at level ``depth`` hashes the same stream no matter which worker
+    or placement scheme draws it — so hybrid (``sample_mfgs``), vanilla
+    (``dist.vanilla_sample``), and partial-replication sampling all derive
+    their level salt here.
+    """
+    return jnp.uint32(salt) * jnp.uint32(1000003) + depth
+
+
 def sample_neighbors(graph: CSCGraph, seeds: jnp.ndarray, fanout: int,
                      salt: jnp.ndarray | int):
     """Per-seed neighbor draws: ``Choose(C_G[R_G[v]:R_G[v+1]]; N_l)``.
@@ -252,7 +264,7 @@ def sample_mfgs(graph: CSCGraph, seeds: jnp.ndarray,
     frontier = seeds
     for depth, fanout in enumerate(fanouts):
         mfg = level_fn(graph, frontier, int(fanout),
-                       jnp.uint32(salt) * jnp.uint32(1000003) + depth)
+                       level_salt(salt, depth))
         mfgs.append(mfg)
         frontier = mfg.src_nodes
     return mfgs

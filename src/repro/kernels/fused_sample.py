@@ -39,8 +39,8 @@ def _hash_u32(x, salt):
 
 
 def _fused_sample_kernel(indptr_ref, indices_ref, seeds_ref, salt_ref,
-                         samples_ref, r_ref, acc_ref, *, fanout: int,
-                         window: int):
+                         samples_ref, r_ref, overflow_ref, acc_ref,
+                         ovf_acc_ref, *, fanout: int, window: int):
     i = pl.program_id(0)
     s = pl.load(seeds_ref, (pl.dslice(i, 1),))[0]
     ok = s >= 0
@@ -49,6 +49,12 @@ def _fused_sample_kernel(indptr_ref, indices_ref, seeds_ref, salt_ref,
     start = pl.load(indptr_ref, (pl.dslice(v, 1),))[0]
     end = pl.load(indptr_ref, (pl.dslice(v + 1, 1),))[0]
     deg = jnp.where(ok, end - start, 0)
+    # hubs wider than the VMEM window draw from the visible neighbor set:
+    # clamping the *degree used in the modulo* (not the drawn column) keeps
+    # the draw uniform over the first `window` neighbors — bit-identical to
+    # a window-truncated reference — instead of silently biasing every
+    # overflow draw onto the last column
+    eff_deg = jnp.minimum(deg, window)
 
     # HBM -> VMEM stream of the neighbor window (indices is sentinel-padded
     # by the wrapper so the slice never clamps)
@@ -58,11 +64,12 @@ def _fused_sample_kernel(indptr_ref, indices_ref, seeds_ref, salt_ref,
     slots = jnp.arange(fanout, dtype=jnp.uint32)
     bits = _hash_u32(v.astype(jnp.uint32) * jnp.uint32(2654435761) + slots,
                      salt_ref[0])
-    rand_idx = (bits % jnp.maximum(deg, 1).astype(jnp.uint32)).astype(jnp.int32)
-    take_all = deg <= fanout
+    rand_idx = (bits % jnp.maximum(eff_deg, 1).astype(jnp.uint32)
+                ).astype(jnp.int32)
+    take_all = eff_deg <= fanout
     col = jnp.where(take_all, jnp.arange(fanout, dtype=jnp.int32), rand_idx)
-    col = jnp.minimum(col, window - 1)          # windowed-hub clamp
-    valid = (jnp.arange(fanout) < jnp.minimum(deg, fanout)) & ok
+    col = jnp.minimum(col, window - 1)     # bounds-safety for invalid lanes
+    valid = (jnp.arange(fanout) < jnp.minimum(eff_deg, fanout)) & ok
 
     vals = jnp.where(valid, nbrs[col], -1)
     samples_ref[...] = vals.reshape(1, fanout)
@@ -72,11 +79,18 @@ def _fused_sample_kernel(indptr_ref, indices_ref, seeds_ref, salt_ref,
     @pl.when(i == 0)
     def _init():
         acc_ref[0] = 0
+        ovf_acc_ref[0] = 0
         r_ref[pl.dslice(0, 1)] = jnp.zeros((1,), jnp.int32)
 
     new_total = acc_ref[0] + jnp.sum(valid.astype(jnp.int32))
     acc_ref[0] = new_total
     r_ref[pl.dslice(i + 1, 1)] = new_total.reshape(1)
+
+    # surface window truncation instead of failing silently: count seeds
+    # whose true degree exceeds the visible window
+    new_ovf = ovf_acc_ref[0] + jnp.where(ok & (deg > window), 1, 0)
+    ovf_acc_ref[0] = new_ovf
+    overflow_ref[pl.dslice(0, 1)] = new_ovf.reshape(1)
 
 
 @functools.partial(jax.jit, static_argnames=("fanout", "window", "interpret"))
@@ -85,8 +99,14 @@ def fused_sample(indptr: jnp.ndarray, indices: jnp.ndarray,
                  window: int = MAX_DEG_WINDOW, interpret: bool = True):
     """Sample ``fanout`` in-neighbors per seed, emitting CSC directly.
 
+    Degrees above ``window`` draw uniformly from the first ``window``
+    neighbors (the set actually streamed into VMEM) and are counted in
+    ``overflow_count`` so truncation is observable rather than a silent
+    bias.
+
     Returns (samples (S, fanout) int32 global ids [-1 invalid],
-             R (S+1,) int32 row pointers).
+             R (S+1,) int32 row pointers,
+             overflow_count () int32 — seeds with degree > window).
     """
     S = seeds.shape[0]
     # sentinel-pad so the per-seed window never clamps at the array end
@@ -96,7 +116,7 @@ def fused_sample(indptr: jnp.ndarray, indices: jnp.ndarray,
 
     kernel = functools.partial(_fused_sample_kernel, fanout=fanout,
                                window=window)
-    samples, r = pl.pallas_call(
+    samples, r, overflow = pl.pallas_call(
         kernel,
         grid=(S,),
         in_specs=[
@@ -108,12 +128,15 @@ def fused_sample(indptr: jnp.ndarray, indices: jnp.ndarray,
         out_specs=[
             pl.BlockSpec((1, fanout), lambda i: (i, 0)),   # samples (VMEM)
             pl.BlockSpec(memory_space=pl.ANY),             # R
+            pl.BlockSpec(memory_space=pl.ANY),             # overflow
         ],
         out_shape=[
             jax.ShapeDtypeStruct((S, fanout), jnp.int32),
             jax.ShapeDtypeStruct((S + 1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
         ],
-        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32),
+                        pltpu.SMEM((1,), jnp.int32)],
         interpret=interpret,
     )(indptr, indices_padded, seeds, salt_arr)
-    return samples, r
+    return samples, r, overflow[0]

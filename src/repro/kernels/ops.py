@@ -22,7 +22,12 @@ INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
 
 def fused_sample(graph: CSCGraph, seeds: jnp.ndarray, fanout: int, salt,
                  window: int = _fs.MAX_DEG_WINDOW):
-    """Kernel-backed neighbor sampling emitting CSC directly (Algorithm 1)."""
+    """Kernel-backed neighbor sampling emitting CSC directly (Algorithm 1).
+
+    Returns (samples, R, overflow_count); ``overflow_count`` is the number
+    of seeds whose degree exceeded the VMEM window (their draws cover the
+    first ``window`` neighbors only).
+    """
     return _fs.fused_sample(graph.indptr, graph.indices, seeds,
                             jnp.asarray(salt, jnp.uint32), fanout=fanout,
                             window=window, interpret=INTERPRET)
@@ -35,7 +40,7 @@ def fused_sample_level(graph: CSCGraph, seeds: jnp.ndarray, fanout: int,
     The kernel emits (samples, R); the sort-based relabel (Algorithm 1's
     second loop, DESIGN.md §2) finishes the MFG.
     """
-    samples, indptr = fused_sample(graph, seeds, fanout, salt)
+    samples, indptr, _overflow = fused_sample(graph, seeds, fanout, salt)
     valid = samples >= 0
     edges, src_nodes, num_src = relabel(seeds, samples, valid)
     return MFG(dst_nodes=seeds, src_nodes=src_nodes, num_src=num_src,

@@ -23,6 +23,35 @@ def ref_fused_sample(graph: CSCGraph, seeds: jnp.ndarray, fanout: int,
     return samples, build_indptr(valid)
 
 
+def ref_windowed_fused_sample(graph: CSCGraph, seeds: jnp.ndarray,
+                              fanout: int, salt, window: int):
+    """Window-clamped oracle for kernels.fused_sample.
+
+    The kernel streams at most ``window`` neighbors per seed into VMEM, so
+    hub draws are uniform over the *first* ``window`` entries of the
+    in-edge list.  This oracle truncates every neighbor list to ``window``
+    and reruns the exact reference draw — the kernel must match it
+    bit-for-bit — and also returns the expected ``overflow_count``.
+    """
+    import numpy as np
+
+    indptr = np.asarray(graph.indptr)
+    indices = np.asarray(graph.indices)
+    deg = np.diff(indptr)
+    wdeg = np.minimum(deg, window)
+    windptr = np.zeros_like(indptr)
+    np.cumsum(wdeg, out=windptr[1:])
+    pos_in_row = np.arange(indices.size) - np.repeat(indptr[:-1], deg)
+    windices = indices[pos_in_row < np.repeat(wdeg, deg)]
+
+    truncated = CSCGraph(indptr=jnp.asarray(windptr, jnp.int32),
+                         indices=jnp.asarray(windices, jnp.int32))
+    samples, r = ref_fused_sample(truncated, seeds, fanout, salt)
+    s_np = np.asarray(seeds)
+    overflow = int((deg[s_np[s_np >= 0]] > window).sum())
+    return samples, r, overflow
+
+
 def ref_feature_gather(ids: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     """Oracle for kernels.feature_gather: table[ids], zero rows for -1."""
     rows = table[jnp.clip(ids, 0)]

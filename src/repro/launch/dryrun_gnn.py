@@ -119,6 +119,8 @@ def main():
             "scheme": scheme, "workers": W,
             "executor": "shard_map", "prefetch_depth": 0,
             "rounds_traced": counter.rounds,
+            "sampling_rounds_traced": counter.sampling_rounds,
+            "feature_rounds_traced": counter.feature_rounds,
             "expected_rounds": spec.expected_rounds,
             "collective_counts": coll["counts"],
             "collective_bytes_per_device": coll["total_bytes"],

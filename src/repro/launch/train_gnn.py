@@ -6,6 +6,8 @@ host-placeholder) devices.
       --scheme hybrid+fused --epochs 3
   PYTHONPATH=src python -m repro.launch.train_gnn --devices 4 \
       --scheme hybrid --cache-capacity 4096 --shard-map --prefetch-depth 1
+  PYTHONPATH=src python -m repro.launch.train_gnn --devices 4 \
+      --scheme "hybrid_partial(0.25)" --cache-policy frequency
 """
 import argparse
 
@@ -15,10 +17,16 @@ def main():
     ap.add_argument("--devices", type=int, default=8,
                     help="workers (host placeholder devices on CPU)")
     ap.add_argument("--scheme", default="hybrid+fused",
-                    choices=["vanilla", "hybrid", "hybrid+fused"])
+                    help="legacy string (vanilla | hybrid | hybrid+fused) "
+                         "or any registered placement scheme, e.g. "
+                         "'hybrid_partial(0.25)' for degree-aware partial "
+                         "replication")
     ap.add_argument("--cache-capacity", type=int, default=0,
                     help="per-worker hot-remote-feature cache entries "
                          "(0 = off); composes with any scheme")
+    ap.add_argument("--cache-policy", default="degree",
+                    help="cache-construction policy registry name "
+                         "(degree | frequency)")
     ap.add_argument("--prefetch-depth", type=int, default=0,
                     help="double-buffered prefetch depth: overlap step "
                          "k's sampling/feature all_to_all with step k-1's "
@@ -56,11 +64,19 @@ def main():
     spec = PipelineSpec.from_scheme(
         args.scheme, num_parts=args.devices, fanouts=cfg.fanouts,
         cache_capacity=args.cache_capacity,
+        cache_policy=args.cache_policy,
         executor="shard_map" if args.shard_map else "vmap",
         prefetch_depth=args.prefetch_depth)
     pipe = Pipeline.build(ds.graph, ds.features, ds.labels, spec)
     print(f"partitioned into {args.devices}: "
           f"edge-cut {pipe.edge_cut_fraction:.1%}")
+    if pipe.placement is not None \
+            and hasattr(pipe.placement, "replicated_edge_fraction"):
+        print(f"partial replication: "
+              f"{pipe.placement.replicated_edge_fraction:.1%} of edges "
+              f"replicated, expected rounds/step "
+              f"{pipe.expected_rounds_estimate:.2f} "
+              f"(hybrid=2, vanilla={2 * cfg.num_layers})")
 
     def loss_fn(p, mfgs, h_src, labels, valid):
         return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
@@ -83,10 +99,15 @@ def main():
                 print(f"scheme={args.scheme} executor={spec.executor} "
                       f"prefetch={args.prefetch_depth}: "
                       f"{pipe.counter.rounds} comm rounds/step "
-                      f"(vanilla=2L={2*cfg.num_layers}, hybrid=2)")
+                      f"({pipe.counter.sampling_rounds} sampling + "
+                      f"{pipe.counter.feature_rounds} feature; "
+                      f"vanilla=2L={2*cfg.num_layers}, hybrid=2)")
         jax.block_until_ready(loss)
         msg = (f"epoch {epoch}: loss {float(loss):.4f} "
                f"rounds/step {pipe.counter.rounds} "
+               f"utilized-KB/step "
+               f"{float(metrics['sampling_utilized_bytes'])/1024:.0f}s+"
+               f"{float(metrics['feature_utilized_bytes'])/1024:.0f}f "
                f"time {time.time()-t0:.2f}s")
         if args.cache_capacity:
             msg += f" cache-hit {float(metrics['cache_hit_rate']):.1%}"

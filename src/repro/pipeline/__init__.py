@@ -9,11 +9,16 @@ scheme and the sampling kernel are *synergistic* yet independent choices.
 This package makes that the shape of the code: five orthogonal components,
 each swappable without touching the others.
 
-  ``PlanSpec``      where data lives: "vanilla" (topology + features
-                    partitioned) or "hybrid" (topology replicated,
-                    features partitioned), plus an optional hot-remote
-                    feature cache (``cache_capacity``) and partitioner
-                    balance slacks.
+  ``PlanSpec``      where data lives: a *placement-scheme registry name*
+                    (``repro.core.placement``) — "vanilla" (topology +
+                    features partitioned), "hybrid" (topology replicated,
+                    features partitioned), "hybrid_partial" (top-``frac``
+                    highest-degree in-edge lists replicated, vanilla
+                    exchange fallback for the cold rest), or any entry
+                    third parties add with ``register_scheme`` — plus an
+                    optional hot-remote feature cache (``cache_capacity``
+                    built by the ``cache_policy`` registry entry: "degree"
+                    or "frequency") and partitioner balance slacks.
   ``SamplerSpec``   how a level is sampled: fanouts + a *level-backend
                     name* resolved through the registry in
                     ``repro.core.sampler`` ("reference", "unfused",
@@ -65,9 +70,18 @@ Migration from the seed API
 ``repro.core.dist.make_worker_step`` and
 ``repro.core.cache.build_degree_caches`` still work but emit
 ``DeprecationWarning`` — placement, kernel, cache, and executor choices
-all route through this package now, so new schemes (cached-vanilla,
-degree-aware hybrid, ...) land as registry entries instead of new forks.
+all route through this package now, and new schemes land as
+``register_scheme`` registry entries instead of new forks.  Code that
+imported the ``VanillaPlan`` / ``HybridPlan`` dataclasses from
+``repro.core.partition`` directly should migrate to
+``repro.core.placement.resolve_scheme(name).build(layout)`` (the old
+dataclasses remain as thin legacy containers).
 """
+from repro.core.cache import (available_cache_policies,
+                              register_cache_policy, resolve_cache_policy)
+from repro.core.placement import (PlacementPlan, PlacementScheme,
+                                  available_schemes, register_scheme,
+                                  resolve_scheme)
 from repro.pipeline.executor import (ShardMapExecutor, VmapExecutor,
                                      available_executors, register_executor,
                                      resolve_executor)
@@ -84,6 +98,10 @@ __all__ = [
     "Pipeline", "PipelineSpec", "PlanSpec", "SamplerSpec", "PrefetchSpec",
     "VmapExecutor", "ShardMapExecutor",
     "register_executor", "resolve_executor", "available_executors",
+    "PlacementScheme", "PlacementPlan",
+    "register_scheme", "resolve_scheme", "available_schemes",
+    "register_cache_policy", "resolve_cache_policy",
+    "available_cache_policies",
     "PreparedBatch", "SeedStream", "SyncDriver", "DoubleBufferDriver",
     "register_prefetcher", "resolve_prefetcher", "available_prefetchers",
 ]

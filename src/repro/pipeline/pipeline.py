@@ -31,10 +31,15 @@ class Pipeline:
     spec:              the ``PipelineSpec`` this pipeline was built from.
     layout:            relabeled topology + ownership metadata.
     shards:            per-worker data (stacked on the worker axis).
-    graph_replicated:  the replicated topology (hybrid scheme), else None.
-    cache:             stacked ``FeatureCache`` when cache_capacity > 0.
-    counter:           trace-time communication-round counter; filled the
-                       first time a step traces.
+    graph_replicated:  the fully-replicated topology (hybrid scheme), else
+                       None (partial replication lives on ``placement``).
+    cache:             stacked ``FeatureCache`` when cache_capacity > 0
+                       (built by the spec'd ``cache_policy``).
+    counter:           trace-time communication-round counter (sampling vs
+                       feature categories); filled the first time a step
+                       traces.
+    placement:         the ``PlacementPlan`` built by the spec'd scheme —
+                       sampling and round accounting dispatch through it.
     edge_cut_fraction: fraction of edges crossing partitions (computed
                        lazily on first access).
     """
@@ -44,6 +49,7 @@ class Pipeline:
     graph_replicated: CSCGraph | None
     cache: "FeatureCache | None"                    # noqa: F821
     counter: dist.RoundCounter
+    placement: "PlacementPlan | None" = None        # noqa: F821
     _edge_cut: float | None = None
 
     # ---------------------------------------------------------------- build
@@ -74,9 +80,15 @@ class Pipeline:
     def from_layout(cls, layout, spec: PipelineSpec) -> "Pipeline":
         """Assemble a pipeline over an existing ``PartitionLayout``
         (lets several specs — e.g. scheme ablations — share one
-        partitioning)."""
-        from repro.core.cache import degree_caches
-        from repro.core.partition import build_vanilla
+        partitioning).
+
+        Placement and cache construction both resolve by registry name:
+        the spec'd ``PlanSpec.scheme`` builds the ``PlacementPlan``
+        (replicated topology / hot subgraph / local slices), and the
+        spec'd ``PlanSpec.cache_policy`` builds the feature cache.
+        """
+        from repro.core.cache import resolve_cache_policy
+        from repro.core.placement import resolve_scheme
 
         plan = spec.plan
         if layout.num_parts != plan.num_parts:
@@ -84,18 +96,9 @@ class Pipeline:
                 f"layout has {layout.num_parts} parts, spec asks for "
                 f"{plan.num_parts}")
 
-        if plan.scheme == "vanilla":
-            vplan = build_vanilla(layout)
-            local_indptr = vplan.local_indptr
-            local_indices = vplan.local_indices
-            graph_replicated = None
-        else:
-            # hybrid workers never touch the local CSC; keep placeholders
-            # so the shard pytree has a leading worker axis everywhere
-            P = plan.num_parts
-            local_indptr = jnp.zeros((P, 2), jnp.int32)
-            local_indices = jnp.full((P, 1), -1, jnp.int32)
-            graph_replicated = layout.graph
+        scheme = resolve_scheme(plan.scheme, frac=plan.replicate_frac)
+        placement = scheme.build(layout)
+        local_indptr, local_indices = placement.shard_topology()
 
         shards = dist.WorkerShard(features=layout.features,
                                   labels=layout.labels,
@@ -104,11 +107,15 @@ class Pipeline:
 
         cache = None
         if plan.cache_capacity > 0:
-            cache = degree_caches(layout, capacity=plan.cache_capacity)
+            policy = resolve_cache_policy(plan.cache_policy)
+            cache = policy(layout, plan.cache_capacity,
+                           fanouts=spec.sampler.fanouts,
+                           seed=plan.partition_seed)
 
         return cls(spec=spec, layout=layout, shards=shards,
-                   graph_replicated=graph_replicated, cache=cache,
-                   counter=dist.RoundCounter())
+                   graph_replicated=placement.replicated_graph,
+                   cache=cache, counter=dist.RoundCounter(),
+                   placement=placement)
 
     # ------------------------------------------------------------- programs
 
@@ -134,7 +141,7 @@ class Pipeline:
             fanouts=sampler.fanouts, loss_fn=loss_fn, scheme=plan.scheme,
             graph_replicated=self.graph_replicated,
             backend=sampler.backend, counter=self.counter,
-            use_cache=self.cache is not None)
+            use_cache=self.cache is not None, plan=self.placement)
 
     def make_prepare_consume(self, loss_fn, *, counted: bool = True):
         """Build the per-worker *prepare* / *consume* halves of the step —
@@ -165,7 +172,7 @@ class Pipeline:
             graph_replicated=self.graph_replicated,
             backend=sampler.backend,
             counter=self.counter if counted else None,
-            features=self.spec.prefetch.features)
+            features=self.spec.prefetch.features, plan=self.placement)
 
     def step_fn(self, loss_fn, executor=None):
         """Bind the fused step to the spec'd executor.
@@ -286,7 +293,24 @@ class Pipeline:
 
     @property
     def expected_rounds(self) -> int:
+        """Structural (trace-time) all_to_all rounds per step, from the
+        placement plan's own accounting (vanilla = 2L, hybrid = 2,
+        hybrid_partial = 2L unless replication is complete)."""
+        if self.placement is not None:
+            return self.placement.trace_rounds(self.spec.sampler.num_layers)
         return self.spec.expected_rounds
+
+    @property
+    def expected_rounds_estimate(self) -> float:
+        """Data-dependent estimate of *utilized* rounds per step: feature
+        rounds (2) + the scheme's expected sampling rounds.  Equals the
+        structural count for vanilla/hybrid; for ``hybrid_partial`` it
+        lands strictly between 2 and 2L in proportion to the cold request
+        mass of the actual graph."""
+        if self.placement is not None:
+            return self.placement.expected_rounds(
+                self.spec.sampler.num_layers)
+        return float(self.spec.expected_rounds)
 
     @property
     def num_parts(self) -> int:

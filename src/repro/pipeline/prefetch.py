@@ -70,6 +70,12 @@ class PreparedBatch:
         (batch,) bool mask of non-padding seeds.
     hits : jnp.ndarray
         () int32 feature-cache hit count (0 when no cache / not prefetched).
+    comm : dict
+        Utilized communication bytes this worker contributed, per round
+        category: ``{"sampling_utilized_bytes": f32,
+        "feature_utilized_bytes": f32}`` (the valid-payload counterpart of
+        the ``RoundCounter``'s capacity accounting; feature bytes are
+        filled in the consume half when the fetch was not prefetched).
 
     Examples
     --------
@@ -82,10 +88,11 @@ class PreparedBatch:
     seed_labels: jnp.ndarray
     seed_valid: jnp.ndarray
     hits: jnp.ndarray
+    comm: Any = None
 
     def tree_flatten(self):
         return (self.mfgs, self.h_src, self.seed_labels, self.seed_valid,
-                self.hits), None
+                self.hits, self.comm), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -104,13 +111,19 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
                          level_fn: Callable | None = None,
                          counter: dist.RoundCounter | None = None,
                          vanilla_fused: bool | None = None,
-                         features: bool = True):
+                         features: bool = True,
+                         plan=None):
     """Build the per-worker *prepare* / *consume* halves of the step program.
 
     This is the prefetch boundary: ``consume(params, shard,
     prepare(shard, seeds, salt, cache), cache)`` is op-for-op the fused
     program ``repro.pipeline.worker.make_worker_step`` builds (which is
     implemented as exactly that composition).
+
+    Sampling dispatches through the placement-scheme registry
+    (``repro.core.placement``): ``plan`` is a ``PlacementPlan`` whose
+    scheme owns the per-level program; when ``plan`` is omitted, one is
+    built from the legacy ``(scheme, graph_replicated)`` pair.
 
     Parameters
     ----------
@@ -120,6 +133,9 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
     features : bool, default True
         Whether the feature ``exchange`` / cache lookup belongs to the
         prepare half (True) or stays in the consume half (False).
+    plan : repro.core.placement.PlacementPlan, optional
+        Pre-built placement plan (takes precedence over ``scheme`` /
+        ``graph_replicated``).
 
     Returns
     -------
@@ -129,10 +145,11 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
         Both must run under the named worker axis ``dist.AXIS`` (vmap or
         shard_map); ``cache`` is ``None`` when no feature cache is attached.
     """
-    if scheme not in ("vanilla", "hybrid"):
-        raise ValueError(f"unknown scheme {scheme!r}")
-    if scheme == "hybrid" and graph_replicated is None:
-        raise ValueError("hybrid scheme needs the replicated topology")
+    from repro.core.placement import plan_from_legacy
+
+    if plan is None:
+        plan = plan_from_legacy(scheme, graph_replicated=graph_replicated,
+                                offsets=offsets, num_parts=num_parts)
     if backend is not None and level_fn is not None:
         raise ValueError("pass either backend or level_fn, not both")
     if level_fn is None:
@@ -140,6 +157,8 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
         level_fn = resolve_backend(backend)
     if vanilla_fused is None:
         vanilla_fused = backend is not None and backend != "unfused"
+
+    row_bytes_of = lambda feats: 4.0 + feats.shape[1] * feats.dtype.itemsize
 
     def _fetch(src, shard, cache):
         if cache is not None:
@@ -149,14 +168,18 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
                                 counter)
         return h, jnp.zeros((), jnp.int32)
 
+    def _feature_bytes(src, hits, shard):
+        # utilized feature volume: ids out + rows back for every valid
+        # source node that missed the cache
+        misses = (jnp.sum((src >= 0).astype(jnp.float32))
+                  - hits.astype(jnp.float32))
+        return misses * row_bytes_of(shard.features)
+
     def prepare(shard: dist.WorkerShard, seeds, salt, cache=None):
-        if scheme == "hybrid":
-            mfgs = dist.hybrid_sample(graph_replicated, seeds, fanouts,
-                                      salt, level_fn=level_fn)
-        else:
-            mfgs = dist.vanilla_sample(shard, offsets, num_parts, seeds,
-                                       fanouts, salt, counter,
-                                       fused=vanilla_fused)
+        mfgs, samp_bytes = plan.sample(shard, seeds, fanouts, salt,
+                                       level_fn=level_fn,
+                                       fused=vanilla_fused,
+                                       counter=counter)
         me = lax.axis_index(dist.AXIS)
         local_seed = jnp.clip(seeds - offsets[me], 0,
                               shard.labels.shape[0] - 1)
@@ -164,19 +187,26 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
         seed_valid = seeds >= 0
         if features:
             h_src, hits = _fetch(mfgs[-1].src_nodes, shard, cache)
+            feat_bytes = _feature_bytes(mfgs[-1].src_nodes, hits, shard)
         else:
             h_src, hits = None, jnp.zeros((), jnp.int32)
+            feat_bytes = jnp.zeros((), jnp.float32)
+        comm = {"sampling_utilized_bytes": samp_bytes,
+                "feature_utilized_bytes": feat_bytes}
         return PreparedBatch(mfgs=tuple(mfgs), h_src=h_src,
                              seed_labels=seed_labels, seed_valid=seed_valid,
-                             hits=hits)
+                             hits=hits, comm=comm)
 
     def consume(params, shard: dist.WorkerShard, batch: PreparedBatch,
                 cache=None):
         mfgs = list(batch.mfgs)
+        comm = dict(batch.comm)
         if batch.h_src is not None:
             h_src, hits = batch.h_src, batch.hits
         else:
             h_src, hits = _fetch(mfgs[-1].src_nodes, shard, cache)
+            comm["feature_utilized_bytes"] = _feature_bytes(
+                mfgs[-1].src_nodes, hits, shard)
 
         def objective(p):
             return loss_fn(p, mfgs, h_src, batch.seed_labels,
@@ -186,8 +216,15 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
         grads = lax.pmean(grads, dist.AXIS)
         loss = lax.pmean(loss, dist.AXIS)
         hit_rate = hits / jnp.maximum(jnp.sum(mfgs[-1].src_nodes >= 0), 1)
-        metrics = {"cache_hit_rate": lax.pmean(
-            hit_rate.astype(jnp.float32), dist.AXIS)}
+        metrics = {
+            "cache_hit_rate": lax.pmean(hit_rate.astype(jnp.float32),
+                                        dist.AXIS),
+            # totals across the worker axis (the fabric-wide volume)
+            "sampling_utilized_bytes": lax.psum(
+                comm["sampling_utilized_bytes"], dist.AXIS),
+            "feature_utilized_bytes": lax.psum(
+                comm["feature_utilized_bytes"], dist.AXIS),
+        }
         return loss, grads, metrics
 
     return prepare, consume

@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import dataclasses
 
-SCHEMES = ("vanilla", "hybrid")
 LEGACY_SCHEMES = ("vanilla", "hybrid", "hybrid+fused")
 SEED_STREAMS = ("counter", "fold")
 
@@ -29,11 +28,25 @@ SEED_STREAMS = ("counter", "fold")
 class PlanSpec:
     """Partitioning & placement plan (paper §3.3 + the §5 cache).
 
-    scheme:         "vanilla" (topology + features partitioned) or
-                    "hybrid" (topology replicated, features partitioned).
+    scheme:         placement-scheme registry name
+                    (``repro.core.placement``): "vanilla" (topology +
+                    features partitioned), "hybrid" (topology replicated,
+                    features partitioned), "hybrid_partial" (top-``frac``
+                    highest-degree in-edge lists replicated, vanilla
+                    exchange fallback for the cold rest), or any
+                    third-party entry.  The inline parameterized form
+                    ``"hybrid_partial(0.25)"`` normalizes to
+                    ``scheme="hybrid_partial", replicate_frac=0.25``.
+    replicate_frac: replication fraction for parameterized schemes
+                    (required by "hybrid_partial"; must be None otherwise).
     cache_capacity: per-worker hot-remote-feature cache entries; 0 = off.
-                    The cache composes with EITHER scheme (it is a stage of
+                    The cache composes with EVERY scheme (it is a stage of
                     the feature fetch, not a fork of the sampler).
+    cache_policy:   cache-construction registry name
+                    (``repro.core.cache``): "degree" (static top-K by
+                    in-degree) or "frequency" (top-K by observed access
+                    frequency over a short trace of the actual sampler
+                    hash stream).
     node_slack / labeled_slack: partitioner balance targets (labeled_slack
                     defaults to node_slack when None).
     """
@@ -43,17 +56,42 @@ class PlanSpec:
     node_slack: float = 1.05
     labeled_slack: float | None = None
     partition_seed: int = 0
+    cache_policy: str = "degree"
+    replicate_frac: float | None = None
 
     def __post_init__(self):
-        if self.scheme not in SCHEMES:
+        from repro.core.cache import available_cache_policies
+        from repro.core.placement import available_schemes, parse_scheme_name
+
+        base, inline = parse_scheme_name(self.scheme)
+        if inline is not None:
+            if self.replicate_frac is not None \
+                    and float(self.replicate_frac) != inline:
+                raise ValueError(
+                    f"conflicting replication fractions: scheme "
+                    f"{self.scheme!r} vs replicate_frac="
+                    f"{self.replicate_frac}")
+            object.__setattr__(self, "scheme", base)
+            object.__setattr__(self, "replicate_frac", inline)
+        if base not in available_schemes():
             raise ValueError(
-                f"unknown scheme {self.scheme!r}; valid: {SCHEMES} "
-                f"(legacy 'hybrid+fused' = scheme 'hybrid' + backend "
-                f"'fused_pallas'; see PipelineSpec.from_scheme)")
+                f"unknown scheme {self.scheme!r}; valid: "
+                f"{available_schemes()} (legacy 'hybrid+fused' = scheme "
+                f"'hybrid' + backend 'fused_pallas'; see "
+                f"PipelineSpec.from_scheme)")
+        # instantiating validates scheme-specific parameters (e.g.
+        # hybrid_partial requires replicate_frac in [0, 1]; vanilla/hybrid
+        # reject one)
+        from repro.core.placement import resolve_scheme
+        resolve_scheme(base, frac=self.replicate_frac)
         if self.num_parts < 1:
             raise ValueError(f"num_parts must be >= 1, got {self.num_parts}")
         if self.cache_capacity < 0:
             raise ValueError("cache_capacity must be >= 0")
+        if self.cache_policy not in available_cache_policies():
+            raise ValueError(
+                f"unknown cache policy {self.cache_policy!r}; valid: "
+                f"{available_cache_policies()}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,11 +212,17 @@ class PipelineSpec:
 
     @property
     def expected_rounds(self) -> int:
-        """Paper §3.3 accounting: hybrid = 2 (features only); vanilla =
-        2(L-1) sampling rounds + 2 feature rounds = 2L."""
-        if self.plan.scheme == "hybrid":
-            return 2
-        return 2 * self.sampler.num_layers
+        """Structural (trace-time) round count from the placement scheme's
+        own accounting: hybrid = 2 (features only); vanilla = 2(L-1)
+        sampling rounds + 2 feature rounds = 2L; hybrid_partial keeps the
+        vanilla structure unless the replication is complete.  (For the
+        data-dependent *utilized*-round estimate see
+        ``Pipeline.expected_rounds_estimate``.)"""
+        from repro.core.placement import resolve_scheme
+
+        scheme = resolve_scheme(self.plan.scheme,
+                                frac=self.plan.replicate_frac)
+        return scheme.trace_sampling_rounds(self.sampler.num_layers) + 2
 
     @classmethod
     def from_scheme(cls, scheme: str, *, num_parts: int,
@@ -187,27 +231,44 @@ class PipelineSpec:
                     fused_backend: str = "fused_pallas",
                     unfused_backend: str = "unfused",
                     partition_seed: int = 0,
-                    prefetch_depth: int = 0) -> "PipelineSpec":
-        """Parse a legacy scheme string into a spec.
+                    prefetch_depth: int = 0,
+                    cache_policy: str = "degree") -> "PipelineSpec":
+        """Parse a legacy scheme string — or any registered placement-scheme
+        name — into a spec.
 
-          vanilla       -> scheme=vanilla, backend=unfused_backend
-          hybrid        -> scheme=hybrid,  backend=unfused_backend
-          hybrid+fused  -> scheme=hybrid,  backend=fused_backend
+          vanilla                -> scheme=vanilla, backend=unfused_backend
+          hybrid                 -> scheme=hybrid,  backend=unfused_backend
+          hybrid+fused           -> scheme=hybrid,  backend=fused_backend
+          hybrid_partial(0.25)   -> scheme=hybrid_partial,
+                                    replicate_frac=0.25,
+                                    backend=unfused_backend
+          <registered name>      -> passed through to ``PlanSpec``
 
         ``fused_backend`` defaults to the Pallas kernel; benchmarks that
         time the *algorithm* rather than the interpret-mode kernel pass
         ``fused_backend="reference"``.  ``prefetch_depth`` attaches a
         default ``PrefetchSpec`` (0 = synchronous).
         """
-        if scheme not in LEGACY_SCHEMES:
-            raise ValueError(f"unknown scheme {scheme!r}; "
-                             f"valid: {LEGACY_SCHEMES}")
-        placement = "hybrid" if scheme.startswith("hybrid") else "vanilla"
-        backend = fused_backend if scheme == "hybrid+fused" \
-            else unfused_backend
+        from repro.core.placement import available_schemes, parse_scheme_name
+
+        if scheme in LEGACY_SCHEMES:
+            placement = "hybrid" if scheme.startswith("hybrid") \
+                else "vanilla"
+            backend = fused_backend if scheme == "hybrid+fused" \
+                else unfused_backend
+        else:
+            base, _ = parse_scheme_name(scheme)
+            if base not in available_schemes():
+                extras = tuple(s for s in available_schemes()
+                               if s not in LEGACY_SCHEMES)
+                raise ValueError(f"unknown scheme {scheme!r}; "
+                                 f"valid: {LEGACY_SCHEMES + extras}")
+            placement = scheme          # PlanSpec parses any inline frac
+            backend = unfused_backend
         return cls(
             plan=PlanSpec(num_parts=num_parts, scheme=placement,
                           cache_capacity=cache_capacity,
+                          cache_policy=cache_policy,
                           partition_seed=partition_seed),
             sampler=SamplerSpec(fanouts=tuple(fanouts), backend=backend),
             executor=executor,

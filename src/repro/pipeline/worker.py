@@ -41,30 +41,37 @@ def make_worker_step(*, offsets: jnp.ndarray, num_parts: int,
                      level_fn: Callable | None = None,
                      counter: dist.RoundCounter | None = None,
                      use_cache: bool = False,
-                     vanilla_fused: bool | None = None):
+                     vanilla_fused: bool | None = None,
+                     plan=None):
     """Build the per-worker program for any (scheme, backend, cache) combo.
 
     loss_fn(params, mfgs, h_src, seed_labels, seed_valid) -> scalar loss.
 
-    scheme:  "vanilla" (partitioned topology, 2 rounds per lower level) or
-             "hybrid" (replicated topology, local sampling).
+    scheme:  placement-scheme registry name ("vanilla" = partitioned
+             topology with 2 rounds per lower level, "hybrid" = replicated
+             topology with local sampling); schemes that need layout-built
+             replicated state (e.g. "hybrid_partial") must be passed as a
+             ``plan`` instead.
     backend: level-backend registry name (default "reference");
              ``level_fn`` passes a kernel directly instead — mutually
              exclusive with ``backend``.
     use_cache: when True the returned step takes a trailing
              ``FeatureCache`` argument, served as a stage of the feature
              fetch (rows bit-identical either way).
-    vanilla_fused: for the vanilla scheme, whether level construction uses
-             the fused path (True) or pays the DGL-style COO->CSC passes
-             (False).  Defaults to ``backend != "unfused"`` when resolving
-             by name, and to False (the conservative baseline) when a raw
-             ``level_fn`` is supplied.
+    vanilla_fused: for partitioned-protocol schemes, whether level
+             construction uses the fused path (True) or pays the DGL-style
+             COO->CSC passes (False).  Defaults to ``backend != "unfused"``
+             when resolving by name, and to False (the conservative
+             baseline) when a raw ``level_fn`` is supplied.
+    plan:    a ``repro.core.placement.PlacementPlan`` — takes precedence
+             over ``scheme`` / ``graph_replicated`` (the pipeline passes
+             the plan it built).
     """
     prepare, consume = make_prepare_consume(
         offsets=offsets, num_parts=num_parts, fanouts=fanouts,
         loss_fn=loss_fn, scheme=scheme, graph_replicated=graph_replicated,
         backend=backend, level_fn=level_fn, counter=counter,
-        vanilla_fused=vanilla_fused, features=True)
+        vanilla_fused=vanilla_fused, features=True, plan=plan)
 
     def _body(params, shard: dist.WorkerShard, seeds, salt, cache):
         batch = prepare(shard, seeds, salt, cache)

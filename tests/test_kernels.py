@@ -10,7 +10,8 @@ from repro.core.sampler import sample_mfgs, sample_level
 from repro.data.synthetic_graph import make_power_law_graph
 from repro.kernels.fused_sample import fused_sample
 from repro.kernels.ops import fused_sample_level
-from repro.kernels.ref import ref_fused_sample, ref_mean_aggregate
+from repro.kernels.ref import (ref_fused_sample, ref_mean_aggregate,
+                               ref_windowed_fused_sample)
 from repro.kernels.sage_aggregate import sage_aggregate
 
 
@@ -30,17 +31,18 @@ def test_fused_sample_matches_oracle(graph, fanout, n_seeds):
     rng = np.random.default_rng(fanout * 100 + n_seeds)
     seeds = jnp.asarray(rng.choice(graph.num_nodes, n_seeds, replace=False)
                         .astype(np.int32))
-    s_k, r_k = fused_sample(graph.indptr, graph.indices, seeds,
-                            jnp.uint32(9), fanout=fanout, window=512)
+    s_k, r_k, ovf = fused_sample(graph.indptr, graph.indices, seeds,
+                                 jnp.uint32(9), fanout=fanout, window=512)
     s_r, r_r = ref_fused_sample(graph, seeds, fanout, 9)
     np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
     np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_r))
+    assert int(ovf) == 0          # window 512 covers every degree here
 
 
 def test_fused_sample_padded_seeds(graph):
     seeds = jnp.array([5, -1, 9, -1, 0], jnp.int32)
-    s_k, r_k = fused_sample(graph.indptr, graph.indices, seeds,
-                            jnp.uint32(3), fanout=4, window=512)
+    s_k, r_k, _ = fused_sample(graph.indptr, graph.indices, seeds,
+                               jnp.uint32(3), fanout=4, window=512)
     s_r, r_r = ref_fused_sample(graph, seeds, 4, 3)
     np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
     np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_r))
@@ -52,11 +54,35 @@ def test_fused_sample_property(graph, fanout, salt):
     rng = np.random.default_rng(salt % 991)
     seeds = jnp.asarray(rng.choice(graph.num_nodes, 6, replace=False)
                         .astype(np.int32))
-    s_k, r_k = fused_sample(graph.indptr, graph.indices, seeds,
-                            jnp.uint32(salt), fanout=fanout, window=512)
+    s_k, r_k, _ = fused_sample(graph.indptr, graph.indices, seeds,
+                               jnp.uint32(salt), fanout=fanout, window=512)
     s_r, r_r = ref_fused_sample(graph, seeds, fanout, salt)
     np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
     np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_r))
+
+
+def test_fused_sample_hub_window_overflow(graph):
+    """Degrees above the window must draw uniformly from the *visible*
+    neighbor set (bit-equal to a window-truncated reference) and be
+    counted in overflow_count — not silently biased onto the last column
+    (the old ``col = min(col, window-1)`` clamp)."""
+    deg = np.asarray(graph.degrees())
+    window = 8
+    hubs = np.nonzero(deg > window)[0]
+    assert hubs.size > 0, "fixture graph needs hubs wider than the window"
+    seeds = jnp.asarray(
+        np.concatenate([hubs[:8], np.nonzero(deg <= window)[0][:4]])
+        .astype(np.int32))
+
+    for fanout, salt in ((4, 7), (16, 123)):
+        s_k, r_k, ovf = fused_sample(graph.indptr, graph.indices, seeds,
+                                     jnp.uint32(salt), fanout=fanout,
+                                     window=window)
+        s_r, r_r, ovf_r = ref_windowed_fused_sample(graph, seeds, fanout,
+                                                    salt, window)
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_r))
+        assert int(ovf) == ovf_r > 0
 
 
 def test_fused_level_equals_reference_level(graph):

@@ -1,0 +1,370 @@
+"""Placement-scheme registry + cache-policy registry: bit-equivalence of
+minibatches across schemes x cache policies x executors, trace-time round
+accounting (vanilla=2L, hybrid=2, partial in [2, 2L]) including under
+prefetch, the data-dependent expected-round interpolation of
+``hybrid_partial``, and spec parsing of parameterized scheme names."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cache import (available_cache_policies, frequency_caches,
+                              resolve_cache_policy)
+from repro.core.partition import build_layout, partition_graph
+from repro.core.placement import (HybridPartialScheme, available_schemes,
+                                  parse_scheme_name, resolve_scheme)
+from repro.data.synthetic_graph import make_power_law_graph
+from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+from repro.pipeline import (Pipeline, PipelineSpec, PlanSpec, PrefetchSpec,
+                            SamplerSpec)
+
+P_ = 4
+L_ = 3
+SCHEMES = ("vanilla", "hybrid", "hybrid_partial(0.5)")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = make_power_law_graph(1200, 6, num_features=10, num_classes=5,
+                              seed=0)
+    assign = partition_graph(ds.graph, P_, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P_)
+    cfg = GNNConfig(in_dim=10, hidden_dim=12, num_classes=5, num_layers=L_,
+                    fanouts=(4, 3, 3), dropout=0.0)
+    params = init_gnn_params(jax.random.key(1), cfg)
+    return ds, layout, cfg, params
+
+
+def _spec(scheme="hybrid", cache=0, policy="degree", depth=0,
+          fanouts=(4, 3, 3)):
+    return PipelineSpec(
+        plan=PlanSpec(num_parts=P_, scheme=scheme, cache_capacity=cache,
+                      cache_policy=policy),
+        sampler=SamplerSpec(fanouts=fanouts, backend="unfused"),
+        prefetch=PrefetchSpec(depth=depth))
+
+
+def _loss_fn(cfg):
+    def loss_fn(p, mfgs, h_src, labels, valid):
+        return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
+    return loss_fn
+
+
+def _assert_trees_equal(a, b, msg=""):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=msg)
+
+
+# --------------------------------------------------------------------------
+# registries
+# --------------------------------------------------------------------------
+
+def test_scheme_registry_builtins():
+    assert {"vanilla", "hybrid", "hybrid_partial"} <= set(available_schemes())
+    assert resolve_scheme("vanilla").name == "vanilla"
+    scheme = resolve_scheme("hybrid_partial(0.25)")
+    assert isinstance(scheme, HybridPartialScheme) and scheme.frac == 0.25
+    with pytest.raises(KeyError, match="no-such-scheme"):
+        resolve_scheme("no-such-scheme")
+
+
+def test_scheme_name_parsing_and_conflicts():
+    assert parse_scheme_name("hybrid") == ("hybrid", None)
+    assert parse_scheme_name("hybrid_partial(0.5)") == ("hybrid_partial", 0.5)
+    with pytest.raises(ValueError, match="conflicting"):
+        resolve_scheme("hybrid_partial(0.5)", frac=0.25)
+    with pytest.raises(ValueError, match="replication fraction"):
+        resolve_scheme("hybrid_partial")          # frac required
+    with pytest.raises(ValueError, match="no replication fraction"):
+        resolve_scheme("hybrid", frac=0.5)
+    with pytest.raises(ValueError, match="in \\[0, 1\\]"):
+        resolve_scheme("hybrid_partial(1.5)")
+
+
+def test_planspec_parses_inline_frac():
+    spec = PlanSpec(num_parts=4, scheme="hybrid_partial(0.3)")
+    assert spec.scheme == "hybrid_partial" and spec.replicate_frac == 0.3
+    with pytest.raises(ValueError, match="conflicting"):
+        PlanSpec(num_parts=4, scheme="hybrid_partial(0.3)",
+                 replicate_frac=0.7)
+    with pytest.raises(ValueError):
+        PlanSpec(num_parts=4, scheme="hybrid_partial")   # frac required
+    with pytest.raises(ValueError, match="cache policy"):
+        PlanSpec(num_parts=4, cache_policy="lru")
+
+
+def test_cache_policy_registry():
+    assert {"degree", "frequency"} <= set(available_cache_policies())
+    assert callable(resolve_cache_policy("degree"))
+    with pytest.raises(KeyError, match="belady"):
+        resolve_cache_policy("belady")
+
+
+def test_third_party_scheme_plugs_in(world):
+    """A registered scheme is selectable through PlanSpec by name."""
+    from repro.core.placement import VanillaScheme, register_scheme
+
+    class EchoScheme(VanillaScheme):
+        name = "test_echo"
+
+    register_scheme("test_echo",
+                    lambda frac=None: EchoScheme(), overwrite=True)
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec(scheme="test_echo"))
+    assert pipe.placement.scheme.name == "test_echo"
+    loss, _, _ = pipe.step_fn(_loss_fn(cfg))(params, pipe.seeds(8, 1),
+                                             jnp.uint32(3))
+    assert np.isfinite(float(loss))
+
+
+# --------------------------------------------------------------------------
+# bit-equivalence: schemes x cache policies (vmap executor)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cache,policy", [
+    (0, "degree"), (128, "degree"), (128, "frequency"),
+])
+def test_schemes_bit_identical_across_cache_policies(world, cache, policy):
+    """All three placement schemes produce identical losses AND gradients
+    for the same seeds/salt, with or without a cache, under either cache
+    policy (the §4.2 equivalence extended to partial replication)."""
+    ds, layout, cfg, params = world
+    out = {}
+    for scheme in SCHEMES:
+        pipe = Pipeline.from_layout(layout, _spec(scheme=scheme,
+                                                  cache=cache,
+                                                  policy=policy))
+        fn = pipe.step_fn(_loss_fn(cfg))
+        loss, grads, metrics = fn(params, pipe.seeds(16, 2), jnp.uint32(7))
+        out[scheme] = (float(loss), grads, metrics)
+
+    ref_loss, ref_grads, _ = out[SCHEMES[0]]
+    for name, (loss, grads, _) in out.items():
+        assert loss == ref_loss, name
+        _assert_trees_equal(ref_grads, grads, msg=name)
+    if cache:
+        for name, (_, _, metrics) in out.items():
+            assert float(metrics["cache_hit_rate"]) > 0.0, (name, policy)
+
+
+def test_partial_frac_one_matches_hybrid_exactly(world):
+    """frac=1.0 degenerates to the hybrid program: same minibatches, same
+    loss/grads, same 2-round structure."""
+    ds, layout, cfg, params = world
+    out = {}
+    for scheme in ("hybrid", "hybrid_partial(1.0)"):
+        pipe = Pipeline.from_layout(layout, _spec(scheme=scheme))
+        fn = pipe.step_fn(_loss_fn(cfg))
+        loss, grads, _ = fn(params, pipe.seeds(16, 3), jnp.uint32(11))
+        out[scheme] = (float(loss), grads, pipe.counter.rounds,
+                       pipe.expected_rounds)
+    lh, gh, rh, eh = out["hybrid"]
+    lp, gp, rp, ep = out["hybrid_partial(1.0)"]
+    assert lp == lh and rp == rh == 2 and ep == eh == 2
+    _assert_trees_equal(gh, gp)
+
+
+def test_loss_trajectory_unchanged_across_schemes(world):
+    """Multi-step training: identical loss trajectories and final params
+    for hybrid vs hybrid_partial (frac < 1) vs vanilla."""
+    from repro.optim import init_opt_state
+    ds, layout, cfg, params = world
+    trajs = {}
+    for scheme in SCHEMES:
+        pipe = Pipeline.from_layout(layout, _spec(scheme=scheme))
+        driver = pipe.train_driver(_loss_fn(cfg), batch=16, lr=0.01)
+        p, opt = params, init_opt_state(params, kind="adamw")
+        losses = []
+        for k in range(3):
+            p, opt, loss, _ = driver.step(p, opt, k)
+            losses.append(float(loss))
+        trajs[scheme] = (losses, p)
+    ref_losses, ref_p = trajs[SCHEMES[0]]
+    for name, (losses, p) in trajs.items():
+        assert losses == ref_losses, name
+        _assert_trees_equal(ref_p, p, msg=name)
+
+
+# --------------------------------------------------------------------------
+# round accounting: structure + data-dependent estimate + utilized bytes
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme,lo,hi", [
+    ("vanilla", 2 * L_, 2 * L_),
+    ("hybrid", 2, 2),
+    ("hybrid_partial(0.5)", 2, 2 * L_),
+    ("hybrid_partial(1.0)", 2, 2),
+])
+def test_trace_round_counts(world, scheme, lo, hi):
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec(scheme=scheme))
+    fn = pipe.step_fn(_loss_fn(cfg))
+    fn(params, pipe.seeds(8, 1), jnp.uint32(5))       # trace exactly once
+    assert lo <= pipe.counter.rounds <= hi
+    assert pipe.counter.rounds == \
+        pipe.counter.sampling_rounds + pipe.counter.feature_rounds
+    assert pipe.counter.feature_rounds == 2
+    assert lo <= pipe.expected_rounds <= hi
+
+
+@pytest.mark.parametrize("scheme", SCHEMES + ("hybrid_partial(1.0)",))
+def test_trace_round_counts_under_prefetch(world, scheme):
+    """Round accounting reflects one steady-state step at depth >= 1 too
+    (warmup traces use the uncounted prepare twin)."""
+    from repro.optim import init_opt_state
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec(scheme=scheme, depth=1))
+    driver = pipe.train_driver(_loss_fn(cfg), batch=8, lr=0.01)
+    p, opt = params, init_opt_state(params, kind="adamw")
+    for k in range(2):
+        p, opt, _, _ = driver.step(p, opt, k)
+    expected = pipe.expected_rounds
+    assert pipe.counter.rounds == expected
+    assert 2 <= expected <= 2 * L_
+
+
+def test_partial_expected_rounds_strictly_between(world):
+    """The data-dependent estimate interpolates: for 0 < frac < 1 the
+    expected (utilized) rounds land strictly between hybrid (2) and
+    vanilla (2L), monotonically decreasing in frac."""
+    ds, layout, cfg, params = world
+    estimates = []
+    for frac in (0.1, 0.5, 0.9):
+        pipe = Pipeline.from_layout(
+            layout, _spec(scheme=f"hybrid_partial({frac})"))
+        est = pipe.expected_rounds_estimate
+        assert 2.0 < est < 2.0 * L_, (frac, est)
+        estimates.append(est)
+        plan = pipe.placement
+        assert 0.0 < plan.cold_source_fraction < 1.0
+        assert 0 < plan.replicated_edges < layout.graph.num_edges
+    assert estimates == sorted(estimates, reverse=True)
+    # degenerate ends agree with the structural counts
+    assert Pipeline.from_layout(
+        layout, _spec(scheme="hybrid_partial(1.0)")
+    ).expected_rounds_estimate == 2.0
+    assert Pipeline.from_layout(
+        layout, _spec(scheme="hybrid_partial(0.0)")
+    ).expected_rounds_estimate == 2.0 * L_
+
+
+def test_utilized_bytes_interpolate(world):
+    """Partial replication's utilized sampling volume sits strictly
+    between hybrid (0) and vanilla; feature volume is unchanged."""
+    ds, layout, cfg, params = world
+    vol = {}
+    for scheme in SCHEMES:
+        pipe = Pipeline.from_layout(layout, _spec(scheme=scheme))
+        fn = pipe.step_fn(_loss_fn(cfg))
+        _, _, metrics = fn(params, pipe.seeds(16, 2), jnp.uint32(7))
+        vol[scheme] = (float(metrics["sampling_utilized_bytes"]),
+                       float(metrics["feature_utilized_bytes"]))
+    assert vol["hybrid"][0] == 0.0
+    assert 0.0 < vol["hybrid_partial(0.5)"][0] < vol["vanilla"][0]
+    feats = {v[1] for v in vol.values()}
+    assert len(feats) == 1 and feats.pop() > 0.0
+
+
+# --------------------------------------------------------------------------
+# frequency cache policy
+# --------------------------------------------------------------------------
+
+def test_frequency_cache_is_valid_and_remote_only(world):
+    ds, layout, cfg, params = world
+    cache = frequency_caches(layout, 64, fanouts=cfg.fanouts)
+    ids = np.asarray(cache.ids)
+    offsets = np.asarray(layout.offsets)
+    sentinel = np.int32(2 ** 31 - 1)
+    assert ids.shape == (P_, 64)
+    for p in range(P_):
+        row = ids[p]
+        assert (np.diff(row) >= 0).all()               # sorted for lookup
+        valid = row[row != sentinel]
+        owner = np.searchsorted(offsets, valid, side="right") - 1
+        assert (owner != p).all()                      # remote only
+
+
+def test_frequency_policy_beats_or_matches_nothing_cached(world):
+    """Traced-frequency cache serves a real hit rate on the stream it was
+    traced from (same deterministic seeds/salt)."""
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec(cache=128,
+                                              policy="frequency"))
+    fn = pipe.step_fn(_loss_fn(cfg))
+    # salt 0/batch 64 is inside the policy's default trace prefix
+    loss, _, metrics = fn(params, pipe.seeds(64, 0), jnp.uint32(0))
+    assert float(metrics["cache_hit_rate"]) > 0.0
+    assert np.isfinite(float(loss))
+
+
+# --------------------------------------------------------------------------
+# shard_map executor (subprocess: placeholder devices at jax init)
+# --------------------------------------------------------------------------
+
+SHARD_MAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core.partition import build_layout, partition_graph
+    from repro.data.synthetic_graph import make_power_law_graph
+    from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+    from repro.pipeline import Pipeline, PipelineSpec, PlanSpec, SamplerSpec
+
+    P = 2
+    ds = make_power_law_graph(800, 6, num_features=8, num_classes=4, seed=0)
+    assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
+    cfg = GNNConfig(in_dim=8, hidden_dim=8, num_classes=4, num_layers=2,
+                    fanouts=(3, 3), dropout=0.0)
+    def loss_fn(p, mfgs, h, y, v):
+        return gnn_loss(p, mfgs, h, y, v, cfg)
+    params = init_gnn_params(jax.random.key(0), cfg)
+
+    out = {}
+    for scheme in ("vanilla", "hybrid", "hybrid_partial(0.5)"):
+        for policy, cache in (("degree", 64), ("frequency", 64)):
+            ref = None
+            for executor in ("vmap", "shard_map"):
+                spec = PipelineSpec(
+                    plan=PlanSpec(num_parts=P, scheme=scheme,
+                                  cache_capacity=cache,
+                                  cache_policy=policy),
+                    sampler=SamplerSpec(fanouts=cfg.fanouts,
+                                        backend="unfused"),
+                    executor=executor)
+                pipe = Pipeline.from_layout(layout, spec)
+                fn = pipe.step_fn(loss_fn)
+                loss, grads, m = fn(params, pipe.seeds(8, 1),
+                                    jnp.uint32(5))
+                out[(scheme, policy, executor)] = float(loss)
+                if ref is None:
+                    ref = (float(loss), grads)
+                else:
+                    assert float(loss) == ref[0], (scheme, policy, executor)
+                    for a, b in zip(jax.tree.leaves(ref[1]),
+                                    jax.tree.leaves(grads)):
+                        np.testing.assert_array_equal(np.asarray(a),
+                                                      np.asarray(b))
+    losses = set(out.values())
+    assert len(losses) == 1, out     # every cell of the matrix agrees
+    print("PLACEMENT_EXECUTOR_MATRIX_OK")
+""")
+
+
+def test_scheme_matrix_bit_identical_shard_map_subprocess():
+    """schemes x cache policies x {vmap, shard_map}: every cell produces
+    the identical loss/gradients (subprocess so the main process keeps
+    its single-device view)."""
+    r = subprocess.run([sys.executable, "-c", SHARD_MAP_SCRIPT],
+                       capture_output=True, text=True, env=ENV,
+                       timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "PLACEMENT_EXECUTOR_MATRIX_OK" in r.stdout
