@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint bench-smoke bench dev-install docs-check
+.PHONY: test lint bench-smoke bench data-smoke dev-install docs-check
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -16,9 +16,16 @@ docs-check:
 	$(PYTHON) tools/check_docs.py
 
 # quick benchmark sanity (minutes not hours): the §5 cache figure + the
-# placement-scheme sweep, which exercises every registry dispatch path
+# placement-scheme and graph-source sweeps, which exercise every registry
+# dispatch path
 bench-smoke:
-	$(PYTHON) -m benchmarks.run cache schemes
+	$(PYTHON) -m benchmarks.run cache schemes datasets
+
+# graph-source subsystem smoke: generate every synthetic family at toy
+# scale, round-trip save/load exactly, re-check determinism + streaming
+# ingest (CI runs this alongside bench-smoke)
+data-smoke:
+	$(PYTHON) -m repro.data.smoke
 
 # the full paper-figure sweep
 bench:

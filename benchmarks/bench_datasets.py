@@ -1,0 +1,117 @@
+"""Scheme x graph-source sweep: the skew win the data subsystem exists
+to demonstrate.
+
+For each synthetic family (``repro.data`` source registry) at equal
+target nnz, partitions once, then builds every placement scheme on the
+shared layout and reports the data-dependent ``expected_rounds_estimate``
+alongside the dataset's skew columns.  The headline claim: degree-aware
+partial replication (``hybrid_partial(0.1)``) buys almost nothing on a
+uniform graph (top-degree nodes own ~10% of edges) but collapses the
+expected rounds toward hybrid's 2 on powerlaw/rmat graphs, where the
+same 10% hot set owns most of the edge mass.
+
+Writes one JSON record per (source, scheme) under
+``experiments/datasets`` for ``benchmarks.report``.
+
+  PYTHONPATH=src python -m benchmarks.run datasets
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import dataset_columns, emit
+from repro.core.partition import build_layout, partition_graph
+from repro.data import DataSpec, resolve_dataset
+from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+from repro.pipeline import Pipeline, PipelineSpec, PlanSpec, SamplerSpec
+
+P = 4
+SOURCES = ("uniform", "powerlaw(1.8)", "rmat(0.57,0.19,0.19,0.05)",
+           "sbm(8,0.9,0.1)")
+SCHEMES = ("vanilla", "hybrid", "hybrid_partial(0.1)")
+OUT_DIR = os.path.join("experiments", "datasets")
+
+
+def _tag(s: str) -> str:
+    return s.replace("(", "").replace(")", "").replace(".", "") \
+            .replace(",", "_")
+
+
+def main() -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    cfg = GNNConfig(in_dim=16, hidden_dim=16, num_classes=8, num_layers=3,
+                    fanouts=(5, 5, 5), dropout=0.0)
+    params = init_gnn_params(jax.random.key(0), cfg)
+    L = cfg.num_layers
+
+    def loss_fn(p, mfgs, h_src, labels, valid):
+        return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
+
+    partial_est = {}
+    for source in SOURCES:
+        ds = resolve_dataset(source, DataSpec(
+            source=source, num_nodes=3000, avg_degree=8,
+            num_features=16, num_classes=8, seed=0))
+        cols = dataset_columns(ds)
+        assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
+        layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
+
+        losses = set()
+        for scheme in SCHEMES:
+            spec = PipelineSpec(
+                plan=PlanSpec(num_parts=P, scheme=scheme),
+                sampler=SamplerSpec(fanouts=cfg.fanouts, backend="unfused"))
+            pipe = Pipeline.from_layout(layout, spec)
+            pipe.dataset = ds
+            step = jax.jit(pipe.step_fn(loss_fn))
+            loss, _, metrics = step(params, pipe.seeds(128, 1),
+                                    jnp.uint32(3))
+            losses.add(float(loss))
+            est = pipe.expected_rounds_estimate
+            if scheme.startswith("hybrid_partial"):
+                partial_est[source] = est
+
+            tag = f"{_tag(source)}/{_tag(scheme)}"
+            emit(f"datasets/{tag}/expected_rounds_estimate", est,
+                 f"skew={cols['degree_skew']} hybrid=2 vanilla={2 * L}")
+            emit(f"datasets/{tag}/sampling_utilized_bytes",
+                 float(metrics["sampling_utilized_bytes"]), "")
+
+            rec = {
+                "workload": "dataset-sweep", "source": source,
+                "scheme": scheme, "num_layers": L, "workers": P,
+                "expected_rounds_estimate": est,
+                "rounds_traced": pipe.counter.rounds,
+                "sampling_utilized_bytes":
+                    float(metrics["sampling_utilized_bytes"]),
+                "feature_utilized_bytes":
+                    float(metrics["feature_utilized_bytes"]),
+                "replicated_edge_fraction": getattr(
+                    pipe.placement, "replicated_edge_fraction",
+                    1.0 if scheme == "hybrid" else 0.0),
+                "loss": float(loss),
+                **cols,
+            }
+            out = os.path.join(OUT_DIR, f"dataset__{_tag(source)}__"
+                                        f"{_tag(scheme)}.json")
+            with open(out, "w") as f:
+                json.dump(rec, f, indent=1)
+
+        # bit-equivalence holds per dataset, across schemes
+        assert len(losses) == 1, f"{source}: schemes diverged: {losses}"
+
+    # the acceptance claim: skewed sources beat uniform at equal nnz
+    for skewed in ("powerlaw(1.8)", "rmat(0.57,0.19,0.19,0.05)"):
+        assert partial_est[skewed] < partial_est["uniform"], (
+            f"hybrid_partial(0.1) expected rounds on {skewed} "
+            f"({partial_est[skewed]:.2f}) should be strictly below "
+            f"uniform ({partial_est['uniform']:.2f})")
+    emit("datasets/skew_win",
+         partial_est["uniform"] - partial_est["powerlaw(1.8)"],
+         "uniform minus powerlaw expected rounds (hybrid_partial(0.1))")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import dataset_label, emit
 from repro.core.partition import build_layout, partition_graph
 from repro.data.synthetic_graph import products_like
 from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
@@ -24,6 +24,10 @@ SCHEMES = ("vanilla", "hybrid", "hybrid+fused", "hybrid_partial(0.25)")
 
 
 def run(ds, P, batch=256, steps=3):
+    # dataset identity + skew once per worker count: rows comparable
+    # across graph-source families
+    ds_tag = dataset_label(ds)
+    emit(f"fig6/P{P}/dataset", 0.0, ds_tag)
     assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
     layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
     cfg = GNNConfig(in_dim=ds.features.shape[1], hidden_dim=256,
@@ -55,10 +59,11 @@ def run(ds, P, batch=256, steps=3):
             jax.block_until_ready(jstep(params, seeds, jnp.uint32(s)))
         dt = (time.perf_counter() - t0) / steps
 
-        # label every row with the executor + prefetch depth that produced
-        # it, so A/B runs against other configs stay unambiguous
+        # label every row with the executor + prefetch depth + dataset
+        # that produced it, so A/B runs against other configs stay
+        # unambiguous
         label = (f"executor={spec.executor} "
-                 f"prefetch={spec.prefetch.depth}")
+                 f"prefetch={spec.prefetch.depth} {ds_tag}")
         emit(f"fig6/P{P}/{scheme}/step_time_us", dt * 1e6, label)
         emit(f"fig6/P{P}/{scheme}/comm_rounds", pipe.counter.rounds,
              f"per-step {pipe.counter.sampling_rounds}samp+"

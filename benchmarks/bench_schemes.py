@@ -21,7 +21,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import dataset_columns, dataset_label, emit
 from repro.core.partition import build_layout, partition_graph
 from repro.data.synthetic_graph import make_power_law_graph
 from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
@@ -36,6 +36,8 @@ OUT_DIR = os.path.join("experiments", "schemes")
 def main() -> None:
     ds = make_power_law_graph(3000, 8, num_features=16, num_classes=8,
                               seed=0)
+    ds_cols = dataset_columns(ds)
+    emit("schemes/dataset", 0.0, dataset_label(ds))
     assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
     layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
     cfg = GNNConfig(in_dim=16, hidden_dim=32, num_classes=8, num_layers=3,
@@ -89,7 +91,8 @@ def main() -> None:
             "feature_capacity_bytes": c.capacity_bytes("feature"),
             "replicated_edge_fraction": rep_frac,
             "loss": float(loss),
-        }
+            **ds_cols,      # dataset identity + skew: rows comparable
+        }                   # across graph-source families
         with open(os.path.join(OUT_DIR, f"scheme__{tag}.json"), "w") as f:
             json.dump(rec, f, indent=1)
 

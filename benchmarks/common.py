@@ -1,7 +1,27 @@
-"""Shared benchmark utilities: timing and CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, and the dataset
+columns (name, n, nnz, max/mean degree, skew) every JSON record carries
+so trajectories are comparable across graph-source families."""
 import time
 
 import jax
+
+
+def dataset_columns(ds) -> dict:
+    """Dataset identity + skew columns for benchmark JSON records
+    (``repro.data.stats`` is the single source of the numbers)."""
+    from repro.data.stats import dataset_stats
+
+    s = dataset_stats(ds)
+    return {k: s[k] for k in ("dataset", "num_nodes", "num_edges",
+                              "max_degree", "mean_degree", "degree_skew",
+                              "top1pct_edge_share")}
+
+
+def dataset_label(ds) -> str:
+    """Compact dataset tag for CSV ``derived`` columns."""
+    from repro.data.stats import dataset_stats, stats_label
+
+    return stats_label(dataset_stats(ds))
 
 
 def timeit(fn, *args, warmup=2, iters=5):

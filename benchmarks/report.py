@@ -2,10 +2,13 @@
 tables, plus the placement-scheme round table from
 experiments/schemes/*.json (written by ``benchmarks.bench_schemes``) —
 the data-dependent accounting of where ``hybrid_partial`` lands between
-hybrid's 2 and vanilla's 2L rounds.
+hybrid's 2 and vanilla's 2L rounds — and the dataset-sweep table from
+experiments/datasets/*.json (``benchmarks.bench_datasets``): expected
+rounds per scheme against each graph-source family's skew columns.
 
   PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun] \
-      [--schemes-dir experiments/schemes]
+      [--schemes-dir experiments/schemes] \
+      [--datasets-dir experiments/datasets]
 """
 import argparse
 import glob
@@ -60,14 +63,25 @@ def rounds_label(r):
     return f"{s}s+{f}f"
 
 
+def dataset_cols_label(r):
+    """Compact dataset identity + skew cell (records carry the columns
+    from ``benchmarks.common.dataset_columns``; old records show "-")."""
+    if "dataset" not in r:
+        return "-"
+    return (f"{r['dataset']} (n={r.get('num_nodes', '-')}, "
+            f"nnz={r.get('num_edges', '-')}, "
+            f"skew={r.get('degree_skew', '-')})")
+
+
 def schemes_table(recs):
     """Placement-scheme interpolation table (bench_schemes records):
     traced rounds (sampling + feature), the data-dependent expected-round
-    estimate, utilized bytes per category, and replicated-edge fraction."""
-    rows = ["| scheme | rounds traced | expected rounds (est) "
+    estimate, utilized bytes per category, replicated-edge fraction, and
+    the dataset the row was measured on."""
+    rows = ["| scheme | dataset | rounds traced | expected rounds (est) "
             "| utilized KB (samp/feat) | capacity KB (samp/feat) "
             "| replicated edges |",
-            "|---|---|---|---|---|---|"]
+            "|---|---|---|---|---|---|---|"]
     for r in recs:
         if r.get("workload") != "scheme-sweep":
             continue
@@ -76,12 +90,32 @@ def schemes_table(recs):
         cap = "-" if cap_s is None else \
             f"{cap_s/1024:.1f}/{cap_f/1024:.1f}"
         rows.append(
-            f"| {r['scheme']} | {rounds_label(r)} "
+            f"| {r['scheme']} | {dataset_cols_label(r)} "
+            f"| {rounds_label(r)} "
             f"| {r['expected_rounds_estimate']:.2f} "
             f"| {r['sampling_utilized_bytes']/1024:.1f}/"
             f"{r['feature_utilized_bytes']/1024:.1f} "
             f"| {cap} "
             f"| {100.0 * r['replicated_edge_fraction']:.1f}% |")
+    return "\n".join(rows)
+
+
+def datasets_table(recs):
+    """Dataset-sweep table (bench_datasets records): per graph-source
+    family x scheme, the expected utilized rounds next to the family's
+    degree-skew columns — the skew win at a glance."""
+    rows = ["| source | scheme | n | nnz | max deg | skew (cv) "
+            "| top-1% edge share | expected rounds (est) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("workload") != "dataset-sweep":
+            continue
+        rows.append(
+            f"| {r['source']} | {r['scheme']} | {r['num_nodes']} "
+            f"| {r['num_edges']} | {r['max_degree']} "
+            f"| {r['degree_skew']} "
+            f"| {100.0 * r['top1pct_edge_share']:.1f}% "
+            f"| {r['expected_rounds_estimate']:.2f} |")
     return "\n".join(rows)
 
 
@@ -134,6 +168,7 @@ def main():
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mesh", default="pod")
     ap.add_argument("--schemes-dir", default="experiments/schemes")
+    ap.add_argument("--datasets-dir", default="experiments/datasets")
     args = ap.parse_args()
     recs = load(args.dir)
     print(f"## Dry-run ({args.mesh})\n")
@@ -145,6 +180,11 @@ def main():
     if scheme_recs:
         print("\n## Placement schemes (rounds: hybrid=2 .. vanilla=2L)\n")
         print(schemes_table(scheme_recs))
+    ds_recs = load(args.datasets_dir) if os.path.isdir(args.datasets_dir) \
+        else []
+    if ds_recs:
+        print("\n## Graph sources (expected rounds vs skew, equal nnz)\n")
+        print(datasets_table(ds_recs))
 
 
 if __name__ == "__main__":

@@ -10,7 +10,7 @@ through jit / shard_map untouched.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import cached_property, partial
 
 import jax
 import jax.numpy as jnp
@@ -115,6 +115,90 @@ def csc_from_numpy_edges(dst: np.ndarray, src: np.ndarray,
     np.cumsum(counts, out=indptr[1:])
     return CSCGraph(indptr=jnp.asarray(indptr, jnp.int32),
                     indices=jnp.asarray(src_sorted, jnp.int32))
+
+
+class CSRView:
+    """Lazy host-side companion views of a CSC graph.
+
+    Every host-side consumer of a ``CSCGraph`` used to rebuild the same two
+    derived structures inline: the per-edge destination expansion
+    (``np.repeat(np.arange(n), np.diff(indptr))``) and the out-adjacency
+    (CSR transpose, via a stable argsort of the column indices).  This
+    object computes each exactly once, on first access, so callers that
+    need only ``dsts`` (``edge_cut``, ``build_layout``) never pay for the
+    argsort.
+
+    Attributes
+    ----------
+    dsts : np.ndarray
+        (nnz,) destination node per edge, in CSC edge order.
+    indptr, indices : np.ndarray
+        Out-adjacency: ``indices[indptr[v]:indptr[v+1]]`` are the
+        out-neighbors (destinations) of node ``v``.  Edge order within a
+        row follows the CSC's stable order, bit-compatible with the
+        historical inline construction in ``partition_graph``.
+    """
+
+    def __init__(self, indptr: np.ndarray, indices: np.ndarray):
+        self.csc_indptr = np.asarray(indptr)
+        self.csc_indices = np.asarray(indices)
+
+    @property
+    def num_nodes(self) -> int:
+        return self.csc_indptr.shape[0] - 1
+
+    @cached_property
+    def dsts(self) -> np.ndarray:
+        return np.repeat(np.arange(self.num_nodes),
+                         np.diff(self.csc_indptr))
+
+    @cached_property
+    def indptr(self) -> np.ndarray:
+        counts = np.bincount(self.csc_indices, minlength=self.num_nodes)
+        out = np.zeros(self.num_nodes + 1, np.int64)
+        np.cumsum(counts, out=out[1:])
+        return out
+
+    @cached_property
+    def indices(self) -> np.ndarray:
+        order = np.argsort(self.csc_indices, kind="stable")
+        return self.dsts[order]
+
+
+def csr_view(g: CSCGraph) -> CSRView:
+    """Lazy host-side ``CSRView`` (dsts expansion + out-adjacency) of
+    ``g``, memoized on the graph object: partitioning, ``edge_cut``, and
+    ``build_layout`` called on the same ``CSCGraph`` share one set of
+    derived arrays instead of re-expanding O(nnz) each."""
+    view = getattr(g, "_csr_view_cache", None)
+    if view is None:
+        view = CSRView(g.indptr, g.indices)
+        # CSCGraph is frozen; stash the cache without widening the pytree
+        # (tree_flatten only ever returns the declared children)
+        object.__setattr__(g, "_csr_view_cache", view)
+    return view
+
+
+def csr_view_release(g: CSCGraph) -> None:
+    """Drop ``g``'s memoized ``CSRView`` so its O(nnz) derived arrays can
+    be collected; the next ``csr_view(g)`` recomputes.  Long-lived graphs
+    (a pipeline keeps its relabeled topology for the whole run) call this
+    once their host-side build chain is done."""
+    if getattr(g, "_csr_view_cache", None) is not None:
+        object.__setattr__(g, "_csr_view_cache", None)
+
+
+def mix64(x: np.ndarray) -> np.ndarray:
+    """SplitMix64 finalizer, vectorized (uint64 in/out, wraps silently).
+
+    The repo's single host-side deterministic hash: per-worker seed
+    drawing (``repro.core.partition.seeds_per_worker``) and the split
+    policies (``repro.data.splits``) share this one definition so their
+    draws can never drift apart.
+    """
+    x = (x ^ (x >> 30)) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> 27)) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> 31)
 
 
 def validate_csc(g: CSCGraph) -> None:

@@ -32,12 +32,73 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import CSCGraph, csc_from_numpy_edges
+from repro.core.graph import (CSCGraph, csc_from_numpy_edges, csr_view,
+                              mix64)
 
 
 # --------------------------------------------------------------------------
 # assignment
 # --------------------------------------------------------------------------
+
+class _LDGState:
+    """Mutable state of the linear deterministic greedy placer, shared by
+    the in-memory (``partition_graph``) and streaming
+    (``partition_graph_streaming``) partitioners: per-partition loads,
+    capacities, and the growing ``assign`` vector."""
+
+    def __init__(self, num_nodes: int, num_parts: int,
+                 labeled: np.ndarray, slack: float,
+                 labeled_slack: float | None):
+        if labeled_slack is None:
+            labeled_slack = slack
+        self.num_parts = num_parts
+        self.labeled = labeled
+        self.cap_nodes = slack * num_nodes / num_parts
+        self.cap_labeled = max(1.0,
+                               labeled_slack * labeled.sum() / num_parts)
+        self.assign = np.full(num_nodes, -1, np.int32)
+        self.load_nodes = np.zeros(num_parts)
+        self.load_labeled = np.zeros(num_parts)
+
+    def place(self, v: int, nb: np.ndarray) -> int:
+        """Score node ``v`` against its (possibly partial) neighbor list
+        ``nb`` and commit it to the winning partition.
+
+        LDG gain: count of already-assigned neighbors per partition,
+        discounted by fullness; over-capacity partitions are hard-
+        forbidden (node capacity always, labeled capacity when ``v`` is
+        labeled)."""
+        score = np.zeros(self.num_parts)
+        if nb.size:
+            anb = self.assign[nb]
+            anb = anb[anb >= 0]
+            if anb.size:
+                score = np.bincount(anb, minlength=self.num_parts
+                                    ).astype(float)
+        penalty = 1.0 - self.load_nodes / self.cap_nodes
+        full = self.load_nodes >= self.cap_nodes
+        if self.labeled[v]:
+            full = full | (self.load_labeled >= self.cap_labeled)
+        gain = np.where(full, -np.inf,
+                        (score + 1e-3) * np.maximum(penalty, 1e-6))
+        if np.isfinite(gain).any():
+            p = int(np.argmax(gain))
+        else:
+            # the joint node+labeled caps can be infeasible for this
+            # placement order (streaming orders especially: every
+            # node-open partition may be labeled-full).  Node capacity
+            # alone is always satisfiable (slack > 1 and loads sum to
+            # fewer than n), so fall back to node-open partitions and
+            # take the least labeled-loaded one — labeled overflow stays
+            # minimal instead of silently piling onto partition 0.
+            ok = self.load_nodes < self.cap_nodes
+            p = int(np.argmin(np.where(ok, self.load_labeled, np.inf)))
+        self.assign[v] = p
+        self.load_nodes[p] += 1
+        if self.labeled[v]:
+            self.load_labeled[p] += 1
+        return p
+
 
 def partition_graph(graph: CSCGraph, num_parts: int,
                     labeled_mask: np.ndarray, seed: int = 0,
@@ -55,49 +116,72 @@ def partition_graph(graph: CSCGraph, num_parts: int,
     n = graph.num_nodes
     labeled = np.asarray(labeled_mask).astype(bool)
 
-    if labeled_slack is None:
-        labeled_slack = slack
-    cap_nodes = slack * n / num_parts
-    cap_labeled = max(1.0, labeled_slack * labeled.sum() / num_parts)
-
-    # out-neighbors give better BFS locality for edge-cut; build CSR view
-    out_deg = np.bincount(indices, minlength=n)
-    out_indptr = np.zeros(n + 1, np.int64)
-    np.cumsum(out_deg, out=out_indptr[1:])
-    # scatter: edge (dst=k, src=indices[e]) -> out edge src->dst, vectorized
-    dsts = np.repeat(np.arange(n), np.diff(indptr))
-    order = np.argsort(indices, kind="stable")
-    out_indices = dsts[order]
+    # out-neighbors give better BFS locality for edge-cut
+    view = csr_view(graph)
+    out_indptr, out_indices = view.indptr, view.indices
 
     rng = np.random.default_rng(seed)
     order = _bfs_order(out_indptr, out_indices, n, rng)
 
-    assign = np.full(n, -1, np.int32)
-    load_nodes = np.zeros(num_parts)
-    load_labeled = np.zeros(num_parts)
-
+    state = _LDGState(n, num_parts, labeled, slack, labeled_slack)
     for v in order:
         # count already-assigned neighbors (both directions) per partition
         nb = np.concatenate([indices[indptr[v]:indptr[v + 1]],
                              out_indices[out_indptr[v]:out_indptr[v + 1]]])
-        score = np.zeros(num_parts)
-        if nb.size:
-            anb = assign[nb]
-            anb = anb[anb >= 0]
-            if anb.size:
-                score = np.bincount(anb, minlength=num_parts).astype(float)
-        # LDG: discount by fullness; hard-forbid over-capacity partitions
-        penalty = 1.0 - load_nodes / cap_nodes
-        full = load_nodes >= cap_nodes
-        if labeled[v]:
-            full = full | (load_labeled >= cap_labeled)
-        gain = np.where(full, -np.inf, (score + 1e-3) * np.maximum(penalty, 1e-6))
-        p = int(np.argmax(gain))
-        assign[v] = p
-        load_nodes[p] += 1
-        if labeled[v]:
-            load_labeled[p] += 1
-    return assign
+        state.place(v, nb)
+    return state.assign
+
+
+def partition_graph_streaming(edge_chunks, num_nodes: int, num_parts: int,
+                              labeled_mask: np.ndarray,
+                              slack: float = 1.05,
+                              labeled_slack: float | None = None
+                              ) -> np.ndarray:
+    """Single-pass LDG partitioning over an *edge stream* — for graphs
+    whose COO does not fit in memory as one array (the billion-edge ingest
+    path; see ``repro.data.ingest``).
+
+    ``edge_chunks`` yields ``(dst, src)`` int array pairs; each chunk is
+    processed with the same LDG scorer as ``partition_graph``
+    (``_LDGState.place``), but a node's neighbor evidence is limited to
+    the edges of the chunk in which it first appears (plus everything
+    already assigned) — the classic streaming trade-off.  Nodes never
+    touched by any edge are placed last by pure load balancing.
+
+    Same invariants as ``partition_graph``: every node assigned exactly
+    once and node loads within the slack cap; labeled-node loads honor
+    their cap whenever the placement order leaves it jointly feasible
+    (otherwise the overflow is kept minimal — see ``_LDGState.place``).
+    The result depends on chunk granularity (it is NOT bit-equal to the
+    in-memory partitioner), but both feed the identical downstream
+    ``build_layout``.
+    """
+    labeled = np.asarray(labeled_mask).astype(bool)
+    state = _LDGState(num_nodes, num_parts, labeled, slack, labeled_slack)
+
+    for dst, src in edge_chunks:
+        dst = np.asarray(dst, np.int64)
+        src = np.asarray(src, np.int64)
+        # chunk-local bidirectional adjacency: one CSR over concat(edges)
+        nodes = np.concatenate([dst, src])
+        peers = np.concatenate([src, dst])
+        order = np.argsort(nodes, kind="stable")
+        nodes_s, peers_s = nodes[order], peers[order]
+        uniq, starts = np.unique(nodes_s, return_index=True)
+        bounds = np.append(starts, nodes_s.size)
+        # place unassigned nodes in chunk first-appearance order
+        first = np.full(uniq.size, nodes.size, np.int64)
+        np.minimum.at(first, np.searchsorted(uniq, nodes), np.arange(nodes.size))
+        for i in np.argsort(first, kind="stable"):
+            v = int(uniq[i])
+            if state.assign[v] >= 0:
+                continue
+            state.place(v, peers_s[starts[i]:bounds[i + 1]])
+
+    empty = np.empty(0, np.int64)
+    for v in np.flatnonzero(state.assign < 0):
+        state.place(int(v), empty)       # isolated nodes: load balance only
+    return state.assign
 
 
 def _bfs_order(out_indptr, out_indices, n, rng):
@@ -126,9 +210,8 @@ def _bfs_order(out_indptr, out_indices, n, rng):
 
 def edge_cut(graph: CSCGraph, assign: np.ndarray) -> int:
     """Number of edges whose endpoints live in different partitions."""
-    indptr = np.asarray(graph.indptr)
     indices = np.asarray(graph.indices)
-    dsts = np.repeat(np.arange(graph.num_nodes), np.diff(indptr))
+    dsts = csr_view(graph).dsts
     return int(np.sum(assign[dsts] != assign[indices]))
 
 
@@ -193,9 +276,8 @@ def build_layout(graph: CSCGraph, features: np.ndarray, labels: np.ndarray,
     n_max = int(counts.max())
 
     # relabel edges
-    indptr = np.asarray(graph.indptr)
     indices = np.asarray(graph.indices)
-    dsts_old = np.repeat(np.arange(n), np.diff(indptr))
+    dsts_old = csr_view(graph).dsts
     new_dst = old_to_new[dsts_old].astype(np.int64)
     new_src = old_to_new[indices].astype(np.int64)
     new_graph = csc_from_numpy_edges(new_dst, new_src, n)
@@ -249,13 +331,6 @@ def build_hybrid(layout: PartitionLayout) -> HybridPlan:
     return HybridPlan(layout=layout)
 
 
-def _mix64(x: np.ndarray) -> np.ndarray:
-    """SplitMix64 finalizer, vectorized (uint64 in/out, wraps silently)."""
-    x = (x ^ (x >> 30)) * np.uint64(0xBF58476D1CE4E5B9)
-    x = (x ^ (x >> 27)) * np.uint64(0x94D049BB133111EB)
-    return x ^ (x >> 31)
-
-
 def seeds_per_worker(layout: PartitionLayout, batch: int,
                      epoch_salt: int) -> jnp.ndarray:
     """Each worker draws its minibatch from ITS OWN labeled nodes (paper §4:
@@ -278,7 +353,7 @@ def seeds_per_worker(layout: PartitionLayout, batch: int,
     gids = offsets[:-1, None] + np.arange(n_max, dtype=np.int64)[None, :]
     # fold the salt in Python-int space (arbitrary precision, then wrap)
     salt64 = np.uint64((int(epoch_salt) * 0x9E3779B97F4A7C15) % (2 ** 64))
-    key = _mix64(gids.astype(np.uint64) + salt64)
+    key = mix64(gids.astype(np.uint64) + salt64)
     key = np.where(labels >= 0, key, np.uint64(np.iinfo(np.uint64).max))
 
     m = min(batch, n_max)

@@ -1,0 +1,49 @@
+"""``repro.data`` — the graph-source subsystem.
+
+Where the other registries answer *how* to train (placement, kernels,
+executors, prefetch), this package answers *on what*: parameterized
+synthetic families with real degree distributions, a versioned on-disk
+dataset format with memory-mapped loading, deterministic split policies,
+and a chunked-edge ingest path for graphs too large for one in-memory
+COO.  ``Pipeline.build_from_source(source_or_path, spec)`` is the
+front door; see ``docs/datasets.md``.
+
+  Sources   ``register_source`` / ``resolve_source`` — "uniform",
+            "powerlaw(alpha)", "rmat(a,b,c,d)", "sbm(k,p_in,p_out)".
+  Storage   ``save_dataset`` / ``load_dataset`` (``repro.data/v1`` npz,
+            mmap'd members) + the ``repro.data.ogb`` converter stub.
+  Splits    ``register_split`` / ``resolve_split`` — "random(frac)",
+            "degree_stratified(frac)".
+  Ingest    ``iter_edge_chunks`` / ``stream_edges`` /
+            ``csc_from_edge_stream`` (+
+            ``repro.core.partition.partition_graph_streaming``).
+  Spec      ``DataSpec`` (rides on ``PipelineSpec``) +
+            ``resolve_dataset(source_or_path, data_spec)``.
+  Stats     ``dataset_stats`` / ``stats_label`` — the skew columns
+            benchmark records carry.
+"""
+from repro.data.dataset_io import (FORMAT_VERSION, load_dataset,
+                                   save_dataset)
+from repro.data.ingest import (csc_from_edge_stream, iter_edge_chunks,
+                               stream_edges)
+from repro.data.sources import (GraphSource, available_sources,
+                                parse_source_name, register_source,
+                                resolve_source)
+from repro.data.spec import DataSpec, resolve_dataset
+from repro.data.splits import (SplitPolicy, apply_split, available_splits,
+                               register_split, resolve_split)
+from repro.data.stats import dataset_stats, stats_label
+from repro.data.synthetic_graph import (GraphDataset, make_power_law_graph,
+                                        papers_like, products_like)
+
+__all__ = [
+    "DataSpec", "resolve_dataset",
+    "GraphSource", "register_source", "resolve_source",
+    "available_sources", "parse_source_name",
+    "save_dataset", "load_dataset", "FORMAT_VERSION",
+    "SplitPolicy", "register_split", "resolve_split", "available_splits",
+    "apply_split",
+    "iter_edge_chunks", "stream_edges", "csc_from_edge_stream",
+    "dataset_stats", "stats_label",
+    "GraphDataset", "make_power_law_graph", "products_like", "papers_like",
+]

@@ -1,0 +1,152 @@
+"""Versioned on-disk dataset format: one uncompressed ``.npz``.
+
+Layout (format ``repro.data/v1``)::
+
+    meta          uint8   JSON: {"format", "version", "name", "num_classes"}
+    indptr        int32   (n+1,)  CSC row pointers (paper's R vector)
+    indices       int32   (nnz,)  CSC column indices (paper's C vector)
+    features      float32 (n, D)
+    labels        int32   (n,)    -1 where unlabeled
+    labeled_mask  bool    (n,)    the split mask partitioning balances on
+
+``save_dataset`` writes with ``np.savez`` (ZIP_STORED, never deflate), so
+every member is a contiguous, page-aligned-enough ``.npy`` inside the
+archive — which is what lets ``load_dataset`` **memory-map** the big
+arrays straight out of the zip instead of reading them into RAM: we
+locate each member's data offset from the zip local-file header and hand
+it to ``np.memmap``.  Node-count-heavy graphs (papers100M has 111M
+nodes) then cost address space, not resident memory, and the chunked
+ingest path (``repro.data.ingest.stream_edges``) walks edges without
+ever materializing them all.  v1 inherits numpy's int32 CSC containers,
+so a single file tops out at 2^31-1 edges (``save_dataset`` refuses
+loudly rather than wrapping); a 64-bit member set is a format-version
+bump away.
+
+Round trips are exact: ``load_dataset(save_dataset(ds, p))`` compares
+array-equal to ``ds`` in every field (asserted by ``tests/test_data.py``
+and ``make data-smoke``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import zipfile
+
+import numpy as np
+
+from repro.core.graph import CSCGraph
+from repro.data.synthetic_graph import GraphDataset
+
+FORMAT_NAME = "repro.data"
+FORMAT_VERSION = 1
+_ARRAY_FIELDS = ("indptr", "indices", "features", "labels", "labeled_mask")
+
+
+def save_dataset(ds: GraphDataset, path: str) -> str:
+    """Write ``ds`` to ``path`` (``.npz`` appended if missing); returns
+    the actual path written."""
+    path = str(path)
+    if not path.endswith(".npz"):
+        path += ".npz"
+    nnz = int(np.asarray(ds.graph.indptr)[-1])
+    if nnz > np.iinfo(np.int32).max:
+        raise ValueError(
+            f"dataset has {nnz:,} edges, beyond the int32 limit of "
+            f"format v{FORMAT_VERSION}")
+    meta = json.dumps({
+        "format": FORMAT_NAME,
+        "version": FORMAT_VERSION,
+        "name": ds.name,
+        "num_classes": int(ds.num_classes),
+    })
+    labels = np.asarray(ds.labels, np.int32)
+    np.savez(path,
+             meta=np.frombuffer(meta.encode("utf-8"), dtype=np.uint8),
+             indptr=np.asarray(ds.graph.indptr, np.int32),
+             indices=np.asarray(ds.graph.indices, np.int32),
+             features=np.asarray(ds.features, np.float32),
+             labels=labels,
+             labeled_mask=labels >= 0)
+    return path
+
+
+def _mmap_npz_member(path: str, info: zipfile.ZipInfo):
+    """``np.memmap`` one stored (uncompressed) ``.npy`` member in place;
+    returns None when the member can't be mapped (compressed / exotic
+    header) so the caller falls back to a normal read."""
+    if info.compress_type != zipfile.ZIP_STORED:
+        return None
+    with open(path, "rb") as f:
+        f.seek(info.header_offset)
+        hdr = f.read(30)                       # zip local file header
+        if len(hdr) != 30 or hdr[:4] != b"PK\x03\x04":
+            return None
+        name_len = int.from_bytes(hdr[26:28], "little")
+        extra_len = int.from_bytes(hdr[28:30], "little")
+        f.seek(info.header_offset + 30 + name_len + extra_len)
+        try:
+            version = np.lib.format.read_magic(f)
+            if version == (1, 0):
+                shape, fortran, dtype = \
+                    np.lib.format.read_array_header_1_0(f)
+            elif version == (2, 0):
+                shape, fortran, dtype = \
+                    np.lib.format.read_array_header_2_0(f)
+            else:
+                return None
+        except ValueError:
+            return None
+        offset = f.tell()
+    if dtype.hasobject:
+        return None
+    return np.memmap(path, dtype=dtype, mode="r", offset=offset,
+                     shape=shape, order="F" if fortran else "C")
+
+
+def load_dataset(path: str, *, mmap: bool = True) -> GraphDataset:
+    """Load a ``repro.data`` dataset.
+
+    With ``mmap=True`` (default) the array members are memory-mapped
+    read-only from inside the archive; pass ``mmap=False`` to force an
+    eager in-RAM copy.  Raises ``ValueError`` on wrong/newer formats.
+    """
+    path = str(path)
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"no dataset at {path!r}")
+    with np.load(path, allow_pickle=False) as z:
+        if "meta" not in z.files:
+            raise ValueError(
+                f"{path!r} is not a {FORMAT_NAME} dataset (no meta member)")
+        meta = json.loads(bytes(z["meta"]).decode("utf-8"))
+        if meta.get("format") != FORMAT_NAME:
+            raise ValueError(f"{path!r}: unknown format "
+                             f"{meta.get('format')!r}")
+        if int(meta.get("version", 0)) > FORMAT_VERSION:
+            raise ValueError(
+                f"{path!r} is format version {meta['version']}, newer than "
+                f"this reader ({FORMAT_VERSION}); upgrade the code")
+        missing = [k for k in _ARRAY_FIELDS if k not in z.files]
+        if missing:
+            raise ValueError(f"{path!r} is missing members {missing}")
+        arrays = {}
+        if mmap:
+            with zipfile.ZipFile(path) as zf:
+                for k in _ARRAY_FIELDS:
+                    arrays[k] = _mmap_npz_member(path, zf.getinfo(k + ".npy"))
+        for k in _ARRAY_FIELDS:
+            if arrays.get(k) is None:
+                arrays[k] = z[k]
+
+    # the stored split mask doubles as an integrity check: it must agree
+    # with the labels it was derived from (one O(n) scan)
+    if not np.array_equal(np.asarray(arrays["labeled_mask"]),
+                          np.asarray(arrays["labels"]) >= 0):
+        raise ValueError(
+            f"{path!r}: labeled_mask disagrees with labels — corrupt or "
+            f"hand-edited file")
+
+    graph = CSCGraph(indptr=arrays["indptr"], indices=arrays["indices"])
+    return GraphDataset(graph=graph, features=arrays["features"],
+                        labels=arrays["labels"],
+                        num_classes=int(meta["num_classes"]),
+                        name=str(meta["name"]))

@@ -1,0 +1,149 @@
+"""Chunked-edge ingest: build CSC topology and partitions from edge
+*streams* instead of one in-memory COO.
+
+Billion-edge graphs (the paper's regime) do not fit as a single
+``(dst, src)`` array pair.  This module standardizes the streaming
+contract used by ``repro.core.partition.partition_graph_streaming`` and
+by the CSC builder below: an **edge stream** is anything that yields
+``(dst, src)`` pairs of equal-length integer arrays.  Because several
+consumers need more than one pass (counting, then filling), pass either
+a re-iterable (a list of chunks) or a zero-argument *factory* returning
+a fresh iterator per pass.
+
+Producers
+---------
+``iter_edge_chunks(graph, chunk_edges)``
+    Walk an in-memory ``CSCGraph``'s edges in CSC order, ``chunk_edges``
+    at a time (tests / re-chunking).
+``stream_edges(path, chunk_edges)``
+    Walk an on-disk ``repro.data`` dataset's edges chunk by chunk.  The
+    loader memory-maps ``indices``, so a chunk touches only its own
+    pages — the whole point of the mmap'd format.
+
+Consumer
+--------
+``csc_from_edge_stream(stream, num_nodes)``
+    Two-pass CSC construction (count, then scatter) whose peak memory is
+    ``O(num_nodes + nnz_out)`` with only one chunk of COO resident at a
+    time — and bit-identical to ``csc_from_numpy_edges`` on the
+    concatenated edges (stable within-destination order is preserved by
+    writing chunks in arrival order).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Iterator
+
+import numpy as np
+
+from repro.core.graph import CSCGraph, csr_view
+
+
+def _passes(stream) -> Callable[[], Iterable]:
+    """Normalize a stream argument into a fresh-iterator factory.
+
+    One-shot iterators (generators) are rejected rather than silently
+    buffered: ``list(stream)`` would materialize every chunk at once —
+    the exact memory blow-up this module exists to avoid."""
+    if callable(stream):
+        return stream
+    if isinstance(stream, (list, tuple)):
+        return lambda: iter(stream)
+    raise TypeError(
+        "stream must be a list/tuple of (dst, src) chunks or a "
+        "zero-argument factory returning a fresh iterator (two passes "
+        "are taken); a one-shot generator would have to be buffered "
+        "whole, defeating streaming — wrap it in a lambda, e.g. "
+        "csc_from_edge_stream(lambda: stream_edges(path), n)")
+
+
+def iter_edge_chunks(graph: CSCGraph, chunk_edges: int = 1 << 20
+                     ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Yield ``(dst, src)`` chunks of an in-memory CSC, in edge order."""
+    if chunk_edges < 1:
+        raise ValueError(f"chunk_edges must be >= 1, got {chunk_edges}")
+    indices = np.asarray(graph.indices)
+    dsts = csr_view(graph).dsts
+    for lo in range(0, indices.size, chunk_edges):
+        hi = min(lo + chunk_edges, indices.size)
+        yield dsts[lo:hi].astype(np.int64), indices[lo:hi].astype(np.int64)
+
+
+def stream_edges(source, chunk_edges: int = 1 << 20
+                 ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Yield ``(dst, src)`` chunks of an on-disk dataset without loading
+    the full edge list: ``indices`` stays memory-mapped and ``dst`` ids
+    are re-expanded per chunk from the (small) ``indptr``.
+
+    ``source`` is a dataset path or an already-loaded ``GraphDataset`` —
+    pass the loaded object when streaming more than once (e.g. the two
+    passes of ``csc_from_edge_stream``) so dataset resolution and its
+    integrity scan run once, not per pass.
+    """
+    from repro.data.dataset_io import load_dataset
+
+    if chunk_edges < 1:
+        raise ValueError(f"chunk_edges must be >= 1, got {chunk_edges}")
+    ds = source if hasattr(source, "graph") else \
+        load_dataset(source, mmap=True)
+    indptr = np.asarray(ds.graph.indptr, np.int64)
+    indices = ds.graph.indices                  # stays a memmap
+    nnz = int(indptr[-1])
+    for lo in range(0, max(nnz, 1), chunk_edges):
+        hi = min(lo + chunk_edges, nnz)
+        if hi <= lo:
+            return
+        # destinations of edge range [lo, hi): expand only the touched rows
+        row_lo = int(np.searchsorted(indptr, lo, side="right") - 1)
+        row_hi = int(np.searchsorted(indptr, hi, side="left"))
+        local_ptr = np.clip(indptr[row_lo:row_hi + 1], lo, hi) - lo
+        dst = np.repeat(np.arange(row_lo, row_hi, dtype=np.int64),
+                        np.diff(local_ptr))
+        yield dst, np.asarray(indices[lo:hi], np.int64)
+
+
+def csc_from_edge_stream(stream, num_nodes: int) -> CSCGraph:
+    """Two-pass streaming CSC construction.
+
+    ``stream`` is a list of ``(dst, src)`` chunks or a zero-argument
+    factory returning a fresh chunk iterator (two passes are taken).
+    Equivalent to ``csc_from_numpy_edges`` on the concatenated arrays:
+    pass 1 counts in-degrees, pass 2 scatters each chunk's sources into
+    its destinations' slots in arrival order (matching the stable sort).
+    """
+    make = _passes(stream)
+
+    counts = np.zeros(num_nodes, np.int64)
+    for dst, _ in make():
+        counts += np.bincount(np.asarray(dst, np.int64),
+                              minlength=num_nodes)
+    indptr = np.zeros(num_nodes + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    nnz = int(indptr[-1])
+    if nnz > np.iinfo(np.int32).max:
+        # the int32 CSC containers (and the on-disk v1 format) top out at
+        # 2^31-1 edges; refuse loudly instead of wrapping negative
+        raise ValueError(
+            f"edge stream has {nnz:,} edges, beyond the int32 CSC limit "
+            f"({np.iinfo(np.int32).max:,}); shard the graph first")
+
+    indices = np.empty(nnz, np.int32)
+    cursor = indptr[:-1].copy()                 # next free slot per row
+    for dst, src in make():
+        dst = np.asarray(dst, np.int64)
+        src = np.asarray(src, np.int64)
+        if dst.shape != src.shape:
+            raise ValueError("edge chunk dst/src length mismatch")
+        order = np.argsort(dst, kind="stable")
+        dst_s, src_s = dst[order], src[order]
+        uniq, starts = np.unique(dst_s, return_index=True)
+        seg_counts = np.diff(np.append(starts, dst_s.size))
+        # slot of each sorted edge: its row's cursor + rank within chunk
+        base = np.repeat(cursor[uniq], seg_counts)
+        rank = np.arange(dst_s.size) - np.repeat(starts, seg_counts)
+        indices[base + rank] = src_s.astype(np.int32)
+        cursor[uniq] += seg_counts
+
+    if not np.array_equal(cursor, indptr[1:]):
+        raise ValueError("edge stream changed between passes "
+                         "(counts != filled slots)")
+    return CSCGraph(indptr=indptr.astype(np.int32), indices=indices)

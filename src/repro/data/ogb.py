@@ -1,0 +1,79 @@
+"""OGB node-property dataset converter (optional dependency).
+
+Converts an ``ogb.nodeproppred`` dataset (ogbn-products, ogbn-arxiv,
+ogbn-papers100M, ...) into the ``repro.data`` on-disk format, so real
+graphs ride the same ``Pipeline.build_from_source(path, spec)`` entry as
+the synthetic families.  The ``ogb`` package (and its torch dependency)
+is NOT part of this repo's environment — everything here degrades to an
+actionable ``ImportError`` when it is missing, and nothing imports this
+module unless a conversion is requested.
+
+  PYTHONPATH=src python -m repro.data.ogb ogbn-arxiv --root ~/ogb \\
+      --out datasets/ogbn-arxiv.npz
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import csc_from_numpy_edges
+from repro.data.synthetic_graph import GraphDataset
+
+HAVE_OGB = True
+try:                                    # pragma: no cover - env-dependent
+    from ogb.nodeproppred import NodePropPredDataset  # noqa: F401
+except ImportError:                     # pragma: no cover - the usual case
+    HAVE_OGB = False
+
+
+def _require_ogb():
+    if not HAVE_OGB:
+        raise ImportError(
+            "converting OGB datasets needs the optional 'ogb' package "
+            "(pip install ogb) which this environment does not ship; "
+            "generate a synthetic stand-in instead, e.g. "
+            "Pipeline.build_from_source('powerlaw(1.8)', spec)")
+
+
+def from_ogb(name: str, root: str = "ogb-data") -> GraphDataset:
+    """Download/load OGB dataset ``name`` and convert to a
+    ``GraphDataset`` (train-split nodes keep labels; val/test are -1,
+    matching the repo's labeled-mask convention)."""
+    _require_ogb()
+    dataset = NodePropPredDataset(name=name, root=root)
+    graph_dict, node_labels = dataset[0]
+    split = dataset.get_idx_split()
+
+    n = int(graph_dict["num_nodes"])
+    src, dst = graph_dict["edge_index"]          # OGB: row 0 = src
+    graph = csc_from_numpy_edges(np.asarray(dst, np.int64),
+                                 np.asarray(src, np.int64), n)
+
+    feats = np.asarray(graph_dict["node_feat"], np.float32)
+    labels = np.full(n, -1, np.int32)
+    train = np.asarray(split["train"], np.int64)
+    flat = np.asarray(node_labels).reshape(-1).astype(np.int32)
+    labels[train] = flat[train]
+    return GraphDataset(graph=graph, features=feats, labels=labels,
+                        num_classes=int(flat.max()) + 1, name=name)
+
+
+def convert(name: str, out_path: str, root: str = "ogb-data") -> str:
+    """``from_ogb`` + ``save_dataset``; returns the written path."""
+    from repro.data.dataset_io import save_dataset
+    return save_dataset(from_ogb(name, root=root), out_path)
+
+
+def main(argv=None) -> None:                     # pragma: no cover - CLI
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("name", help="OGB dataset name, e.g. ogbn-arxiv")
+    ap.add_argument("--root", default="ogb-data",
+                    help="OGB download/cache directory")
+    ap.add_argument("--out", required=True,
+                    help="output .npz path (repro.data format)")
+    args = ap.parse_args(argv)
+    print(f"wrote {convert(args.name, args.out, root=args.root)}")
+
+
+if __name__ == "__main__":                       # pragma: no cover
+    main()

@@ -1,0 +1,102 @@
+"""``DataSpec`` — declarative graph-source configuration, and the
+resolver that turns (name-or-path, spec) into a ``GraphDataset``.
+
+``DataSpec`` rides on ``repro.pipeline.PipelineSpec`` the way
+``PlanSpec``/``SamplerSpec`` do, so ``Pipeline.build_from_source`` can
+construct the *dataset* as declaratively as it constructs placement and
+sampling.  ``source`` is either a registry name (optionally
+parameterized: ``"powerlaw(2.1)"``) or a path to a ``repro.data`` file;
+everything else parameterizes synthetic generation and is ignored for
+on-disk sources.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """What graph to train on.
+
+    source:       graph-source registry name (``repro.data.sources``;
+                  "uniform", "powerlaw(alpha)", "rmat(a,b,c,d)",
+                  "sbm(k,p_in,p_out)", or any third-party entry) or a
+                  filesystem path to a saved dataset
+                  (``repro.data.dataset_io``).
+    num_nodes / avg_degree: synthetic graph size knobs (the edge draw
+                  targets ``num_nodes * avg_degree`` before self-loop
+                  removal, so families compare at equal nnz).
+    num_features / num_classes: feature width / label arity.
+    split:        split-policy registry name (``repro.data.splits``;
+                  "random(frac)" or "degree_stratified(frac)") deciding
+                  which nodes keep labels — the ``labeled_mask`` the
+                  partitioner balances on.
+    seed:         generation seed; same (source, spec) => bit-identical
+                  dataset.
+    """
+    source: str = "powerlaw(1.8)"
+    num_nodes: int = 2000
+    avg_degree: int = 8
+    num_features: int = 16
+    num_classes: int = 8
+    split: str = "random(0.3)"
+    seed: int = 0
+
+    def __post_init__(self):
+        from repro.data.sources import available_sources, resolve_source
+        from repro.data.splits import resolve_split
+
+        if self.num_nodes < 2:
+            raise ValueError(f"num_nodes must be >= 2, got {self.num_nodes}")
+        for field in ("avg_degree", "num_features", "num_classes"):
+            if getattr(self, field) < 1:
+                raise ValueError(
+                    f"{field} must be >= 1, got {getattr(self, field)}")
+        try:
+            resolve_split(self.split)   # validates name + parameters
+        except KeyError as e:
+            # spec construction fails with ValueError on every bad field
+            raise ValueError(str(e)) from None
+        if not _looks_like_path(self.source):
+            try:
+                resolve_source(self.source)   # validates name + parameters
+            except KeyError:
+                raise ValueError(
+                    f"unknown graph source {self.source!r} (and no such "
+                    f"file); valid sources: {available_sources()}") \
+                    from None
+
+
+def _looks_like_path(source: str) -> bool:
+    return (os.path.exists(source) or source.endswith(".npz")
+            or os.sep in source)
+
+
+def resolve_dataset(source: str | None = None, data: DataSpec | None = None,
+                    *, mmap: bool = True):
+    """Materialize the dataset named by ``source`` (or ``data.source``).
+
+    Paths (existing files, ``*.npz``, anything with a separator) load
+    through ``repro.data.dataset_io.load_dataset``; everything else
+    resolves through the source registry and generates with the spec's
+    parameters.
+    """
+    from repro.data.dataset_io import load_dataset
+    from repro.data.sources import resolve_source
+
+    if source is None and data is None:
+        raise ValueError(
+            "no dataset named: pass a source name/path or a DataSpec "
+            "(e.g. PipelineSpec(..., data=DataSpec(source=...)))")
+    if data is None:
+        data = DataSpec(source=str(source))
+    if source is None:
+        source = data.source
+    source = str(source)
+    if _looks_like_path(source):
+        return load_dataset(source, mmap=mmap)
+    return resolve_source(source).generate(
+        data.num_nodes, data.avg_degree,
+        num_features=data.num_features, num_classes=data.num_classes,
+        split=data.split, seed=data.seed)

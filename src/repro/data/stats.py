@@ -1,0 +1,42 @@
+"""Dataset shape/skew statistics — the columns benchmark records carry so
+``BENCH_*.json`` trajectories are comparable across source families.
+
+``degree_skew`` is the coefficient of variation of the in-degree
+distribution (std/mean): 1.0 for an exponential-ish uniform-random
+graph, growing without bound as hubs concentrate edge mass.
+``top1pct_edge_share`` is the fraction of all in-edges owned by the
+top-1% in-degree nodes — exactly the quantity ``hybrid_partial`` cashes
+in on (its replicated hot set is a top-degree slice).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def dataset_stats(ds) -> dict:
+    """Shape + skew summary of a ``GraphDataset`` (plain-JSON values)."""
+    indptr = np.asarray(ds.graph.indptr, np.int64)
+    deg = np.diff(indptr)
+    n = int(indptr.shape[0] - 1)
+    nnz = int(indptr[-1])
+    mean = nnz / max(n, 1)
+    std = float(deg.std())
+    k = max(n // 100, 1)
+    top = np.sort(deg)[-k:]
+    return {
+        "dataset": ds.name,
+        "num_nodes": n,
+        "num_edges": nnz,
+        "max_degree": int(deg.max()) if n else 0,
+        "mean_degree": round(mean, 2),
+        "degree_skew": round(std / max(mean, 1e-9), 3),
+        "top1pct_edge_share": round(float(top.sum()) / max(nnz, 1), 4),
+        "labeled_nodes": int((np.asarray(ds.labels) >= 0).sum()),
+    }
+
+
+def stats_label(stats: dict) -> str:
+    """Compact one-line rendering for CSV ``derived`` columns."""
+    return (f"{stats['dataset']} n={stats['num_nodes']} "
+            f"nnz={stats['num_edges']} skew={stats['degree_skew']} "
+            f"top1%={stats['top1pct_edge_share']:.0%}")

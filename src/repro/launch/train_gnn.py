@@ -8,6 +8,10 @@ host-placeholder) devices.
       --scheme hybrid --cache-capacity 4096 --shard-map --prefetch-depth 1
   PYTHONPATH=src python -m repro.launch.train_gnn --devices 4 \
       --scheme "hybrid_partial(0.25)" --cache-policy frequency
+  PYTHONPATH=src python -m repro.launch.train_gnn --devices 4 \
+      --dataset "rmat(0.57,0.19,0.19,0.05)" --scheme "hybrid_partial(0.1)"
+  PYTHONPATH=src python -m repro.launch.train_gnn --devices 4 \
+      --dataset datasets/ogbn-arxiv.npz
 """
 import argparse
 
@@ -16,6 +20,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=8,
                     help="workers (host placeholder devices on CPU)")
+    ap.add_argument("--dataset", default="powerlaw(1.8)",
+                    help="graph source: a registry name from repro.data "
+                         "(uniform | powerlaw(alpha) | rmat(a,b,c,d) | "
+                         "sbm(k,p_in,p_out)) or a path to a dataset saved "
+                         "with repro.data.save_dataset (.npz)")
+    ap.add_argument("--split", default="random(0.3)",
+                    help="labeled-node split policy (random(frac) | "
+                         "degree_stratified(frac)); ignored for on-disk "
+                         "datasets")
     ap.add_argument("--scheme", default="hybrid+fused",
                     help="legacy string (vanilla | hybrid | hybrid+fused) "
                          "or any registered placement scheme, e.g. "
@@ -50,24 +63,28 @@ def main():
 
     import jax
 
-    from repro.data.synthetic_graph import make_power_law_graph
+    from repro.data import DataSpec, dataset_stats, stats_label
     from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
     from repro.optim import init_opt_state
     from repro.pipeline import Pipeline, PipelineSpec
 
-    ds = make_power_law_graph(args.nodes, args.avg_degree,
-                              num_features=100, num_classes=47, seed=0)
-    print(f"graph: {ds.graph.num_nodes:,} nodes {ds.graph.num_edges:,} edges")
-
-    cfg = GNNConfig(in_dim=100, hidden_dim=256, num_classes=47,
-                    num_layers=3, fanouts=(10, 10, 5), dropout=0.0)
+    data = DataSpec(source=args.dataset, num_nodes=args.nodes,
+                    avg_degree=args.avg_degree, num_features=100,
+                    num_classes=47, split=args.split, seed=0)
+    fanouts = (10, 10, 5)               # paper §4 defaults
     spec = PipelineSpec.from_scheme(
-        args.scheme, num_parts=args.devices, fanouts=cfg.fanouts,
+        args.scheme, num_parts=args.devices, fanouts=fanouts,
         cache_capacity=args.cache_capacity,
         cache_policy=args.cache_policy,
         executor="shard_map" if args.shard_map else "vmap",
-        prefetch_depth=args.prefetch_depth)
-    pipe = Pipeline.build(ds.graph, ds.features, ds.labels, spec)
+        prefetch_depth=args.prefetch_depth, data=data)
+    pipe = Pipeline.build_from_source(spec=spec)
+    ds = pipe.dataset
+    print(f"dataset: {stats_label(dataset_stats(ds))}")
+
+    cfg = GNNConfig(in_dim=ds.features.shape[1], hidden_dim=256,
+                    num_classes=ds.num_classes, num_layers=len(fanouts),
+                    fanouts=fanouts, dropout=0.0)
     print(f"partitioned into {args.devices}: "
           f"edge-cut {pipe.edge_cut_fraction:.1%}")
     if pipe.placement is not None \

@@ -36,9 +36,15 @@ each swappable without touching the others.
                     ``depth>=1`` double-buffers ("double_buffer") —
                     bit-identical results either way, see
                     ``repro.pipeline.prefetch``.
+  ``DataSpec``      what graph to train on: a *graph-source registry
+                    name* (``repro.data``: "uniform", "powerlaw(alpha)",
+                    "rmat(a,b,c,d)", "sbm(k,p_in,p_out)") or a path to a
+                    saved dataset, plus synthetic generation knobs —
+                    consumed by ``Pipeline.build_from_source``.
   ``Pipeline``      the factory tying them together:
                     partition -> layout -> plan -> shards -> caches in
-                    one ``build`` call.
+                    one ``build`` call (``build_from_source`` prepends
+                    dataset resolution).
 
 Example — the paper's hybrid+fused scenario with a 4096-entry cache and
 depth-1 prefetch::
@@ -79,6 +85,9 @@ dataclasses remain as thin legacy containers).
 """
 from repro.core.cache import (available_cache_policies,
                               register_cache_policy, resolve_cache_policy)
+from repro.data.sources import (available_sources, register_source,
+                                resolve_source)
+from repro.data.spec import DataSpec, resolve_dataset
 from repro.core.placement import (PlacementPlan, PlacementScheme,
                                   available_schemes, register_scheme,
                                   resolve_scheme)
@@ -96,6 +105,8 @@ from repro.pipeline.specs import (PipelineSpec, PlanSpec, PrefetchSpec,
 
 __all__ = [
     "Pipeline", "PipelineSpec", "PlanSpec", "SamplerSpec", "PrefetchSpec",
+    "DataSpec", "resolve_dataset",
+    "register_source", "resolve_source", "available_sources",
     "VmapExecutor", "ShardMapExecutor",
     "register_executor", "resolve_executor", "available_executors",
     "PlacementScheme", "PlacementPlan",

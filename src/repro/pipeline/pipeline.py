@@ -40,6 +40,9 @@ class Pipeline:
                        traces.
     placement:         the ``PlacementPlan`` built by the spec'd scheme —
                        sampling and round accounting dispatch through it.
+    dataset:           the source ``GraphDataset`` when the pipeline came
+                       through ``build_from_source`` (else None) — lets
+                       benchmarks/launchers report dataset skew columns.
     edge_cut_fraction: fraction of edges crossing partitions (computed
                        lazily on first access).
     """
@@ -50,6 +53,7 @@ class Pipeline:
     cache: "FeatureCache | None"                    # noqa: F821
     counter: dist.RoundCounter
     placement: "PlacementPlan | None" = None        # noqa: F821
+    dataset: "GraphDataset | None" = None           # noqa: F821
     _edge_cut: float | None = None
 
     # ---------------------------------------------------------------- build
@@ -74,7 +78,54 @@ class Pipeline:
                                  labeled_slack=plan.labeled_slack)
         layout = build_layout(graph, np.asarray(features), labels, assign,
                               plan.num_parts)
+        # the build chain shared one memoized CSR view of the input graph;
+        # release its O(nnz) derived arrays now that the chain is done
+        from repro.core.graph import csr_view_release
+        csr_view_release(graph)
         return cls.from_layout(layout, spec)
+
+    @classmethod
+    def build_from_source(cls, source=None, spec: PipelineSpec = None,
+                          *, mmap: bool = True) -> "Pipeline":
+        """``Pipeline.build`` with the dataset resolved by the
+        ``repro.data`` graph-source subsystem.
+
+        Parameters
+        ----------
+        source : str, optional
+            Graph-source registry name (optionally parameterized, e.g.
+            ``"powerlaw(2.1)"`` or ``"rmat(0.57,0.19,0.19,0.05)"``) or a
+            filesystem path to a dataset saved with
+            ``repro.data.save_dataset``.  Defaults to
+            ``spec.data.source``.
+        spec : PipelineSpec
+            The pipeline spec; ``spec.data`` (a ``repro.data.DataSpec``)
+            parameterizes synthetic generation (ignored for on-disk
+            sources).
+        mmap : bool, default True
+            Memory-map on-disk datasets instead of loading them eagerly.
+
+        The resulting pipeline is **bit-identical** to calling
+        ``Pipeline.build(ds.graph, ds.features, ds.labels, spec)`` on the
+        same resolved dataset — source resolution adds no randomness
+        (generation is deterministic in ``spec.data.seed``); the built
+        ``Pipeline`` additionally carries the dataset on ``.dataset``.
+
+        Examples
+        --------
+        >>> pipe = Pipeline.build_from_source(
+        ...     "powerlaw(2.1)", spec)                   # doctest: +SKIP
+        >>> pipe = Pipeline.build_from_source(
+        ...     "datasets/ogbn-arxiv.npz", spec)         # doctest: +SKIP
+        """
+        from repro.data.spec import resolve_dataset
+
+        if spec is None:
+            raise ValueError("build_from_source needs a PipelineSpec")
+        ds = resolve_dataset(source, spec.data, mmap=mmap)
+        pipe = cls.build(ds.graph, ds.features, ds.labels, spec)
+        pipe.dataset = ds
+        return pipe
 
     @classmethod
     def from_layout(cls, layout, spec: PipelineSpec) -> "Pipeline":
@@ -282,6 +333,7 @@ class Pipeline:
     def edge_cut_fraction(self) -> float:
         """Fraction of edges crossing partitions (O(E) scan, cached)."""
         if self._edge_cut is None:
+            from repro.core.graph import csr_view_release
             from repro.core.partition import edge_cut
             offsets = np.asarray(self.layout.offsets)
             assign = (np.searchsorted(
@@ -289,6 +341,8 @@ class Pipeline:
                 side="right") - 1)
             cut = edge_cut(self.layout.graph, assign)
             self._edge_cut = cut / max(self.layout.graph.num_edges, 1)
+            # don't pin the O(nnz) CSR view on the long-lived topology
+            csr_view_release(self.layout.graph)
         return self._edge_cut
 
     @property

@@ -10,6 +10,10 @@ pull them apart:
   * ``SamplerSpec``  — fanouts + level-backend name (registry lookup);
   * ``PrefetchSpec`` — double-buffered prefetch: how many steps of
                        minibatch preparation run ahead of model compute;
+  * ``DataSpec``     — which graph to train on (source-registry name or
+                       on-disk path + generation knobs; defined in
+                       ``repro.data.spec``, consumed by
+                       ``Pipeline.build_from_source``);
   * ``PipelineSpec`` — all of the above + the executor name.
 
 ``PipelineSpec.from_scheme`` parses the legacy
@@ -19,6 +23,8 @@ from the old ``dist.make_worker_step`` API.
 from __future__ import annotations
 
 import dataclasses
+
+from repro.data.spec import DataSpec
 
 LEGACY_SCHEMES = ("vanilla", "hybrid", "hybrid+fused")
 SEED_STREAMS = ("counter", "fold")
@@ -181,7 +187,7 @@ class PrefetchSpec:
 @dataclasses.dataclass(frozen=True)
 class PipelineSpec:
     """Everything ``Pipeline.build`` needs: plan + sampler + executor
-    (+ optional prefetch).
+    (+ optional prefetch and data source).
 
     Parameters
     ----------
@@ -195,6 +201,11 @@ class PipelineSpec:
     prefetch : PrefetchSpec, default PrefetchSpec()
         Double-buffering config; the default (depth 0) is the synchronous
         path.
+    data : DataSpec, optional
+        Graph-source config consumed by ``Pipeline.build_from_source``
+        (``repro.data``): source-registry name or on-disk dataset path +
+        synthetic generation knobs.  ``None`` (the default) means the
+        caller supplies arrays to ``Pipeline.build`` directly.
 
     Examples
     --------
@@ -204,11 +215,17 @@ class PipelineSpec:
     ...     prefetch=PrefetchSpec(depth=1))
     >>> spec.expected_rounds
     2
+    >>> PipelineSpec(plan=PlanSpec(num_parts=2),
+    ...              sampler=SamplerSpec(fanouts=(3, 3)),
+    ...              data=DataSpec(source="rmat(0.57,0.19,0.19,0.05)",
+    ...                            num_nodes=500)).data.num_nodes
+    500
     """
     plan: PlanSpec
     sampler: SamplerSpec
     executor: str = "vmap"           # "vmap" | "shard_map" (registry)
     prefetch: PrefetchSpec = dataclasses.field(default_factory=PrefetchSpec)
+    data: DataSpec | None = None
 
     @property
     def expected_rounds(self) -> int:
@@ -232,7 +249,8 @@ class PipelineSpec:
                     unfused_backend: str = "unfused",
                     partition_seed: int = 0,
                     prefetch_depth: int = 0,
-                    cache_policy: str = "degree") -> "PipelineSpec":
+                    cache_policy: str = "degree",
+                    data: DataSpec | None = None) -> "PipelineSpec":
         """Parse a legacy scheme string — or any registered placement-scheme
         name — into a spec.
 
@@ -272,4 +290,5 @@ class PipelineSpec:
                           partition_seed=partition_seed),
             sampler=SamplerSpec(fanouts=tuple(fanouts), backend=backend),
             executor=executor,
-            prefetch=PrefetchSpec(depth=prefetch_depth))
+            prefetch=PrefetchSpec(depth=prefetch_depth),
+            data=data)

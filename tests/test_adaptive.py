@@ -1,0 +1,66 @@
+"""AdaptiveFanout ladder scheduling: plateau stepping, patience reset on
+improvement, and the edges_per_seed arithmetic."""
+from repro.core.adaptive import AdaptiveFanout
+
+
+def _sched(**kw):
+    kw.setdefault("ladder", ((8, 4), (4, 2), (2, 2)))
+    kw.setdefault("patience", 2)
+    kw.setdefault("threshold", 0.01)
+    return AdaptiveFanout(**kw)
+
+
+def test_edges_per_seed_arithmetic():
+    """Sum of cumulative fanout products: f1 + f1*f2 + ..."""
+    s = _sched()
+    assert s.fanouts == (8, 4)
+    assert s.edges_per_seed == 8 + 8 * 4
+    s.stage = 2
+    assert s.edges_per_seed == 2 + 2 * 2
+    assert AdaptiveFanout(ladder=((3,),)).edges_per_seed == 3
+    assert AdaptiveFanout(ladder=((5, 4, 3),)).edges_per_seed == \
+        5 + 5 * 4 + 5 * 4 * 3
+
+
+def test_steps_down_on_plateau():
+    s = _sched()
+    assert s.update(1.00) is False        # first loss becomes best
+    assert s.update(1.00) is False        # stall 1
+    assert s.update(1.00) is True         # stall 2 == patience -> step
+    assert s.stage == 1 and s.fanouts == (4, 2)
+    # internal counters reset after the step
+    assert s._stall == 0 and s._best == 1.00
+
+
+def test_improvement_resets_patience():
+    s = _sched()
+    s.update(1.00)
+    s.update(1.00)                        # stall 1
+    assert s.update(0.90) is False        # >1% improvement: reset
+    assert s.stage == 0 and s._stall == 0 and s._best == 0.90
+    s.update(0.899)                       # below-threshold improvement
+    assert s.update(0.898) is True        # ... counts as stall -> step
+    assert s.stage == 1
+
+
+def test_sub_threshold_improvement_is_a_stall():
+    s = _sched(threshold=0.05)
+    s.update(1.00)
+    assert s.update(0.97) is False        # 3% < 5% threshold: stall 1
+    assert s.update(0.96) is True         # stall 2 -> step
+    assert s.stage == 1
+
+
+def test_ladder_bottoms_out():
+    s = _sched(patience=1)
+    for _ in range(10):
+        s.update(1.0)
+    assert s.stage == len(s.ladder) - 1   # clamped at the last rung
+    assert s.update(1.0) is False         # no further changes signalled
+    assert s.fanouts == s.ladder[-1]
+
+
+def test_stage_change_signals_exactly_once_per_rung():
+    s = _sched(patience=1)
+    changes = sum(s.update(1.0) for _ in range(8))
+    assert changes == len(s.ladder) - 1

@@ -1,0 +1,448 @@
+"""``repro.data`` graph-source subsystem: registry + determinism, split
+policies, on-disk round-trips (mmap'd npz), chunked/streaming ingest,
+``Pipeline.build_from_source`` bit-equivalence on both executors, and
+the skew win (``hybrid_partial`` expected rounds fall on skewed
+sources at equal nnz)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.graph import csc_from_numpy_edges, validate_csc
+from repro.core.partition import partition_graph_streaming
+from repro.data import (DataSpec, apply_split, available_sources,
+                        available_splits, csc_from_edge_stream,
+                        dataset_stats, iter_edge_chunks, load_dataset,
+                        resolve_dataset, resolve_source, resolve_split,
+                        save_dataset, stream_edges)
+from repro.data.sources import parse_source_name
+from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+from repro.pipeline import Pipeline, PipelineSpec, PlanSpec, SamplerSpec
+
+FAMILIES = ("uniform", "powerlaw(1.8)", "rmat(0.57,0.19,0.19,0.05)",
+            "sbm(4,0.9,0.1)")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+def _gen(name, n=500, d=5, seed=3, **kw):
+    kw.setdefault("num_features", 8)
+    kw.setdefault("num_classes", 4)
+    return resolve_source(name).generate(n, d, seed=seed, **kw)
+
+
+# --------------------------------------------------------------------------
+# source registry
+# --------------------------------------------------------------------------
+
+def test_source_registry_builtins():
+    assert {"uniform", "powerlaw", "rmat", "sbm"} <= set(available_sources())
+    assert parse_source_name("powerlaw(2.1)") == ("powerlaw", (2.1,))
+    assert parse_source_name("rmat(0.5,0.2,0.2,0.1)") == \
+        ("rmat", (0.5, 0.2, 0.2, 0.1))
+    assert resolve_source("powerlaw(2.1)").alpha == 2.1
+    with pytest.raises(KeyError, match="no-such-source"):
+        resolve_source("no-such-source")
+    with pytest.raises(ValueError, match="alpha"):
+        resolve_source("powerlaw(-1)")
+    with pytest.raises(ValueError, match="sum to 1"):
+        resolve_source("rmat(0.9,0.9,0.1,0.1)")
+    with pytest.raises(ValueError, match="parameters"):
+        resolve_source("uniform(3)")
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_sources_deterministic_and_valid(name):
+    a = _gen(name)
+    b = _gen(name)
+    validate_csc(a.graph)
+    np.testing.assert_array_equal(np.asarray(a.graph.indptr),
+                                  np.asarray(b.graph.indptr))
+    np.testing.assert_array_equal(np.asarray(a.graph.indices),
+                                  np.asarray(b.graph.indices))
+    np.testing.assert_array_equal(a.features, b.features)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    # a different seed produces a different graph
+    c = _gen(name, seed=4)
+    assert not np.array_equal(np.asarray(a.graph.indices),
+                              np.asarray(c.graph.indices))
+
+
+def test_skew_orders_families():
+    """The families deliver the degree profiles they advertise: skewed
+    sources concentrate far more edge mass in their top nodes."""
+    stats = {name: dataset_stats(_gen(name, n=2000, d=8))
+             for name in FAMILIES}
+    assert stats["powerlaw(1.8)"]["degree_skew"] > \
+        2 * stats["uniform"]["degree_skew"]
+    assert stats["rmat(0.57,0.19,0.19,0.05)"]["top1pct_edge_share"] > \
+        3 * stats["uniform"]["top1pct_edge_share"]
+    for name in FAMILIES:       # equal target nnz across families
+        assert abs(stats[name]["num_edges"] - 16000) < 800, name
+
+
+# --------------------------------------------------------------------------
+# split policies
+# --------------------------------------------------------------------------
+
+def test_split_registry_and_determinism():
+    assert {"random", "degree_stratified"} <= set(available_splits())
+    with pytest.raises(KeyError, match="stratified_typo"):
+        resolve_split("stratified_typo")
+    with pytest.raises(ValueError, match="fraction"):
+        resolve_split("random(0)")
+    ds = _gen("powerlaw(1.8)")
+    m1 = resolve_split("random(0.25)").labeled_mask(ds.graph, seed=9)
+    m2 = resolve_split("random(0.25)").labeled_mask(ds.graph, seed=9)
+    np.testing.assert_array_equal(m1, m2)
+    assert 0.15 < m1.mean() < 0.35
+    assert not np.array_equal(
+        m1, resolve_split("random(0.25)").labeled_mask(ds.graph, seed=10))
+
+
+def test_degree_stratified_covers_degree_spectrum():
+    """Stratified split labels hubs too; a plain random split of the same
+    fraction can easily miss the (few) top-degree nodes."""
+    ds = _gen("powerlaw(1.6)", n=2000, d=8)
+    deg = np.diff(np.asarray(ds.graph.indptr))
+    mask = resolve_split("degree_stratified(0.2)").labeled_mask(ds.graph, 0)
+    assert 0.1 < mask.mean() < 0.3
+    top = np.argsort(-deg)[:200]        # top decile
+    assert mask[top].mean() > 0.1       # hubs represented
+    labels = apply_split("degree_stratified(0.2)", ds.graph,
+                         np.zeros(ds.graph.num_nodes, np.int32))
+    assert ((labels == -1) == ~mask).all()
+
+
+# --------------------------------------------------------------------------
+# on-disk format
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mmap", [True, False])
+def test_save_load_roundtrip_exact(tmp_path, mmap):
+    ds = _gen("rmat(0.57,0.19,0.19,0.05)")
+    path = save_dataset(ds, str(tmp_path / "g"))
+    assert path.endswith(".npz")
+    back = load_dataset(path, mmap=mmap)
+    np.testing.assert_array_equal(np.asarray(back.graph.indptr),
+                                  np.asarray(ds.graph.indptr))
+    np.testing.assert_array_equal(np.asarray(back.graph.indices),
+                                  np.asarray(ds.graph.indices))
+    np.testing.assert_array_equal(np.asarray(back.features),
+                                  np.asarray(ds.features))
+    np.testing.assert_array_equal(np.asarray(back.labels),
+                                  np.asarray(ds.labels))
+    assert back.name == ds.name and back.num_classes == ds.num_classes
+    if mmap:
+        assert isinstance(back.features, np.memmap)
+
+
+def test_load_rejects_inconsistent_split_mask(tmp_path):
+    """The stored labeled_mask is consumed as an integrity check."""
+    ds = _gen("uniform")
+    path = save_dataset(ds, str(tmp_path / "g"))
+    with np.load(path, allow_pickle=False) as z:
+        members = {k: z[k] for k in z.files}
+    members["labeled_mask"] = ~members["labeled_mask"]
+    np.savez(path, **members)
+    with pytest.raises(ValueError, match="labeled_mask"):
+        load_dataset(path)
+
+
+def test_load_rejects_foreign_and_newer_files(tmp_path):
+    foreign = tmp_path / "foreign.npz"
+    np.savez(foreign, x=np.arange(3))
+    with pytest.raises(ValueError, match="meta"):
+        load_dataset(str(foreign))
+    with pytest.raises(FileNotFoundError):
+        load_dataset(str(tmp_path / "missing.npz"))
+    # a newer format version must refuse loudly, not misparse
+    import json
+    meta = json.dumps({"format": "repro.data", "version": 99,
+                       "name": "x", "num_classes": 2})
+    newer = tmp_path / "newer.npz"
+    np.savez(newer, meta=np.frombuffer(meta.encode(), dtype=np.uint8))
+    with pytest.raises(ValueError, match="version 99"):
+        load_dataset(str(newer))
+
+
+# --------------------------------------------------------------------------
+# chunked / streaming ingest
+# --------------------------------------------------------------------------
+
+def test_csc_from_edge_stream_matches_monolithic():
+    rng = np.random.default_rng(0)
+    dst = rng.integers(0, 80, 600).astype(np.int64)
+    src = rng.integers(0, 80, 600).astype(np.int64)
+    ref = csc_from_numpy_edges(dst, src, 80)
+    for chunk in (7, 100, 600, 1000):
+        chunks = [(dst[i:i + chunk], src[i:i + chunk])
+                  for i in range(0, 600, chunk)]
+        g = csc_from_edge_stream(chunks, 80)
+        np.testing.assert_array_equal(np.asarray(g.indptr),
+                                      np.asarray(ref.indptr))
+        np.testing.assert_array_equal(np.asarray(g.indices),
+                                      np.asarray(ref.indices))
+
+
+def test_save_rejects_int32_edge_overflow(tmp_path):
+    """Beyond 2^31-1 edges the v1 format must refuse loudly, never wrap
+    negative (the guard reads indptr[-1], so no giant allocation needed
+    to exercise it)."""
+    from repro.core.graph import CSCGraph
+    from repro.data.synthetic_graph import GraphDataset
+    over = np.iinfo(np.int32).max + 1
+    fake = GraphDataset(
+        graph=CSCGraph(indptr=np.array([0, over], np.int64),
+                       indices=np.zeros(1, np.int32)),
+        features=np.zeros((1, 1), np.float32),
+        labels=np.zeros(1, np.int32), num_classes=1)
+    with pytest.raises(ValueError, match="int32"):
+        save_dataset(fake, str(tmp_path / "huge"))
+    assert not (tmp_path / "huge.npz").exists()
+
+
+def test_csc_from_edge_stream_rejects_one_shot_iterators():
+    """A bare generator would be silently buffered whole (two passes are
+    needed) — the contract demands a list or a factory."""
+    rng = np.random.default_rng(2)
+    dst, src = rng.integers(0, 9, 20), rng.integers(0, 9, 20)
+    with pytest.raises(TypeError, match="factory"):
+        csc_from_edge_stream(iter([(dst, src)]), 9)
+    # factory and list forms both remain fine
+    csc_from_edge_stream(lambda: iter([(dst, src)]), 9)
+    csc_from_edge_stream([(dst, src)], 9)
+
+
+def test_dataspec_rejects_invalid_source_parameters():
+    """Inline source parameters validate at spec construction, not at
+    build time (same early failure PlanSpec gives schemes)."""
+    with pytest.raises(ValueError, match="alpha"):
+        DataSpec(source="powerlaw(-1)")
+    with pytest.raises(ValueError, match="sum to 1"):
+        DataSpec(source="rmat(0.9,0.9,0.1,0.1)")
+
+
+def test_stream_edges_from_disk_reconstructs(tmp_path):
+    ds = _gen("powerlaw(1.8)")
+    path = save_dataset(ds, str(tmp_path / "g"))
+    g = csc_from_edge_stream(lambda: stream_edges(path, chunk_edges=113),
+                             ds.graph.num_nodes)
+    np.testing.assert_array_equal(np.asarray(g.indptr),
+                                  np.asarray(ds.graph.indptr))
+    np.testing.assert_array_equal(np.asarray(g.indices),
+                                  np.asarray(ds.graph.indices))
+    # chunk sizes partition nnz exactly
+    sizes = [d.size for d, s in stream_edges(path, chunk_edges=113)]
+    assert sum(sizes) == ds.graph.num_edges
+    assert all(s == 113 for s in sizes[:-1])
+    # an already-loaded dataset streams identically (no re-load per pass)
+    loaded = load_dataset(path)
+    g2 = csc_from_edge_stream(lambda: stream_edges(loaded, chunk_edges=113),
+                              ds.graph.num_nodes)
+    np.testing.assert_array_equal(np.asarray(g2.indices),
+                                  np.asarray(ds.graph.indices))
+
+
+def test_partition_graph_streaming_invariants():
+    P = 4
+    for name in ("uniform", "powerlaw(1.8)"):
+        ds = _gen(name, n=800, d=6)
+        lab = np.asarray(ds.labels) >= 0
+        assign = partition_graph_streaming(
+            iter_edge_chunks(ds.graph, chunk_edges=333),
+            ds.graph.num_nodes, P, lab)
+        n = ds.graph.num_nodes
+        assert assign.shape == (n,)
+        assert assign.min() >= 0 and assign.max() < P
+        counts = np.bincount(assign, minlength=P)
+        assert counts.sum() == n
+        assert counts.max() <= 1.05 * n / P + 1
+        labc = np.bincount(assign[lab], minlength=P)
+        assert labc.max() <= 1.05 * lab.sum() / P + 2
+
+
+def test_streaming_partition_infeasible_caps_fallback():
+    """Regression (found via smoke --nodes 300): when a streaming order
+    drives every partition to a cap (node-open ones labeled-full), the
+    placer must keep node balance strict and spill labeled minimally —
+    not silently dump overflow on partition 0."""
+    P = 4
+    ds = _gen("rmat(0.57,0.19,0.19,0.05)", n=300, d=4, seed=7)
+    lab = np.asarray(ds.labels) >= 0
+    assign = partition_graph_streaming(
+        iter_edge_chunks(ds.graph, chunk_edges=509),
+        ds.graph.num_nodes, P, lab)
+    n = ds.graph.num_nodes
+    assert (assign >= 0).all()
+    counts = np.bincount(assign, minlength=P)
+    assert counts.sum() == n
+    assert counts.max() <= 1.05 * n / P + 1       # node cap always holds
+    labc = np.bincount(assign[lab], minlength=P)
+    assert labc.max() <= 1.05 * lab.sum() / P + 2  # overflow stays minimal
+
+
+def test_stream_edges_rejects_bad_chunk_size(tmp_path):
+    ds = _gen("uniform", n=60, d=3)
+    path = save_dataset(ds, str(tmp_path / "g"))
+    for bad in (0, -5):
+        with pytest.raises(ValueError, match="chunk_edges"):
+            next(stream_edges(path, chunk_edges=bad))
+
+
+def test_streaming_partition_beats_random_cut():
+    ds = _gen("sbm(4,0.95,0.05)", n=800, d=6)
+    from repro.core.partition import edge_cut
+    lab = np.asarray(ds.labels) >= 0
+    assign = partition_graph_streaming(
+        iter_edge_chunks(ds.graph, chunk_edges=4000),
+        ds.graph.num_nodes, 4, lab)
+    rng = np.random.default_rng(1)
+    rand = rng.integers(0, 4, ds.graph.num_nodes)
+    assert edge_cut(ds.graph, assign) < edge_cut(ds.graph, rand)
+
+
+# --------------------------------------------------------------------------
+# DataSpec + build_from_source
+# --------------------------------------------------------------------------
+
+def test_dataspec_validation():
+    DataSpec(source="powerlaw(2.1)", num_nodes=100)
+    DataSpec(source="some/path.npz")            # paths skip name checks
+    with pytest.raises(ValueError, match="unknown graph source"):
+        DataSpec(source="not-a-source")
+    with pytest.raises(ValueError, match="num_nodes"):
+        DataSpec(num_nodes=1)
+    with pytest.raises(ValueError, match="split"):
+        DataSpec(split="no-such-split")
+
+
+def _world(source="powerlaw(2.1)"):
+    spec = PipelineSpec(
+        plan=PlanSpec(num_parts=2, scheme="hybrid"),
+        sampler=SamplerSpec(fanouts=(3, 3), backend="unfused"),
+        data=DataSpec(source=source, num_nodes=600, avg_degree=5,
+                      num_features=8, num_classes=4))
+    cfg = GNNConfig(in_dim=8, hidden_dim=8, num_classes=4, num_layers=2,
+                    fanouts=(3, 3), dropout=0.0)
+    params = init_gnn_params(jax.random.key(0), cfg)
+
+    def loss_fn(p, mfgs, h, y, v):
+        return gnn_loss(p, mfgs, h, y, v, cfg)
+    return spec, params, loss_fn
+
+
+def _step_out(pipe, params, loss_fn):
+    loss, grads, _ = pipe.step_fn(loss_fn)(params, pipe.seeds(8, 1),
+                                           jnp.uint32(5))
+    return float(loss), grads
+
+
+def test_build_from_source_bit_identical_to_build():
+    """The acceptance claim: source-name, path, and raw-array builds all
+    produce bit-identical minibatches (vmap executor)."""
+    spec, params, loss_fn = _world()
+    pipe = Pipeline.build_from_source("powerlaw(2.1)", spec)
+    assert pipe.dataset is not None
+    ds = resolve_dataset(None, spec.data)
+    pipe_raw = Pipeline.build(ds.graph, ds.features, ds.labels, spec)
+    l1, g1 = _step_out(pipe, params, loss_fn)
+    l2, g2 = _step_out(pipe_raw, params, loss_fn)
+    assert l1 == l2
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_build_from_path_bit_identical(tmp_path):
+    spec, params, loss_fn = _world()
+    pipe = Pipeline.build_from_source("powerlaw(2.1)", spec)
+    path = save_dataset(pipe.dataset, str(tmp_path / "pl"))
+    pipe_disk = Pipeline.build_from_source(path, spec)
+    l1, g1 = _step_out(pipe, params, loss_fn)
+    l2, g2 = _step_out(pipe_disk, params, loss_fn)
+    assert l1 == l2
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_build_from_source_default_uses_spec_data():
+    spec, params, loss_fn = _world()
+    pipe = Pipeline.build_from_source(spec=spec)
+    assert pipe.dataset.name.startswith("powerlaw(2.1)")
+    with pytest.raises(ValueError, match="PipelineSpec"):
+        Pipeline.build_from_source("powerlaw(2.1)")
+    # no source arg AND no spec.data: refuse, never invent a default graph
+    bare = PipelineSpec(plan=spec.plan, sampler=spec.sampler)
+    with pytest.raises(ValueError, match="no dataset named"):
+        Pipeline.build_from_source(spec=bare)
+
+
+def test_partial_expected_rounds_skew_win():
+    """hybrid_partial(0.1) must buy strictly more on skewed sources than
+    on uniform at equal nnz — the reason this subsystem exists."""
+    est = {}
+    for source in ("uniform", "powerlaw(1.8)",
+                   "rmat(0.57,0.19,0.19,0.05)"):
+        spec = PipelineSpec(
+            plan=PlanSpec(num_parts=2, scheme="hybrid_partial(0.1)"),
+            sampler=SamplerSpec(fanouts=(3, 3, 3), backend="unfused"),
+            data=DataSpec(source=source, num_nodes=1500, avg_degree=8,
+                          num_features=8, num_classes=4))
+        est[source] = Pipeline.build_from_source(
+            spec=spec).expected_rounds_estimate
+    assert est["powerlaw(1.8)"] < est["uniform"]
+    assert est["rmat(0.57,0.19,0.19,0.05)"] < est["uniform"]
+
+
+# --------------------------------------------------------------------------
+# both executors (subprocess: placeholder devices at jax init)
+# --------------------------------------------------------------------------
+
+EXECUTOR_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.data import DataSpec
+    from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+    from repro.pipeline import Pipeline, PipelineSpec, PlanSpec, SamplerSpec
+
+    cfg = GNNConfig(in_dim=8, hidden_dim=8, num_classes=4, num_layers=2,
+                    fanouts=(3, 3), dropout=0.0)
+    def loss_fn(p, mfgs, h, y, v):
+        return gnn_loss(p, mfgs, h, y, v, cfg)
+    params = init_gnn_params(jax.random.key(0), cfg)
+
+    ref = None
+    for executor in ("vmap", "shard_map"):
+        spec = PipelineSpec(
+            plan=PlanSpec(num_parts=2, scheme="hybrid_partial(0.5)"),
+            sampler=SamplerSpec(fanouts=(3, 3), backend="unfused"),
+            executor=executor,
+            data=DataSpec(source="rmat(0.57,0.19,0.19,0.05)",
+                          num_nodes=600, avg_degree=5,
+                          num_features=8, num_classes=4))
+        pipe = Pipeline.build_from_source(spec=spec)
+        loss, grads, _ = pipe.step_fn(loss_fn)(params, pipe.seeds(8, 1),
+                                               jnp.uint32(5))
+        if ref is None:
+            ref = (float(loss), grads)
+        else:
+            assert float(loss) == ref[0], executor
+            for a, b in zip(jax.tree.leaves(ref[1]),
+                            jax.tree.leaves(grads)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("BUILD_FROM_SOURCE_EXECUTORS_OK")
+""")
+
+
+def test_build_from_source_bit_identical_across_executors_subprocess():
+    r = subprocess.run([sys.executable, "-c", EXECUTOR_SCRIPT],
+                       capture_output=True, text=True, env=ENV,
+                       timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "BUILD_FROM_SOURCE_EXECUTORS_OK" in r.stdout

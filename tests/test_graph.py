@@ -5,7 +5,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import (COOGraph, CSCGraph, coo_to_csc,
-                              csc_from_numpy_edges, csc_to_coo, validate_csc)
+                              csc_from_numpy_edges, csc_to_coo, csr_view,
+                              validate_csc)
 
 
 @st.composite
@@ -41,6 +42,40 @@ def test_coo_csc_roundtrip(edges):
     np.testing.assert_array_equal(np.asarray(g.indptr), np.asarray(g2.indptr))
     np.testing.assert_array_equal(np.asarray(g.indices),
                                   np.asarray(g2.indices))
+
+
+@given(edge_lists())
+@settings(max_examples=30, deadline=None)
+def test_csr_view_is_the_transpose(edges):
+    """The shared CSR helper reproduces the inline construction every
+    host-side consumer used to repeat: dsts expansion + out-adjacency."""
+    n, dst, src = edges
+    g = csc_from_numpy_edges(dst, src, n)
+    view = csr_view(g)
+    # dsts: destination per edge, CSC order
+    indptr = np.asarray(g.indptr)
+    np.testing.assert_array_equal(
+        view.dsts, np.repeat(np.arange(n), np.diff(indptr)))
+    # out-adjacency matches the historical argsort construction
+    indices = np.asarray(g.indices)
+    out_deg = np.bincount(indices, minlength=n)
+    expected_indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(out_deg, out=expected_indptr[1:])
+    np.testing.assert_array_equal(view.indptr, expected_indptr)
+    order = np.argsort(indices, kind="stable")
+    np.testing.assert_array_equal(view.indices, view.dsts[order])
+    # every out-edge (v -> u) is an in-edge (u <- v)
+    for v in range(n):
+        outs = view.indices[view.indptr[v]:view.indptr[v + 1]]
+        for u in outs:
+            assert v in indices[indptr[u]:indptr[u + 1]]
+
+
+def test_csr_view_memoized_per_graph(small_dataset):
+    """Repeated csr_view(g) on one graph shares the derived arrays."""
+    g = small_dataset.graph
+    assert csr_view(g) is csr_view(g)
+    assert csr_view(g).dsts is csr_view(g).dsts
 
 
 def test_neighbor_lookup_o1(small_dataset):

@@ -90,6 +90,48 @@ def test_vanilla_plan_edges_match_global(ds):
                                       g_indices[g_indptr[lo]:g_indptr[hi]])
 
 
+def test_seeds_zero_labeled_partition_yields_all_minus_one(ds):
+    """Regression: a partition with no labeled nodes must emit an all -1
+    row — its hash ranks are all-sentinel and must never leak as seeds."""
+    import dataclasses
+    P = 4
+    assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
+    lab = np.asarray(layout.labels).copy()
+    lab[1, :] = -1                                 # strip partition 1
+    layout0 = dataclasses.replace(layout, labels=jnp.asarray(lab))
+    seeds = np.asarray(seeds_per_worker(layout0, 16, epoch_salt=5))
+    assert (seeds[1] == -1).all()
+    # other partitions unaffected: still local, labeled, deduplicated
+    offsets = np.asarray(layout.offsets)
+    for p in (0, 2, 3):
+        s = seeds[p][seeds[p] >= 0]
+        assert s.size > 0
+        assert ((s >= offsets[p]) & (s < offsets[p + 1])).all()
+
+
+def test_seeds_batch_larger_than_n_max_pads(ds):
+    """Regression: batch > n_max must return the full (P, batch) shape,
+    -1 padded past each worker's labeled supply — never truncated."""
+    P = 4
+    assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
+    labels = np.asarray(layout.labels)
+    batch = layout.n_max + 13
+    seeds = np.asarray(seeds_per_worker(layout, batch, epoch_salt=2))
+    assert seeds.shape == (P, batch)
+    offsets = np.asarray(layout.offsets)
+    for p in range(P):
+        row = seeds[p]
+        valid = row[row >= 0]
+        # every labeled node of the partition is drawn exactly once
+        assert valid.size == (labels[p] >= 0).sum()
+        assert len(set(valid.tolist())) == valid.size
+        assert ((valid >= offsets[p]) & (valid < offsets[p + 1])).all()
+        # padding is contiguous at the tail, all -1
+        assert (row[valid.size:] == -1).all()
+
+
 def test_seeds_drawn_from_local_labeled(ds):
     P = 4
     assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
