@@ -17,9 +17,9 @@ docs-check:
 
 # quick benchmark sanity (minutes not hours): the §5 cache figure + the
 # placement-scheme and graph-source sweeps, which exercise every registry
-# dispatch path
+# dispatch path, + the staged-vs-unstaged seed-staging delta
 bench-smoke:
-	$(PYTHON) -m benchmarks.run cache schemes datasets
+	$(PYTHON) -m benchmarks.run cache schemes datasets staging
 
 # graph-source subsystem smoke: generate every synthetic family at toy
 # scale, round-trip save/load exactly, re-check determinism + streaming

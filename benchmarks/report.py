@@ -100,6 +100,26 @@ def schemes_table(recs):
     return "\n".join(rows)
 
 
+def staging_table(recs):
+    """Host-side seed-staging table (bench_staging records): steps/s with
+    the staging thread off vs on per (scheme, prefetch depth) — the
+    staged-vs-unstaged delta in the perf trajectory."""
+    rows = ["| scheme | executor | depth | lead | steps/s unstaged "
+            "| steps/s staged | staging speedup | dataset |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("workload") != "staging-sweep":
+            continue
+        rows.append(
+            f"| {r['scheme']} | {r['executor']} | {r['prefetch_depth']} "
+            f"| {r['lead']} "
+            f"| {r['steps_per_s_unstaged']:.2f} "
+            f"| {r['steps_per_s_staged']:.2f} "
+            f"| {r['staging_speedup']:.2f}x "
+            f"| {dataset_cols_label(r)} |")
+    return "\n".join(rows)
+
+
 def datasets_table(recs):
     """Dataset-sweep table (bench_datasets records): per graph-source
     family x scheme, the expected utilized rounds next to the family's
@@ -169,6 +189,7 @@ def main():
     ap.add_argument("--mesh", default="pod")
     ap.add_argument("--schemes-dir", default="experiments/schemes")
     ap.add_argument("--datasets-dir", default="experiments/datasets")
+    ap.add_argument("--staging-dir", default="experiments/staging")
     args = ap.parse_args()
     recs = load(args.dir)
     print(f"## Dry-run ({args.mesh})\n")
@@ -185,6 +206,11 @@ def main():
     if ds_recs:
         print("\n## Graph sources (expected rounds vs skew, equal nnz)\n")
         print(datasets_table(ds_recs))
+    st_recs = load(args.staging_dir) if os.path.isdir(args.staging_dir) \
+        else []
+    if st_recs:
+        print("\n## Host-side seed staging (staged vs unstaged steps/s)\n")
+        print(staging_table(st_recs))
 
 
 if __name__ == "__main__":

@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      expected-round interpolation, utilized bytes
   * bench_prefetch — double-buffered prefetch overlap (steps/s at depth
                      0/1/2 per scheme)
+  * bench_staging  — host-side seed staging overlap (steps/s staged vs
+                     unstaged at depth 0/1/2 per scheme)
   * bench_datasets — scheme x graph-source sweep (repro.data registry):
                      expected rounds vs dataset skew at equal nnz
 
@@ -24,7 +26,8 @@ import sys
 def main() -> None:
     from benchmarks import (bench_cache, bench_datasets, bench_epoch,
                             bench_kernels, bench_prefetch, bench_sampling,
-                            bench_schemes, bench_storage, bench_table1)
+                            bench_schemes, bench_staging, bench_storage,
+                            bench_table1)
     mods = {
         "table1": bench_table1,
         "storage": bench_storage,
@@ -34,6 +37,7 @@ def main() -> None:
         "cache": bench_cache,
         "schemes": bench_schemes,
         "prefetch": bench_prefetch,
+        "staging": bench_staging,
         "datasets": bench_datasets,
     }
     only = set(sys.argv[1:])

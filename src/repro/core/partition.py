@@ -331,19 +331,15 @@ def build_hybrid(layout: PartitionLayout) -> HybridPlan:
     return HybridPlan(layout=layout)
 
 
-def seeds_per_worker(layout: PartitionLayout, batch: int,
-                     epoch_salt: int) -> jnp.ndarray:
-    """Each worker draws its minibatch from ITS OWN labeled nodes (paper §4:
-    'top level sampling seeds are drawn from the labeled nodes' of the local
-    partition).  Deterministic given epoch_salt.  Returns (P, batch) global
-    ids, -1 padded.
+def seeds_per_worker_host(layout: PartitionLayout, batch: int,
+                          epoch_salt: int) -> np.ndarray:
+    """Pure-numpy host half of ``seeds_per_worker``: the hash-rank argsort
+    over all labeled nodes, returning a host ``(P, batch)`` int32 array.
 
-    Vectorized over workers: each labeled node gets a hash rank from
-    (global id, epoch_salt) and every worker takes its ``batch``
-    lowest-ranked labeled nodes — one argsort over the (P, n_max) table
-    replaces the per-partition ``rng.choice`` loop.  Sampling without
-    replacement is preserved (distinct nodes hash to distinct ranks with
-    overwhelming probability; ties break by column order).
+    This function touches no JAX state (no tracing, no device transfer),
+    so the seed stager (``repro.pipeline.staging``) can run it on a
+    background thread while the main thread traces or blocks on device
+    work; ``seeds_per_worker`` is its device-array wrapper.
     """
     P = layout.num_parts
     offsets = np.asarray(layout.offsets).astype(np.int64)
@@ -363,4 +359,22 @@ def seeds_per_worker(layout: PartitionLayout, batch: int,
     valid = np.arange(m)[None, :] < take[:, None]
     out = np.full((P, batch), -1, np.int32)
     out[:, :m] = np.where(valid, picked, -1)
-    return jnp.asarray(out)
+    return out
+
+
+def seeds_per_worker(layout: PartitionLayout, batch: int,
+                     epoch_salt: int) -> jnp.ndarray:
+    """Each worker draws its minibatch from ITS OWN labeled nodes (paper §4:
+    'top level sampling seeds are drawn from the labeled nodes' of the local
+    partition).  Deterministic given epoch_salt.  Returns (P, batch) global
+    ids, -1 padded.
+
+    Vectorized over workers: each labeled node gets a hash rank from
+    (global id, epoch_salt) and every worker takes its ``batch``
+    lowest-ranked labeled nodes — one argsort over the (P, n_max) table
+    replaces the per-partition ``rng.choice`` loop.  Sampling without
+    replacement is preserved (distinct nodes hash to distinct ranks with
+    overwhelming probability; ties break by column order).  The host
+    argsort itself lives in ``seeds_per_worker_host``.
+    """
+    return jnp.asarray(seeds_per_worker_host(layout, batch, epoch_salt))

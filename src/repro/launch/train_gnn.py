@@ -45,6 +45,15 @@ def main():
                          "k's sampling/feature all_to_all with step k-1's "
                          "compute (0 = synchronous; results are "
                          "bit-identical at any depth)")
+    ap.add_argument("--staging", action="store_true",
+                    help="host-side async seed staging: compute future "
+                         "steps' seed argsorts and start their H2D "
+                         "transfers on a background thread "
+                         "(repro.pipeline.staging; bit-identical results, "
+                         "composes with any scheme/executor/depth)")
+    ap.add_argument("--staging-lead", type=int, default=1,
+                    help="staging ring slots beyond the prefetch depth "
+                         "(how far the host runs ahead of the device)")
     ap.add_argument("--nodes", type=int, default=20000)
     ap.add_argument("--avg-degree", type=int, default=10)
     ap.add_argument("--epochs", type=int, default=3)
@@ -77,7 +86,8 @@ def main():
         cache_capacity=args.cache_capacity,
         cache_policy=args.cache_policy,
         executor="shard_map" if args.shard_map else "vmap",
-        prefetch_depth=args.prefetch_depth, data=data)
+        prefetch_depth=args.prefetch_depth, staging=args.staging,
+        staging_lead=args.staging_lead, data=data)
     pipe = Pipeline.build_from_source(spec=spec)
     ds = pipe.dataset
     print(f"dataset: {stats_label(dataset_stats(ds))}")
@@ -114,7 +124,8 @@ def main():
                 # the round counter fills at first trace — report it only
                 # once a step has actually traced
                 print(f"scheme={args.scheme} executor={spec.executor} "
-                      f"prefetch={args.prefetch_depth}: "
+                      f"prefetch={args.prefetch_depth} "
+                      f"staging={'on' if args.staging else 'off'}: "
                       f"{pipe.counter.rounds} comm rounds/step "
                       f"({pipe.counter.sampling_rounds} sampling + "
                       f"{pipe.counter.feature_rounds} feature; "
@@ -129,6 +140,7 @@ def main():
         if args.cache_capacity:
             msg += f" cache-hit {float(metrics['cache_hit_rate']):.1%}"
         print(msg)
+    driver.close()
 
 
 if __name__ == "__main__":

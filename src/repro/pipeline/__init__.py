@@ -102,6 +102,7 @@ from repro.pipeline.prefetch import (DoubleBufferDriver, PreparedBatch,
                                      resolve_prefetcher)
 from repro.pipeline.specs import (PipelineSpec, PlanSpec, PrefetchSpec,
                                   SamplerSpec)
+from repro.pipeline.staging import SeedStager
 
 __all__ = [
     "Pipeline", "PipelineSpec", "PlanSpec", "SamplerSpec", "PrefetchSpec",
@@ -113,6 +114,7 @@ __all__ = [
     "register_scheme", "resolve_scheme", "available_schemes",
     "register_cache_policy", "resolve_cache_policy",
     "available_cache_policies",
-    "PreparedBatch", "SeedStream", "SyncDriver", "DoubleBufferDriver",
+    "PreparedBatch", "SeedStream", "SeedStager", "SyncDriver",
+    "DoubleBufferDriver",
     "register_prefetcher", "resolve_prefetcher", "available_prefetchers",
 ]

@@ -100,7 +100,10 @@ class _AsyncDispatchRunner:
     """Prefetch runner for ``VmapExecutor``: two jitted halves + JAX async
     dispatch.  ``step`` enqueues the next prepare *before* consuming the
     oldest queued batch, so on an async backend the two execute
-    concurrently without any host-side synchronisation."""
+    concurrently without any host-side synchronisation.  ``seeds_next`` /
+    ``salt_next`` may be pre-staged device arrays
+    (``repro.pipeline.staging``) — the jitted prepare consumes them
+    as-is, keeping the host seed argsort off this critical path."""
 
     def __init__(self, prepare_j, consume_j):
         self._prep = prepare_j
@@ -121,7 +124,10 @@ class _AsyncDispatchRunner:
 class _RotatingBufferRunner:
     """Prefetch runner for ``ShardMapExecutor``: consume + update +
     prepare fused in one jitted program with the batch FIFO donated, so
-    XLA rotates the prepared-batch double buffers in place."""
+    XLA rotates the prepared-batch double buffers in place.
+    ``seeds_next`` may arrive pre-staged and pre-sharded along the worker
+    axis (``ShardMapExecutor.seed_sharding``), in which case the fused
+    program starts from already-resident per-device rows."""
 
     def __init__(self, warm_j, fused_j):
         self._warm = warm_j
@@ -146,6 +152,13 @@ class VmapExecutor:
     """
 
     name = "vmap"
+
+    def seed_sharding(self, pipeline):
+        """Placement for pre-staged seed arrays
+        (``repro.pipeline.staging.SeedStager``): the vmap executor runs
+        the whole stacked worker axis on the default device, so ``None``
+        (commit to the default device) is already optimal."""
+        return None
 
     def bind(self, pipeline, step):
         """Bind ``step`` (a ``repro.pipeline.worker`` program) to the
@@ -221,6 +234,17 @@ class ShardMapExecutor:
 
     def __init__(self, mesh=None):
         self.mesh = mesh
+
+    def seed_sharding(self, pipeline):
+        """Placement for pre-staged seed arrays
+        (``repro.pipeline.staging.SeedStager``): shard the ``(P, batch)``
+        seeds along the worker axis of the executor's mesh, so the staged
+        H2D transfer already lands each worker's row on its device and
+        the jitted program neither reshards nor re-transfers."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        return NamedSharding(self._resolve_mesh(pipeline), P(dist.AXIS))
 
     def _resolve_mesh(self, pipeline):
         from repro.compat import make_mesh

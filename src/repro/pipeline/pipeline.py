@@ -281,7 +281,8 @@ class Pipeline:
     def train_driver(self, loss_fn, *, batch: int, lr: float = 1e-3,
                      optimizer: str = "adamw",
                      grad_clip: float | None = 1.0, executor=None,
-                     base_salt: int = 0, mode: str | None = None):
+                     base_salt: int = 0, mode: str | None = None,
+                     staging=None):
         """Build the step driver selected by ``spec.prefetch``.
 
         The driver owns a deterministic ``SeedStream`` and (for
@@ -301,12 +302,20 @@ class Pipeline:
             Override the prefetch-driver registry name (defaults to
             ``spec.prefetch.mode``: ``"sync"`` when depth is 0, else
             ``"double_buffer"``).
+        staging : bool | SeedStager, optional
+            Host-side async seed staging (``repro.pipeline.staging``):
+            ``None`` defers to ``spec.prefetch.staging``; ``True`` builds
+            a ``SeedStager`` (ring of ``depth + spec.prefetch.lead``
+            slots) so steps consume already-resident device seeds; an
+            existing ``SeedStager`` is adopted as-is.  Bit-identical to
+            unstaged execution.
 
         Returns
         -------
         driver
             Object with ``step(params, opt_state, step_idx=None) ->
-            (params, opt_state, loss, metrics)`` and ``reset()``.
+            (params, opt_state, loss, metrics)``, ``reset()``, and
+            ``close()``.
 
         Examples
         --------
@@ -319,15 +328,24 @@ class Pipeline:
         cls = resolve_prefetcher(mode or self.spec.prefetch.mode)
         return cls(self, loss_fn, batch=batch, lr=lr, optimizer=optimizer,
                    grad_clip=grad_clip, executor=executor,
-                   base_salt=base_salt)
+                   base_salt=base_salt, staging=staging)
 
     # ------------------------------------------------------------ utilities
+
+    def seeds_host(self, batch: int, epoch_salt: int) -> np.ndarray:
+        """Host-side half of ``seeds``: the hash-rank argsort over labeled
+        nodes as a pure-numpy ``(P, batch)`` int32 array.  Touches no JAX
+        tracing or device state, so the seed stager
+        (``repro.pipeline.staging``) can call it from a background thread
+        while the main thread traces/executes programs."""
+        from repro.core.partition import seeds_per_worker_host
+        return seeds_per_worker_host(self.layout, batch,
+                                     epoch_salt=epoch_salt)
 
     def seeds(self, batch: int, epoch_salt: int) -> jnp.ndarray:
         """(P, batch) per-worker minibatch seeds drawn from each worker's
         own labeled nodes (deterministic in ``epoch_salt``)."""
-        from repro.core.partition import seeds_per_worker
-        return seeds_per_worker(self.layout, batch, epoch_salt=epoch_salt)
+        return jnp.asarray(self.seeds_host(batch, epoch_salt=epoch_salt))
 
     @property
     def edge_cut_fraction(self) -> float:

@@ -32,6 +32,12 @@ Determinism: a ``SeedStream`` derives step *k*'s minibatch seeds and salt
 from the step index alone, so any prefetch depth — and any restart — replays
 the identical sample sequence, which is what makes ``depth > 0`` bit-identical
 to ``"sync"`` (asserted in ``tests/test_prefetch.py``).
+
+The remaining *host*-side serial segment — the seed argsort + its H2D
+transfer — moves off the critical path with ``PrefetchSpec(staging=True)``
+(or ``train_driver(staging=True)``): both drivers then consume
+already-resident device seeds from a ``repro.pipeline.staging.SeedStager``
+ring, again bit-identically (``tests/test_staging.py``).
 """
 from __future__ import annotations
 
@@ -311,6 +317,16 @@ class SeedStream:
         """uint32 device salt for step ``k`` (feeds the sampling hash)."""
         return jnp.uint32(self.salt_int(k))
 
+    def seeds_host(self, k: int):
+        """(P, batch) seed ids for step ``k`` as a host numpy array.
+
+        The pure host half of ``seeds`` — no JAX tracing or device state
+        is touched, so the seed stager (``repro.pipeline.staging``) can
+        call it from its background thread.
+        """
+        return self._pipeline.seeds_host(self.batch,
+                                         epoch_salt=self.salt_int(k))
+
     def seeds(self, k: int) -> jnp.ndarray:
         """(P, batch) per-worker seed node ids for step ``k``."""
         return self._pipeline.seeds(self.batch, epoch_salt=self.salt_int(k))
@@ -326,13 +342,22 @@ class SyncDriver:
     ``step(params, opt_state, k)`` calls the exact jitted function
     ``Pipeline.train_step`` returns, with seeds/salt from the
     ``SeedStream`` — bit-identical to driving that function by hand.
+    With ``staging`` on, a ``SeedStager`` computes the seed argsort and
+    starts the H2D transfer for upcoming steps on a background thread;
+    the step then consumes already-resident device arrays (same values —
+    the stream is a pure function of the step index).
     """
 
     mode = "sync"
 
     def __init__(self, pipeline, loss_fn, *, batch: int, lr: float = 1e-3,
                  optimizer: str = "adamw", grad_clip: float | None = 1.0,
-                 executor=None, base_salt: int = 0):
+                 executor=None, base_salt: int = 0, staging=None):
+        from repro.pipeline.executor import resolve_executor
+        from repro.pipeline.staging import make_stager
+
+        if executor is None:
+            executor = resolve_executor(pipeline.spec.executor)
         self.pipeline = pipeline
         self.depth = 0
         self._fn = pipeline.train_step(loss_fn, lr=lr, optimizer=optimizer,
@@ -341,7 +366,15 @@ class SyncDriver:
         self.stream = SeedStream(pipeline, batch,
                                  strategy=pipeline.spec.prefetch.seed_stream,
                                  base_salt=base_salt)
+        self.stager, self._owns_stager = make_stager(
+            staging, self.stream, depth=0, spec=pipeline.spec,
+            executor=executor, pipeline=pipeline)
         self._next = 0
+
+    def _seeds_salt(self, k: int):
+        if self.stager is not None:
+            return self.stager.get(k)
+        return self.stream.seeds(k), self.stream.salt(k)
 
     def step(self, params, opt_state, step_idx: int | None = None):
         """Run step ``step_idx`` (defaults to the next sequential index).
@@ -349,14 +382,24 @@ class SyncDriver:
         Returns ``(params, opt_state, loss, metrics)``.
         """
         k = self._next if step_idx is None else int(step_idx)
-        out = self._fn(params, opt_state, self.stream.seeds(k),
-                       self.stream.salt(k))
+        seeds, salt = self._seeds_salt(k)
+        out = self._fn(params, opt_state, seeds, salt)
         self._next = k + 1
         return out
 
     def reset(self) -> None:
-        """Restart the sequential step counter at 0."""
+        """Restart the sequential step counter at 0 (draining and
+        refilling the staging ring when staging is on)."""
         self._next = 0
+        if self.stager is not None:
+            self.stager.seek(0)
+
+    def close(self) -> None:
+        """Release the staging thread if this driver built it (a stager
+        adopted from the caller is left running; no-op without staging).
+        """
+        if self.stager is not None and self._owns_stager:
+            self.stager.close()
 
 
 class DoubleBufferDriver:
@@ -379,8 +422,9 @@ class DoubleBufferDriver:
 
     def __init__(self, pipeline, loss_fn, *, batch: int, lr: float = 1e-3,
                  optimizer: str = "adamw", grad_clip: float | None = 1.0,
-                 executor=None, base_salt: int = 0):
+                 executor=None, base_salt: int = 0, staging=None):
         from repro.pipeline.executor import resolve_executor
+        from repro.pipeline.staging import make_stager
 
         spec = pipeline.spec
         self.depth = spec.prefetch.depth
@@ -407,13 +451,22 @@ class DoubleBufferDriver:
         self.stream = SeedStream(pipeline, batch,
                                  strategy=spec.prefetch.seed_stream,
                                  base_salt=base_salt)
+        self.stager, self._owns_stager = make_stager(
+            staging, self.stream, depth=self.depth, spec=spec,
+            executor=executor, pipeline=pipeline)
         self._queue = None
         self._next = 0
 
+    def _seeds_salt(self, k: int):
+        if self.stager is not None:
+            return self.stager.get(k)
+        return self.stream.seeds(k), self.stream.salt(k)
+
     def _warmup(self, k: int) -> None:
+        # an out-of-sequence k drains and refills both the prepared-batch
+        # FIFO and (via the stager's index-checked get) the staging ring
         self._queue = tuple(
-            self._runner.prepare(self.stream.seeds(k + i),
-                                 self.stream.salt(k + i))
+            self._runner.prepare(*self._seeds_salt(k + i))
             for i in range(self.depth))
 
     def step(self, params, opt_state, step_idx: int | None = None):
@@ -428,15 +481,24 @@ class DoubleBufferDriver:
             self._warmup(k)
         params, opt_state, loss, metrics, self._queue = self._runner.step(
             params, opt_state, self._queue,
-            self.stream.seeds(k + self.depth),
-            self.stream.salt(k + self.depth))
+            *self._seeds_salt(k + self.depth))
         self._next = k + 1
         return params, opt_state, loss, metrics
 
     def reset(self) -> None:
-        """Drop in-flight batches and restart the step counter at 0."""
+        """Drop in-flight batches and restart the step counter at 0
+        (draining and refilling the staging ring when staging is on)."""
         self._queue = None
         self._next = 0
+        if self.stager is not None:
+            self.stager.seek(0)
+
+    def close(self) -> None:
+        """Release the staging thread if this driver built it (a stager
+        adopted from the caller is left running; no-op without staging).
+        """
+        if self.stager is not None and self._owns_stager:
+            self.stager.close()
 
 
 _PREFETCHERS: dict[str, Callable] = {}
@@ -447,8 +509,11 @@ def register_prefetcher(name: str, driver_cls: Callable, *,
     """Register a prefetch-driver class under ``name``.
 
     ``driver_cls(pipeline, loss_fn, *, batch, lr, optimizer, grad_clip,
-    executor, base_salt)`` must yield an object with
-    ``step(params, opt_state, step_idx=None)`` and ``reset()``.
+    executor, base_salt, staging)`` must yield an object with
+    ``step(params, opt_state, step_idx=None)`` and ``reset()``
+    (``staging`` is ``None`` | bool | ``SeedStager`` — see
+    ``repro.pipeline.staging``; drivers that cannot stage may reject
+    truthy values).
     """
     if not overwrite and name in _PREFETCHERS \
             and _PREFETCHERS[name] is not driver_cls:

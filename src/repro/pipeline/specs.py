@@ -146,6 +146,16 @@ class PrefetchSpec:
         Run the feature exchange / cache lookup in the prepare half; when
         False the feature fetch stays in the consume half (only sampling
         is prefetched).
+    staging : bool, default False
+        Host-side async seed staging (``repro.pipeline.staging``): a
+        background thread computes future steps' seed argsorts and starts
+        their H2D transfers off the critical path, so drivers consume
+        already-resident device arrays.  Composes with any depth (0
+        included) and both executors; bit-identical to unstaged runs.
+    lead : int, default 1
+        How many slots the stager rides ahead of the driver's own
+        lookahead (ring size = ``depth + lead``).  Must be >= 1; only
+        consulted when ``staging`` is on.
 
     Examples
     --------
@@ -153,15 +163,24 @@ class PrefetchSpec:
     'double_buffer'
     >>> PrefetchSpec().mode          # depth 0 -> the synchronous driver
     'sync'
+    >>> PrefetchSpec(depth=1, staging=True, lead=2).lead
+    2
     """
     depth: int = 0
     seed_stream: str = "counter"
     sampling: bool = True
     features: bool = True
+    staging: bool = False
+    lead: int = 1
 
     def __post_init__(self):
         if self.depth < 0:
             raise ValueError(f"prefetch depth must be >= 0, got {self.depth}")
+        if self.lead < 1:
+            raise ValueError(
+                f"staging lead must be >= 1, got {self.lead} (the staging "
+                f"ring holds depth + lead slots; lead 0 stages nothing "
+                f"ahead of the driver)")
         if self.seed_stream not in SEED_STREAMS:
             raise ValueError(
                 f"unknown seed_stream {self.seed_stream!r}; "
@@ -249,6 +268,8 @@ class PipelineSpec:
                     unfused_backend: str = "unfused",
                     partition_seed: int = 0,
                     prefetch_depth: int = 0,
+                    staging: bool = False,
+                    staging_lead: int = 1,
                     cache_policy: str = "degree",
                     data: DataSpec | None = None) -> "PipelineSpec":
         """Parse a legacy scheme string — or any registered placement-scheme
@@ -265,7 +286,9 @@ class PipelineSpec:
         ``fused_backend`` defaults to the Pallas kernel; benchmarks that
         time the *algorithm* rather than the interpret-mode kernel pass
         ``fused_backend="reference"``.  ``prefetch_depth`` attaches a
-        default ``PrefetchSpec`` (0 = synchronous).
+        default ``PrefetchSpec`` (0 = synchronous); ``staging`` turns on
+        host-side async seed staging (``repro.pipeline.staging``) with
+        ``staging_lead`` ring slots beyond the prefetch depth.
         """
         from repro.core.placement import available_schemes, parse_scheme_name
 
@@ -290,5 +313,6 @@ class PipelineSpec:
                           partition_seed=partition_seed),
             sampler=SamplerSpec(fanouts=tuple(fanouts), backend=backend),
             executor=executor,
-            prefetch=PrefetchSpec(depth=prefetch_depth),
+            prefetch=PrefetchSpec(depth=prefetch_depth, staging=staging,
+                                  lead=staging_lead),
             data=data)

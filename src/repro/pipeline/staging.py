@@ -1,0 +1,224 @@
+"""Host-side asynchronous seed/feature staging.
+
+PR 2's double-buffered prefetch overlapped the *device* half of minibatch
+preparation (sampling + feature ``all_to_all``) with model compute, but
+every step still blocked on host work: ``SeedStream.seeds(k)`` runs the
+hash-rank argsort over all labeled nodes on the host, and its result is
+synchronously transferred to the device before the prepare can even be
+dispatched.  SALIENT ("Accelerating Training and Inference of GNNs with
+Fast Sampling and Pipelining", arXiv 2110.08450) shows this host-side
+batch-preparation pipeline is worth a large factor on top of device-side
+overlap — the host must ride *ahead* of the device, not in lockstep.
+
+``SeedStager`` is that host-side pipeline stage: a background worker
+thread computes ``SeedStream.seeds(k)`` / ``salt(k)`` for future step
+indices off the critical path and eagerly starts their H2D transfers via
+``jax.device_put``, keeping a bounded ring of ``depth + lead`` staged
+slots warm.  Drivers then consume already-resident device arrays:
+
+  * ``depth``  — how many prepared batches the prefetch driver keeps in
+                 flight (``PrefetchSpec.depth``); the stager must cover
+                 them so a refill never blocks on the host.
+  * ``lead``   — extra slots staged beyond the driver's own lookahead
+                 (``PrefetchSpec.lead``); this is the actual host-side
+                 overlap margin.
+
+Determinism: the stager changes *when* seeds are computed, never *what*
+they are — every slot is ``(stream.seeds(k), stream.salt(k))`` for a
+concrete step index ``k``, and ``SeedStream`` is a pure function of
+``k``.  Staged execution is therefore bit-identical to unstaged execution
+for any placement scheme, executor, and prefetch depth
+(``tests/test_staging.py`` asserts it).
+
+Consumption is index-checked: ``get(k)`` serves the ring head only when
+the head *is* step ``k``; any out-of-sequence request (a driver restart,
+an explicit ``step_idx`` jump) drains the ring and refills it from ``k``
+— exactly mirroring the prefetch drivers' queue-refill semantics, so
+restarts replay the continuous run bit-for-bit.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+
+import jax
+import numpy as np
+
+
+class SeedStager:
+    """Background staging of per-step seeds/salt with eager H2D transfer.
+
+    Parameters
+    ----------
+    stream : repro.pipeline.prefetch.SeedStream
+        The deterministic seed stream; the stager calls its pure host
+        half (``seeds_host`` / ``salt_int``) off-thread — no JAX tracing
+        state is touched on the worker thread beyond ``device_put``.
+    depth : int, default 0
+        The consuming driver's prefetch depth (``0`` for the sync
+        driver).  Sizes the ring so queue refills are fully covered.
+    lead : int, default 1
+        Extra staged slots beyond ``depth`` — how far the host runs ahead
+        of the device.  Must be >= 1 (a zero-slot ring stages nothing).
+    sharding : jax.sharding.Sharding, optional
+        Placement for the staged ``(P, batch)`` seed arrays (e.g. the
+        shard_map executor's worker-axis ``NamedSharding``).  ``None``
+        commits to the default device.
+
+    Examples
+    --------
+    >>> stager = SeedStager(stream, depth=1, lead=2)     # doctest: +SKIP
+    >>> seeds, salt = stager.get(0)                      # doctest: +SKIP
+    >>> stager.close()                                   # doctest: +SKIP
+    """
+
+    def __init__(self, stream, *, depth: int = 0, lead: int = 1,
+                 sharding=None):
+        if depth < 0:
+            raise ValueError(f"depth must be >= 0, got {depth}")
+        if lead < 1:
+            raise ValueError(
+                f"staging lead must be >= 1 (got {lead}); lead 0 would "
+                f"stage nothing ahead of the driver's own lookahead")
+        self.stream = stream
+        self.slots = int(depth) + int(lead)
+        self.sharding = sharding
+        self._cv = threading.Condition()
+        self._ring: collections.deque = collections.deque()
+        self._want: int | None = None     # next index the worker produces
+        self._gen = 0                     # bumped on drain/refill (seek)
+        self._error: BaseException | None = None
+        self._closed = False
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="repro-seed-stager")
+        self._thread.start()
+
+    # ------------------------------------------------------------ producer
+
+    def _produce(self, k: int):
+        """Compute step ``k``'s seeds/salt on the host and start their
+        device transfer.  Runs on the worker thread; the host half is
+        pure numpy (``SeedStream.seeds_host``), then ``jax.device_put``
+        enqueues the (async where supported) H2D copy."""
+        seeds_np = self.stream.seeds_host(k)
+        salt_np = np.uint32(self.stream.salt_int(k))
+        seeds = jax.device_put(seeds_np, self.sharding)
+        salt = jax.device_put(salt_np)
+        return seeds, salt
+
+    def _worker(self) -> None:
+        while True:
+            with self._cv:
+                while not self._closed and (
+                        self._want is None
+                        or len(self._ring) >= self.slots
+                        or self._error is not None):
+                    self._cv.wait()
+                if self._closed:
+                    return
+                gen, k = self._gen, self._want
+            try:
+                item = self._produce(k)
+            except BaseException as e:  # surfaced by the next get()
+                with self._cv:
+                    if self._gen == gen:
+                        self._error = e
+                        self._cv.notify_all()
+                continue
+            with self._cv:
+                if self._gen != gen or self._closed:
+                    continue            # stale: a seek raced the produce
+                self._ring.append((k, item))
+                self._want = k + 1
+                self._cv.notify_all()
+
+    # ------------------------------------------------------------ consumer
+
+    def _seek_locked(self, k: int) -> None:
+        self._gen += 1
+        self._ring.clear()
+        self._error = None
+        self._want = int(k)
+        self._cv.notify_all()
+
+    def seek(self, k: int) -> None:
+        """Drain the ring and restart staging from step ``k`` (also what
+        an out-of-sequence ``get`` does implicitly)."""
+        with self._cv:
+            self._seek_locked(k)
+
+    def get(self, k: int):
+        """Staged ``(seeds, salt)`` device arrays for step ``k``.
+
+        Serves the ring head when it is step ``k``; otherwise drains and
+        refills from ``k`` (restart semantics).  Blocks until the slot is
+        staged; re-raises any error the worker thread hit.
+        """
+        k = int(k)
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("SeedStager is closed")
+            head = self._ring[0][0] if self._ring else self._want
+            if head != k:
+                self._seek_locked(k)
+            while not self._ring:
+                if self._error is not None:
+                    err, self._error = self._error, None
+                    self._cv.notify_all()   # let the worker retry
+                    raise err
+                if self._closed:
+                    raise RuntimeError("SeedStager is closed")
+                self._cv.wait()
+            _, item = self._ring.popleft()
+            self._cv.notify_all()           # a slot freed: keep staging
+            return item
+
+    # ----------------------------------------------------------- lifecycle
+
+    @property
+    def staged(self) -> int:
+        """Number of slots currently staged (ready, transfer enqueued)."""
+        with self._cv:
+            return len(self._ring)
+
+    def close(self) -> None:
+        """Stop the worker thread and drop staged slots (idempotent)."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._ring.clear()
+            self._cv.notify_all()
+        self._thread.join(timeout=10.0)
+
+    def __enter__(self) -> "SeedStager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def make_stager(staging, stream, *, depth: int, spec, executor, pipeline):
+    """Resolve a driver's ``staging`` argument into ``(stager, owned)``.
+
+    ``staging`` may be ``None`` (defer to ``spec.prefetch.staging``), a
+    bool, or an already-built ``SeedStager`` (advanced callers sharing a
+    stager across drivers — adopted, not owned, so the driver's
+    ``close()`` leaves it running).  When a stager is built here
+    (``owned=True``), the executor's ``seed_sharding(pipeline)`` hook
+    (when present) chooses where the staged seeds land — e.g. the
+    shard_map executor pre-shards them along the worker axis so the
+    jitted program never reshards.
+    """
+    if staging is None:
+        staging = spec.prefetch.staging
+    if isinstance(staging, SeedStager):
+        return staging, False
+    if not staging:
+        return None, False
+    sharding = None
+    hook = getattr(executor, "seed_sharding", None)
+    if hook is not None:
+        sharding = hook(pipeline)
+    return SeedStager(stream, depth=depth, lead=spec.prefetch.lead,
+                      sharding=sharding), True

@@ -1,8 +1,16 @@
 """Flat-npz checkpointing for arbitrary pytrees (params + opt state).
 
 Keys are '/'-joined tree paths; restore rebuilds into a provided structure
-(shape/dtype checked).  Good enough for single-host; a real pod deployment
-would swap in array-shard streaming behind the same interface.
+(shape/dtype checked — a dtype mismatch is an error, never a silent cast:
+casting optimizer moments on resume corrupts training).  Good enough for
+single-host; a real pod deployment would swap in array-shard streaming
+behind the same interface.
+
+Reserved names: ``__step__`` stores the step counter and the ``::bf16``
+suffix marks bfloat16 leaves stored as raw uint16 bits (np.savez cannot
+hold bf16).  User tree keys that collide with either — or that contain
+``/`` and would be ambiguous against joined paths — are rejected at save
+time rather than silently misread at restore time.
 """
 from __future__ import annotations
 
@@ -14,13 +22,31 @@ import numpy as np
 
 
 _BF16_SUFFIX = "::bf16"
+_STEP_KEY = "__step__"
 
 
 def _flatten(tree):
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
+        parts = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        for part in parts:
+            if "/" in part:
+                raise ValueError(
+                    f"checkpoint key component {part!r} contains '/': "
+                    f"ambiguous with '/'-joined tree paths (e.g. "
+                    f"{{'a/b': x}} vs {{'a': {{'b': x}}}} would collide)")
+            if _BF16_SUFFIX in part:
+                raise ValueError(
+                    f"checkpoint key component {part!r} contains the "
+                    f"reserved bfloat16 marker {_BF16_SUFFIX!r}")
+        key = "/".join(parts)
+        if key == _STEP_KEY:
+            raise ValueError(
+                f"checkpoint key {_STEP_KEY!r} is reserved for the step "
+                f"counter (save_checkpoint(..., step=) stores it)")
+        if key in flat or key + _BF16_SUFFIX in flat:
+            raise ValueError(f"duplicate checkpoint key {key!r} "
+                             f"(two tree paths join to the same name)")
         arr = np.asarray(leaf)
         if arr.dtype == jnp.bfloat16:
             # np.savez has no bf16 cast; store the raw bits
@@ -33,7 +59,7 @@ def _flatten(tree):
 def save_checkpoint(path: str, tree, *, step: int | None = None) -> None:
     flat = _flatten(tree)
     if step is not None:
-        flat["__step__"] = np.asarray(step)
+        flat[_STEP_KEY] = np.asarray(step)
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(tmp, "wb") as f:
@@ -42,16 +68,22 @@ def save_checkpoint(path: str, tree, *, step: int | None = None) -> None:
 
 
 def restore_checkpoint(path: str, like):
-    """Restore into the structure of ``like`` (shape & dtype validated)."""
+    """Restore into the structure of ``like`` (shape & dtype validated).
+
+    A stored dtype that differs from the corresponding ``like`` leaf
+    raises ``ValueError`` — restoring f32 optimizer moments into a bf16
+    slot (or vice versa) must fail loudly, not silently cast.  bfloat16
+    leaves round-trip exactly through their ``::bf16`` raw-bits encoding.
+    """
     with np.load(path) as data:
         flat = {k: data[k] for k in data.files}
-    step = int(flat.pop("__step__")) if "__step__" in flat else None
+    step = int(flat.pop(_STEP_KEY)) if _STEP_KEY in flat else None
 
     leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     new_leaves = []
-    for path, leaf in leaves_paths:
+    for path_, leaf in leaves_paths:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
+                       for p in path_)
         if key + _BF16_SUFFIX in flat:
             arr = flat[key + _BF16_SUFFIX].view(jnp.bfloat16)
         elif key in flat:
@@ -60,5 +92,15 @@ def restore_checkpoint(path: str, like):
             raise KeyError(f"checkpoint missing {key}")
         if arr.shape != leaf.shape:
             raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
-        new_leaves.append(jnp.asarray(arr, leaf.dtype))
+        leaf_dtype = np.asarray(leaf).dtype
+        if arr.dtype != leaf_dtype:
+            raise ValueError(
+                f"{key}: stored dtype {arr.dtype} != expected {leaf_dtype} "
+                f"(refusing to cast: a silent cast corrupts optimizer "
+                f"state on resume)")
+        # host (numpy) leaves restore as numpy: jnp.asarray would
+        # canonicalize 64-bit dtypes to 32-bit when x64 is off — exactly
+        # the silent cast the check above promises not to perform
+        new_leaves.append(jnp.asarray(arr) if isinstance(leaf, jax.Array)
+                          else np.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, new_leaves), step

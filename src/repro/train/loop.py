@@ -26,9 +26,11 @@ class GNNTrainer:
     by ``PipelineSpec.from_scheme``); ``cache_capacity`` attaches the §5
     feature cache; ``prefetch_depth`` double-buffers minibatch preparation
     against model compute (0 = synchronous — same seed stream either way,
-    so results are bit-identical across depths).  Runs the per-worker
-    program under vmap (single-device simulation) — launch/train_gnn.py
-    runs the identical program under shard_map.
+    so results are bit-identical across depths); ``staging`` moves the
+    host-side seed argsort + H2D transfer onto a background stager thread
+    (``repro.pipeline.staging`` — also bit-identical).  Runs the
+    per-worker program under vmap (single-device simulation) —
+    launch/train_gnn.py runs the identical program under shard_map.
     """
     layout: PartitionLayout
     cfg: GNNConfig
@@ -37,12 +39,13 @@ class GNNTrainer:
     batch_per_worker: int = 1000 # paper's §4 batch size
     cache_capacity: int = 0
     prefetch_depth: int = 0
+    staging: bool = False
 
     def __post_init__(self):
         spec = PipelineSpec.from_scheme(
             self.scheme, num_parts=self.layout.num_parts,
             fanouts=self.cfg.fanouts, cache_capacity=self.cache_capacity,
-            prefetch_depth=self.prefetch_depth)
+            prefetch_depth=self.prefetch_depth, staging=self.staging)
         self.pipeline = Pipeline.from_layout(self.layout, spec)
         self.counter = self.pipeline.counter
         self.shards = self.pipeline.shards
@@ -57,19 +60,45 @@ class GNNTrainer:
         key = jax.random.key(0)
         self.params = init_gnn_params(key, self.cfg)
         self.opt_state = init_opt_state(self.params, kind="adamw")
+        # per-step round count, snapshotted from the cumulative trace-time
+        # counter the first epoch that actually traces (see run_epoch)
+        self._rounds_per_step = 0
 
     def run_epoch(self, epoch: int, steps_per_epoch: int = 10):
         """Run steps ``epoch*steps_per_epoch .. +steps_per_epoch`` of the
         deterministic seed stream (re-running an epoch replays its exact
-        minibatches); returns summary metrics."""
+        minibatches); returns summary metrics.
+
+        ``loss`` and ``cache_hit_rate`` are averaged over the epoch's
+        steps (not the final step alone), and ``comm_rounds_per_step`` is
+        the per-epoch *snapshot delta* of the cumulative trace-time
+        ``RoundCounter`` — epochs that trace report their own delta, and
+        epochs that re-use compiled programs report the last traced
+        per-step count instead of an ever-growing cumulative total.
+        """
         t0 = time.perf_counter()
+        rounds_before = self.counter.rounds
+        losses, hit_rates = [], []
         for s in range(steps_per_epoch):
             self.params, self.opt_state, loss, metrics = self.driver.step(
                 self.params, self.opt_state,
                 step_idx=epoch * steps_per_epoch + s)
-        return {"loss": float(loss), "epoch_time": time.perf_counter() - t0,
-                "comm_rounds_per_step": self.counter.rounds,
-                "cache_hit_rate": float(metrics["cache_hit_rate"])}
+            losses.append(float(loss))
+            hit_rates.append(float(metrics["cache_hit_rate"]))
+        traced = self.counter.rounds - rounds_before
+        if traced:
+            self._rounds_per_step = traced
+        return {"loss": sum(losses) / len(losses),
+                "final_loss": losses[-1],
+                "epoch_time": time.perf_counter() - t0,
+                "comm_rounds_per_step": self._rounds_per_step,
+                "cache_hit_rate": sum(hit_rates) / len(hit_rates)}
+
+    def close(self) -> None:
+        """Release driver resources (the staging thread, when
+        ``staging=True``) — call when done with a trainer in a long-lived
+        process; safe to call on unstaged trainers too."""
+        self.driver.close()
 
 
 def make_lm_train_step(cfg: ModelConfig, *, lr: float = 3e-4,

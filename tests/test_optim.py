@@ -93,3 +93,55 @@ def test_checkpoint_shape_mismatch_rejected(tmp_path):
     save_checkpoint(path, {"w": jnp.ones((3,))})
     with pytest.raises(ValueError):
         restore_checkpoint(path, {"w": jnp.ones((4,))})
+
+
+def test_checkpoint_dtype_mismatch_rejected(tmp_path):
+    """restore must refuse to cast — a silent cast corrupts optimizer
+    state on resume (the old behavior)."""
+    path = os.path.join(tmp_path, "ck.npz")
+    save_checkpoint(path, {"w": jnp.ones((3,), jnp.float32)})
+    with pytest.raises(ValueError, match="dtype"):
+        restore_checkpoint(path, {"w": jnp.ones((3,), jnp.float16)})
+    with pytest.raises(ValueError, match="dtype"):
+        restore_checkpoint(path, {"w": jnp.ones((3,), jnp.int32)})
+    # bf16-aware both ways: f32 stored -> bf16 slot, bf16 stored -> f32 slot
+    with pytest.raises(ValueError, match="dtype"):
+        restore_checkpoint(path, {"w": jnp.ones((3,), jnp.bfloat16)})
+    save_checkpoint(path, {"w": jnp.ones((3,), jnp.bfloat16)})
+    with pytest.raises(ValueError, match="dtype"):
+        restore_checkpoint(path, {"w": jnp.ones((3,), jnp.float32)})
+    # matching bf16 still round-trips exactly
+    restored, _ = restore_checkpoint(path, {"w": jnp.ones((3,),
+                                                          jnp.bfloat16)})
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_host_64bit_leaves_roundtrip_exactly(tmp_path):
+    """Numpy (host) leaves keep their 64-bit dtype through restore —
+    jnp.asarray would silently canonicalize int64->int32 with x64 off."""
+    path = os.path.join(tmp_path, "ck.npz")
+    big = np.array([2 ** 40, 3], np.int64)
+    save_checkpoint(path, {"t": big, "x": np.ones(2, np.float64)})
+    restored, _ = restore_checkpoint(path, {"t": np.zeros(2, np.int64),
+                                            "x": np.zeros(2, np.float64)})
+    assert restored["t"].dtype == np.int64
+    assert restored["x"].dtype == np.float64
+    np.testing.assert_array_equal(restored["t"], big)
+
+
+def test_checkpoint_reserved_and_ambiguous_keys_rejected(tmp_path):
+    path = os.path.join(tmp_path, "ck.npz")
+    with pytest.raises(ValueError, match="reserved"):
+        save_checkpoint(path, {"__step__": jnp.ones(())}, step=1)
+    with pytest.raises(ValueError, match="bf"):
+        save_checkpoint(path, {"w::bf16": jnp.ones((2,))})
+    with pytest.raises(ValueError, match="ambiguous"):
+        save_checkpoint(path, {"a/b": jnp.ones((2,))})
+    # two paths joining to one flat name must not silently overwrite
+    with pytest.raises(ValueError, match="'/'|duplicate"):
+        save_checkpoint(path, {"a": {"b": jnp.ones((2,))},
+                               "a/b": jnp.zeros((2,))})
+    # nested reserved name is fine only for the *top-level* step slot
+    save_checkpoint(path, {"nested": {"w": jnp.ones((2,))}}, step=3)
+    _, step = restore_checkpoint(path, {"nested": {"w": jnp.ones((2,))}})
+    assert step == 3

@@ -1,0 +1,340 @@
+"""Host-side async seed staging (``repro.pipeline.staging``):
+staged-vs-unstaged bit-equivalence at depths 0/1/2 on both executors,
+ring drain/refill on out-of-sequence indices, checkpoint save/restore
+resume equivalence (the ``DoubleBufferDriver._warmup`` re-fill path), and
+``PrefetchSpec`` staging validation."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core.partition import build_layout, partition_graph
+from repro.data.synthetic_graph import make_power_law_graph
+from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+from repro.optim import init_opt_state
+from repro.pipeline import (Pipeline, PipelineSpec, PlanSpec, PrefetchSpec,
+                            SamplerSpec, SeedStager, SeedStream)
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+P_ = 4
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = make_power_law_graph(1200, 6, num_features=8, num_classes=4,
+                              seed=0)
+    assign = partition_graph(ds.graph, P_, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P_)
+    cfg = GNNConfig(in_dim=8, hidden_dim=8, num_classes=4, num_layers=2,
+                    fanouts=(3, 3), dropout=0.0)
+    params = init_gnn_params(jax.random.key(1), cfg)
+    return ds, layout, cfg, params
+
+
+def _spec(scheme="hybrid", cache=0, depth=0, **prefetch_kw):
+    return PipelineSpec(
+        plan=PlanSpec(num_parts=P_, scheme=scheme, cache_capacity=cache),
+        sampler=SamplerSpec(fanouts=(3, 3), backend="reference"),
+        prefetch=PrefetchSpec(depth=depth, **prefetch_kw))
+
+
+def _loss_fn(cfg):
+    def loss_fn(p, mfgs, h_src, labels, valid):
+        return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
+    return loss_fn
+
+
+def _run(layout, cfg, params, spec, steps=4, start=0, opt=None, batch=8,
+         staging=None):
+    pipe = Pipeline.from_layout(layout, spec)
+    driver = pipe.train_driver(_loss_fn(cfg), batch=batch, lr=0.01,
+                               staging=staging)
+    p = params
+    opt = init_opt_state(p, kind="adamw") if opt is None else opt
+    losses = []
+    for k in range(start, start + steps):
+        p, opt, loss, metrics = driver.step(p, opt, k)
+        losses.append(float(loss))
+    driver.close()
+    return losses, p, opt, metrics
+
+
+def _assert_trees_equal(a, b, msg=""):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=msg)
+
+
+# --------------------------------------------------------------------------
+# spec validation
+# --------------------------------------------------------------------------
+
+def test_prefetch_spec_staging_validation():
+    assert PrefetchSpec().staging is False
+    assert PrefetchSpec().lead == 1
+    assert PrefetchSpec(depth=1, staging=True, lead=3).lead == 3
+    with pytest.raises(ValueError, match="lead"):
+        PrefetchSpec(lead=0)
+    with pytest.raises(ValueError, match="lead"):
+        PrefetchSpec(staging=True, lead=-2)
+    spec = PipelineSpec.from_scheme("hybrid", num_parts=2, fanouts=(3,),
+                                    prefetch_depth=1, staging=True)
+    assert spec.prefetch.staging is True and spec.prefetch.depth == 1
+
+
+def test_stager_rejects_bad_ring():
+    with pytest.raises(ValueError, match="lead"):
+        SeedStager(None, depth=1, lead=0)
+    with pytest.raises(ValueError, match="depth"):
+        SeedStager(None, depth=-1, lead=1)
+
+
+# --------------------------------------------------------------------------
+# the stager itself
+# --------------------------------------------------------------------------
+
+def test_stager_matches_stream_and_reseeks(world):
+    """Sequential gets serve the staged ring; an out-of-sequence index
+    drains and refills it — values always equal the pure stream's."""
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec())
+    stream = SeedStream(pipe, batch=8)
+    with SeedStager(stream, depth=1, lead=2) as stager:
+        for k in (0, 1, 2, 3, 17, 18, 5, 0):   # two jumps, one restart
+            seeds, salt = stager.get(k)
+            np.testing.assert_array_equal(np.asarray(seeds),
+                                          np.asarray(stream.seeds(k)))
+            assert int(salt) == stream.salt_int(k)
+            assert int(np.asarray(salt).dtype.itemsize) == 4
+
+
+def test_stager_seek_drains_ring(world):
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec())
+    stream = SeedStream(pipe, batch=8)
+    stager = SeedStager(stream, depth=0, lead=3)
+    stager.get(0)                       # start staging 1, 2, 3
+    stager.seek(42)                     # drain + refill from 42
+    seeds, _ = stager.get(42)
+    np.testing.assert_array_equal(np.asarray(seeds),
+                                  np.asarray(stream.seeds(42)))
+    stager.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        stager.get(43)
+    stager.close()                      # idempotent
+
+
+def test_stager_propagates_worker_errors():
+    class BrokenStream:
+        def seeds_host(self, k):
+            raise RuntimeError("argsort exploded")
+
+        def salt_int(self, k):
+            return 0
+
+    stager = SeedStager(BrokenStream(), depth=0, lead=1)
+    with pytest.raises(RuntimeError, match="argsort exploded"):
+        stager.get(0)
+    stager.close()
+
+
+# --------------------------------------------------------------------------
+# bit-equivalence: staging on == staging off (vmap executor)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme,cache", [
+    ("hybrid", 0),
+    ("vanilla", 0),
+    ("hybrid", 64),
+])
+def test_staged_bit_equivalence_vmap(world, scheme, cache):
+    ds, layout, cfg, params = world
+    for depth in (0, 1, 2):
+        ref_losses, ref_params, _, _ = _run(
+            layout, cfg, params, _spec(scheme=scheme, cache=cache,
+                                       depth=depth))
+        losses, p, _, _ = _run(
+            layout, cfg, params,
+            _spec(scheme=scheme, cache=cache, depth=depth, staging=True,
+                  lead=2))
+        assert losses == ref_losses, (scheme, cache, depth)
+        _assert_trees_equal(ref_params, p, msg=f"depth={depth}")
+
+
+def test_adopted_stager_survives_driver_close(world):
+    """A caller-built stager passed to ``train_driver(staging=stager)``
+    is adopted, not owned — the driver's ``close()`` leaves it running
+    (sharing a stager across drivers is a documented pattern)."""
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec())
+    stream = SeedStream(pipe, batch=8)
+    stager = SeedStager(stream, depth=0, lead=2)
+    driver = pipe.train_driver(_loss_fn(cfg), batch=8, lr=0.01,
+                               staging=stager)
+    opt = init_opt_state(params, kind="adamw")
+    driver.step(params, opt)
+    driver.close()
+    seeds, _ = stager.get(1)            # still alive after driver.close()
+    np.testing.assert_array_equal(np.asarray(seeds),
+                                  np.asarray(stream.seeds(1)))
+    stager.close()
+
+
+def test_staging_argument_overrides_spec(world):
+    """``train_driver(staging=True)`` stages even when the spec says off
+    (and the runs stay bit-identical)."""
+    ds, layout, cfg, params = world
+    ref_losses, ref_params, _, _ = _run(layout, cfg, params, _spec(depth=1))
+    losses, p, _, _ = _run(layout, cfg, params, _spec(depth=1),
+                           staging=True)
+    assert losses == ref_losses
+    _assert_trees_equal(ref_params, p)
+
+
+def test_driver_restart_with_staging_replays_stream(world):
+    """Out-of-sequence ``step_idx`` drains/refills both the prepared-batch
+    FIFO and the staging ring; the continuation matches the continuous
+    run."""
+    ds, layout, cfg, params = world
+    spec = _spec(depth=2, staging=True)
+    cont_losses, cont_p, _, _ = _run(layout, cfg, params, spec, steps=4)
+
+    head_losses, p_mid, opt_mid, _ = _run(layout, cfg, params, spec,
+                                          steps=2)
+    tail_losses, p_end, _, _ = _run(layout, cfg, p_mid, spec, steps=2,
+                                    start=2, opt=opt_mid)
+    assert head_losses + tail_losses == cont_losses
+    _assert_trees_equal(cont_p, p_end)
+
+
+def test_driver_reset_reseeds_ring(world):
+    """``reset()`` drains the ring; replaying from 0 reproduces the run."""
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec(depth=1, staging=True))
+    driver = pipe.train_driver(_loss_fn(cfg), batch=8, lr=0.01)
+    opt = init_opt_state(params, kind="adamw")
+
+    def replay():
+        p, o, out = params, opt, []
+        for _ in range(3):
+            p, o, loss, _ = driver.step(p, o)
+            out.append(float(loss))
+        return out
+
+    first = replay()
+    driver.reset()
+    assert replay() == first
+    driver.close()
+
+
+# --------------------------------------------------------------------------
+# checkpoint resume bit-equivalence (satellite: the _warmup re-fill path)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("staging", [False, True])
+def test_checkpoint_resume_bit_equivalence_vmap(world, tmp_path, staging):
+    """Save at step k, restore into a fresh driver, continue with
+    ``step(step_idx=k)`` — params match the continuous run exactly."""
+    ds, layout, cfg, params = world
+    spec = _spec(depth=2, staging=staging)
+    cont_losses, cont_p, _, _ = _run(layout, cfg, params, spec, steps=5)
+
+    head_losses, p_mid, opt_mid, _ = _run(layout, cfg, params, spec,
+                                          steps=3)
+    path = os.path.join(tmp_path, f"ck_{staging}.npz")
+    save_checkpoint(path, {"params": p_mid, "opt": opt_mid}, step=3)
+
+    restored, k = restore_checkpoint(path, {"params": p_mid,
+                                            "opt": opt_mid})
+    assert k == 3
+    tail_losses, p_end, _, _ = _run(layout, cfg, restored["params"], spec,
+                                    steps=2, start=k,
+                                    opt=restored["opt"])
+    assert head_losses + tail_losses == cont_losses
+    _assert_trees_equal(cont_p, p_end, msg=f"staging={staging}")
+
+
+# --------------------------------------------------------------------------
+# shard_map executor (subprocess: needs placeholder devices at jax init)
+# --------------------------------------------------------------------------
+
+SHARD_MAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np, jax
+    from repro.core.partition import build_layout, partition_graph
+    from repro.data.synthetic_graph import make_power_law_graph
+    from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+    from repro.optim import init_opt_state
+    from repro.pipeline import (Pipeline, PipelineSpec, PlanSpec,
+                                PrefetchSpec, SamplerSpec)
+    from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+    P = 2
+    ds = make_power_law_graph(800, 6, num_features=8, num_classes=4, seed=0)
+    assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
+    cfg = GNNConfig(in_dim=8, hidden_dim=8, num_classes=4, num_layers=2,
+                    fanouts=(3, 3), dropout=0.0)
+    def loss_fn(p, mfgs, h, y, v):
+        return gnn_loss(p, mfgs, h, y, v, cfg)
+
+    def run(depth, staging, steps=4, start=0, params=None, opt=None):
+        spec = PipelineSpec(
+            plan=PlanSpec(num_parts=P, scheme="hybrid"),
+            sampler=SamplerSpec(fanouts=cfg.fanouts, backend="reference"),
+            executor="shard_map",
+            prefetch=PrefetchSpec(depth=depth, staging=staging, lead=2))
+        pipe = Pipeline.from_layout(layout, spec)
+        driver = pipe.train_driver(loss_fn, batch=8, lr=0.01)
+        p = init_gnn_params(jax.random.key(0), cfg) if params is None \\
+            else params
+        o = init_opt_state(p, kind="adamw") if opt is None else opt
+        losses = []
+        for k in range(start, start + steps):
+            p, o, loss, m = driver.step(p, o, k)
+            losses.append(float(loss))
+        driver.close()
+        return losses, p, o
+
+    def eq(a, b):
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    for depth in (0, 1, 2):
+        l_off, p_off, _ = run(depth, False)
+        l_on, p_on, _ = run(depth, True)
+        assert l_on == l_off, (depth, l_on, l_off)
+        eq(p_off, p_on)
+
+    # checkpoint resume at step 2 through the depth-2 _warmup refill,
+    # staged: must replay the continuous staged run bit-for-bit
+    cont_l, cont_p, _ = run(2, True, steps=4)
+    head_l, p_mid, o_mid = run(2, True, steps=2)
+    save_checkpoint("/tmp/staging_ck.npz",
+                    {"params": p_mid, "opt": o_mid}, step=2)
+    restored, k = restore_checkpoint("/tmp/staging_ck.npz",
+                                     {"params": p_mid, "opt": o_mid})
+    tail_l, p_end, _ = run(2, True, steps=2, start=k,
+                           params=restored["params"], opt=restored["opt"])
+    assert head_l + tail_l == cont_l, (head_l, tail_l, cont_l)
+    eq(cont_p, p_end)
+    print("SHARD_MAP_STAGING_OK")
+""")
+
+
+def test_staging_bit_equivalence_shard_map_subprocess():
+    """Pre-sharded staged seeds under shard_map replay the unstaged path
+    bit-for-bit at depths 0/1/2, including a staged checkpoint resume
+    (subprocess so the main process keeps its single-device view)."""
+    r = subprocess.run([sys.executable, "-c", SHARD_MAP_SCRIPT],
+                       capture_output=True, text=True, env=ENV,
+                       timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "SHARD_MAP_STAGING_OK" in r.stdout
