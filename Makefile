@@ -19,7 +19,7 @@ docs-check:
 # placement-scheme and graph-source sweeps, which exercise every registry
 # dispatch path, + the staged-vs-unstaged seed-staging delta
 bench-smoke:
-	$(PYTHON) -m benchmarks.run cache schemes datasets staging
+	$(PYTHON) -m benchmarks.run cache schemes datasets staging serve
 
 # graph-source subsystem smoke: generate every synthetic family at toy
 # scale, round-trip save/load exactly, re-check determinism + streaming

@@ -139,6 +139,50 @@ def datasets_table(recs):
     return "\n".join(rows)
 
 
+def serve_table(recs):
+    """Online-serving table (bench_serve records): p50/p99/QPS and
+    recycler hit rate per (scheme, bucket config, recycling) arm, all
+    arms at the same calibrated open-loop arrival rate."""
+    rows = ["| scheme | buckets | recycle | rate req/s | p50 | p99 "
+            "| QPS | recycled | hit rate | dataset |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("workload") != "serve":
+            continue
+        rc = r.get("recycler") or {}
+        hit = f"{100.0 * rc['hit_rate']:.1f}%" if rc else "-"
+        rows.append(
+            f"| {r['scheme']} | {r['bucket_config']} "
+            f"| {'on' if r['recycle'] else 'off'} "
+            f"| {r['rate_req_per_s']:.0f} "
+            f"| {fmt_s(r['p50_ms'] / 1e3)} | {fmt_s(r['p99_ms'] / 1e3)} "
+            f"| {r['qps']:.0f} "
+            f"| {100.0 * r['recycled_fraction']:.1f}% | {hit} "
+            f"| {dataset_cols_label(r)} |")
+    return "\n".join(rows)
+
+
+def serve_claims(recs):
+    """One verdict line per scheme from the serve__claims record."""
+    lines = []
+    for r in recs:
+        if r.get("workload") != "serve-claims":
+            continue
+        for scheme, c in r["claims"].items():
+            lines.append(
+                f"- {scheme}: recycling p50 "
+                f"{c['norecycle_p50_ms']:.2f} -> "
+                f"{c['recycle_p50_ms']:.3f} ms "
+                f"(beats: {c['recycling_beats_p50']}), QPS "
+                f"{c['norecycle_qps']:.0f} -> {c['recycle_qps']:.0f} "
+                f"(beats: {c['recycling_beats_qps']}), argmax agreement "
+                f"{c['argmax_agreement_on_vs_off']:.3f}; bucketed p99 "
+                f"{c['bucketed_p99_ms']:.1f} ms vs no-batching "
+                f"{c['nobatch_p99_ms']:.1f} ms "
+                f"(holds: {c['bucketing_holds_p99']})")
+    return "\n".join(lines)
+
+
 def dryrun_table(recs, mesh):
     rows = ["| arch | shape | exec/prefetch | status | per-dev peak mem "
             "| collectives (AR/AG/RS/A2A/CP) | compile |",
@@ -190,6 +234,7 @@ def main():
     ap.add_argument("--schemes-dir", default="experiments/schemes")
     ap.add_argument("--datasets-dir", default="experiments/datasets")
     ap.add_argument("--staging-dir", default="experiments/staging")
+    ap.add_argument("--serve-dir", default="experiments/serve")
     args = ap.parse_args()
     recs = load(args.dir)
     print(f"## Dry-run ({args.mesh})\n")
@@ -211,6 +256,15 @@ def main():
     if st_recs:
         print("\n## Host-side seed staging (staged vs unstaged steps/s)\n")
         print(staging_table(st_recs))
+    sv_recs = load(args.serve_dir) if os.path.isdir(args.serve_dir) \
+        else []
+    if sv_recs:
+        print("\n## Online serving (latency / QPS / recycler hit rate)\n")
+        print(serve_table(sv_recs))
+        verdicts = serve_claims(sv_recs)
+        if verdicts:
+            print("\nClaims (recycling wins + bucketing holds p99):\n")
+            print(verdicts)
 
 
 if __name__ == "__main__":

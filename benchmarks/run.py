@@ -16,6 +16,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      unstaged at depth 0/1/2 per scheme)
   * bench_datasets — scheme x graph-source sweep (repro.data registry):
                      expected rounds vs dataset skew at equal nnz
+  * bench_serve    — online serving (repro.serve): p50/p99/QPS per
+                     scheme x bucket config x recycling on/off
 
 Pass section names to run a subset: ``python -m benchmarks.run cache
 schemes``.
@@ -26,8 +28,8 @@ import sys
 def main() -> None:
     from benchmarks import (bench_cache, bench_datasets, bench_epoch,
                             bench_kernels, bench_prefetch, bench_sampling,
-                            bench_schemes, bench_staging, bench_storage,
-                            bench_table1)
+                            bench_schemes, bench_serve, bench_staging,
+                            bench_storage, bench_table1)
     mods = {
         "table1": bench_table1,
         "storage": bench_storage,
@@ -39,6 +41,7 @@ def main() -> None:
         "prefetch": bench_prefetch,
         "staging": bench_staging,
         "datasets": bench_datasets,
+        "serve": bench_serve,
     }
     only = set(sys.argv[1:])
     unknown = only - set(mods)

@@ -94,6 +94,64 @@ def _assemble_cache(layout: PartitionLayout, capacity: int,
                         rows=jnp.asarray(rows_out))
 
 
+def degree_hot_ids(graph, k: int | None = None) -> np.ndarray:
+    """Node ids ranked hottest-first by in-degree (ties broken by id asc).
+
+    The shared "who's hot" ranking: under uniform neighbor sampling a
+    node's access frequency is proportional to its in-degree, so this one
+    ordering drives the ``"degree"`` feature-cache policy, the serving
+    recycler's admission filter (``repro.serve.recycler``), and the
+    hot-set-skewed traffic generator (``repro.serve.traffic``).
+
+    Returns the top ``k`` ids (all nodes if ``k`` is None).
+    """
+    deg = np.asarray(graph.degrees())
+    ranked = np.argsort(-deg, kind="stable").astype(np.int32)
+    return ranked if k is None else ranked[:k]
+
+
+class FrequencyTracker:
+    """Online exponentially-decayed access counts over node ids.
+
+    The dynamic counterpart of ``degree_hot_ids``: observe id batches as
+    they arrive (serving requests, sampled sources, ...) and ask for the
+    current hot set.  Counts decay by ``decay`` per ``observe`` call, so
+    the hot set follows the recent access distribution instead of the
+    all-time one — which is what the serving recycler needs to decide
+    which seeds are worth keeping recycled entries for.
+
+    Host-side numpy, O(num_nodes) memory; not a jit-traced object.
+    """
+
+    def __init__(self, num_nodes: int, *, decay: float = 1.0):
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        self.num_nodes = int(num_nodes)
+        self.decay = float(decay)
+        self.counts = np.zeros(self.num_nodes, np.float64)
+        self.total_observed = 0
+
+    def observe(self, ids) -> None:
+        """Fold one batch of node ids into the decayed counts."""
+        ids = np.asarray(ids).ravel()
+        ids = ids[(ids >= 0) & (ids < self.num_nodes)]
+        if self.decay < 1.0:
+            self.counts *= self.decay
+        np.add.at(self.counts, ids, 1.0)
+        self.total_observed += ids.size
+
+    def topk(self, k: int) -> np.ndarray:
+        """Top-``k`` ids by decayed count desc, ties by id asc."""
+        ids = np.arange(self.num_nodes)
+        ranked = ids[np.lexsort((ids, -self.counts))]
+        return ranked[:k].astype(np.int32)
+
+    def is_hot(self, ids, k: int) -> np.ndarray:
+        """Boolean mask: is each id currently in the top-``k`` set?"""
+        hot = set(self.topk(k).tolist())
+        return np.asarray([int(i) in hot for i in np.asarray(ids).ravel()])
+
+
 def degree_caches(layout: PartitionLayout, capacity: int,
                   **_ignored) -> FeatureCache:
     """Host-side: per worker, cache the top-`capacity` highest-in-degree
@@ -102,11 +160,10 @@ def degree_caches(layout: PartitionLayout, capacity: int,
     Prefer ``repro.pipeline.PlanSpec(cache_capacity=K)`` — ``Pipeline.build``
     then constructs the cache and threads it through the feature fetch.
     """
-    deg = np.asarray(layout.graph.degrees())
     offsets = np.asarray(layout.offsets)
     P = layout.num_parts
 
-    all_ids = np.argsort(-deg, kind="stable")
+    all_ids = degree_hot_ids(layout.graph)
     # loop-invariant: ownership of the degree-ranked ids
     owner = np.searchsorted(offsets, all_ids, side="right") - 1
     picks = [all_ids[owner != p][:capacity] for p in range(P)]

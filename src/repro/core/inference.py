@@ -39,16 +39,37 @@ def full_neighborhood_level(graph: CSCGraph, seeds: jnp.ndarray,
 
 
 def layerwise_inference(params, graph: CSCGraph, features: jnp.ndarray,
-                        cfg: GNNConfig, *, batch_size: int = 512
-                        ) -> jnp.ndarray:
+                        cfg: GNNConfig, *, batch_size: int = 512,
+                        max_degree: int | None = None) -> jnp.ndarray:
     """Exact logits for EVERY node: L passes over the node set.
 
     Layer l reads the layer-(l-1) embedding table and writes the layer-l
     table; within a pass, nodes are processed in fixed-size batches with
     full-neighborhood MFGs.  Memory: O(num_nodes * hidden).
+
+    Parameters
+    ----------
+    max_degree : int | None, default None
+        Cap on the per-node neighborhood width.  ``None`` pads every
+        batch to the graph's true max in-degree — exact, but on
+        power-law graphs a single hub inflates EVERY batch to
+        O(batch_size × max_deg) padding.  An int caps the width at
+        ``min(true max degree, max_degree)``.
+
+        Truncation semantics: a node with in-degree d > max_degree
+        aggregates the mean over its FIRST ``max_degree`` in-edges in
+        CSC order (``graph.indices[indptr[v] : indptr[v]+max_degree]``)
+        — a deterministic truncation, not a random subsample.  Nodes
+        with d <= max_degree are unaffected, so any cap >= the true max
+        degree is bit-identical to the uncapped exact result
+        (``tests/test_convs_inference.py``).
     """
     n = graph.num_nodes
     max_deg = int(jnp.max(graph.degrees()))
+    if max_degree is not None:
+        if max_degree < 1:
+            raise ValueError(f"max_degree must be >= 1, got {max_degree}")
+        max_deg = min(max_deg, int(max_degree))
     pad = (-n) % batch_size
     all_nodes = np.concatenate(
         [np.arange(n, dtype=np.int32), np.full(pad, -1, np.int32)])

@@ -183,6 +183,28 @@ class VmapExecutor:
 
         return run
 
+    def bind_infer(self, pipeline, infer_step):
+        """Bind an inference step (``repro.pipeline.infer``) under vmap.
+
+        Unlike ``bind``, the primary output stays **per-worker**:
+        ``run(params, seeds, salt) -> (logits, metrics)`` with ``logits``
+        stacked (P, batch, C) — serving routes each request to its seed's
+        owning worker's row.  ``metrics`` is already pmean/psum-reduced
+        inside the step, so worker 0's copy is returned.
+        """
+        use_cache = pipeline.cache is not None
+        in_axes = (None, 0, 0, None) + ((0,) if use_cache else ())
+        vstep = jax.vmap(infer_step, in_axes=in_axes, axis_name=dist.AXIS)
+
+        def run(params, seeds, salt):
+            args = (params, pipeline.shards, seeds, salt)
+            if use_cache:
+                args += (pipeline.cache,)
+            logits, metrics = vstep(*args)
+            return logits, jax.tree.map(lambda x: x[0], metrics)
+
+        return run
+
     def bind_prefetch(self, pipeline, prepare, prepare_warm, consume,
                       update):
         """Bind the split step program for double-buffered execution.
@@ -298,6 +320,55 @@ class ShardMapExecutor:
                 wrapper, mesh=mesh,
                 in_specs=(P(), P(dist.AXIS), P(dist.AXIS), P()),
                 out_specs=(P(), P(), P()), check=False)
+
+            def run(params, seeds, salt):
+                return smap(params, pipeline.shards, seeds, salt)
+
+        return run
+
+    def bind_infer(self, pipeline, infer_step):
+        """Bind an inference step (``repro.pipeline.infer``) under
+        shard_map on the executor's mesh.
+
+        ``run(params, seeds, salt) -> (logits, metrics)``: ``logits`` is
+        (P, batch, C), sharded along the worker axis (each device holds
+        its own seeds' logits); ``metrics`` is replicated (the step
+        pmean/psums it over ``dist.AXIS``).
+        """
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+
+        mesh = self._resolve_mesh(pipeline)
+        use_cache = pipeline.cache is not None
+        squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
+
+        if use_cache:
+            def wrapper(params, shards, seeds, cache, salt):
+                logits, metrics = infer_step(params, squeeze(shards),
+                                             seeds[0], salt,
+                                             squeeze(cache))
+                return logits[None], metrics
+
+            smap = shard_map(
+                wrapper, mesh=mesh,
+                in_specs=(P(), P(dist.AXIS), P(dist.AXIS), P(dist.AXIS),
+                          P()),
+                out_specs=(P(dist.AXIS), P()), check=False)
+
+            def run(params, seeds, salt):
+                return smap(params, pipeline.shards, seeds,
+                            pipeline.cache, salt)
+        else:
+            def wrapper(params, shards, seeds, salt):
+                logits, metrics = infer_step(params, squeeze(shards),
+                                             seeds[0], salt)
+                return logits[None], metrics
+
+            smap = shard_map(
+                wrapper, mesh=mesh,
+                in_specs=(P(), P(dist.AXIS), P(dist.AXIS), P()),
+                out_specs=(P(dist.AXIS), P()), check=False)
 
             def run(params, seeds, salt):
                 return smap(params, pipeline.shards, seeds, salt)

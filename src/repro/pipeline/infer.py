@@ -1,0 +1,140 @@
+"""Inference-mode prepare/consume split: the serving-side step program.
+
+Training steps (``repro.pipeline.worker`` / ``repro.pipeline.prefetch``)
+end in a value-and-grad over the loss; serving wants the *logits* for the
+seed nodes and nothing else.  This module reuses the exact training-side
+*prepare* half (multi-level sampling + feature fetch — the expensive,
+communication-bearing part FastSample accelerates) and swaps the consume
+half for a gradient-free forward:
+
+    prepare(shard, seeds, salt, cache) -> PreparedBatch      (unchanged)
+    consume(params, shard, batch, cache) -> (logits, metrics)
+
+Because the prepare half is the *same closure construction* the training
+path uses (same placement scheme, level backend, cache stage, hash
+stream), serving a seed batch under any (scheme, executor, cache) combo
+produces logits bit-identical to the training-side forward on the same
+``(seeds, salt)`` — the invariant ``tests/test_serve.py`` asserts and the
+``repro.serve`` recycler's correctness oracle relies on.
+
+Per-worker contract (runs under ``dist.AXIS`` like every step program):
+
+    infer_step(params, shard, seeds, salt[, cache]) -> (logits, metrics)
+
+``logits`` is (batch, num_classes) for THIS worker's seed row — outputs
+stay per-worker (serving routes each request to its seed's owner), unlike
+training where loss/grads are worker-axis reduced.  ``metrics`` is
+pmean/psum-reduced as in training so executors can replicate it.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import dist
+from repro.pipeline.prefetch import PreparedBatch, make_prepare_consume
+
+
+def make_infer_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
+                               fanouts: Sequence[int],
+                               forward_fn: Callable,
+                               scheme: str = "hybrid",
+                               graph_replicated=None,
+                               backend: str | None = None,
+                               level_fn: Callable | None = None,
+                               counter: dist.RoundCounter | None = None,
+                               vanilla_fused: bool | None = None,
+                               plan=None):
+    """Build the *prepare* / *consume* halves of the inference step.
+
+    Parameters
+    ----------
+    forward_fn : Callable
+        ``forward_fn(params, mfgs, h_src) -> (batch, C) logits`` — e.g.
+        ``lambda p, mfgs, h: gnn_forward(p, mfgs, h, cfg)``.  Replaces
+        the training contract's ``loss_fn``.
+    offsets, num_parts, fanouts, scheme, graph_replicated, backend,
+    level_fn, counter, vanilla_fused, plan
+        As in ``repro.pipeline.prefetch.make_prepare_consume``.  The
+        feature fetch always runs in the prepare half (serving has no
+        backward pass to hide it behind).
+
+    Returns
+    -------
+    (prepare, consume)
+        ``prepare(shard, seeds, salt, cache) -> PreparedBatch`` — the
+        identical closure the training path builds — and
+        ``consume(params, shard, batch, cache) -> (logits, metrics)``.
+    """
+    # the prepare half is the training one, verbatim: same sampling
+    # program, same feature/cache stage, same hash stream.  The training
+    # loss_fn is only read by the training consume half, which we drop.
+    prepare, _ = make_prepare_consume(
+        offsets=offsets, num_parts=num_parts, fanouts=fanouts,
+        loss_fn=_unused_loss, scheme=scheme,
+        graph_replicated=graph_replicated, backend=backend,
+        level_fn=level_fn, counter=counter, vanilla_fused=vanilla_fused,
+        features=True, plan=plan)
+
+    def consume(params, shard: dist.WorkerShard, batch: PreparedBatch,
+                cache=None):
+        mfgs = list(batch.mfgs)
+        logits = forward_fn(params, mfgs, batch.h_src)
+        hit_rate = batch.hits / jnp.maximum(
+            jnp.sum(mfgs[-1].src_nodes >= 0), 1)
+        comm = dict(batch.comm)
+        metrics = {
+            "cache_hit_rate": lax.pmean(hit_rate.astype(jnp.float32),
+                                        dist.AXIS),
+            "sampling_utilized_bytes": lax.psum(
+                comm["sampling_utilized_bytes"], dist.AXIS),
+            "feature_utilized_bytes": lax.psum(
+                comm["feature_utilized_bytes"], dist.AXIS),
+        }
+        return logits, metrics
+
+    return prepare, consume
+
+
+def make_infer_step(*, offsets, num_parts, fanouts, forward_fn,
+                    scheme: str = "hybrid", graph_replicated=None,
+                    backend: str | None = None,
+                    level_fn: Callable | None = None,
+                    counter: dist.RoundCounter | None = None,
+                    vanilla_fused: bool | None = None,
+                    use_cache: bool = False, plan=None):
+    """The fused per-worker inference program — the composition of the
+    halves from ``make_infer_prepare_consume`` (mirroring how
+    ``repro.pipeline.worker.make_worker_step`` composes the training
+    halves, which is what keeps the two paths op-for-op aligned).
+
+    Returns ``step(params, shard, seeds, salt[, cache]) ->
+    (logits, metrics)`` written against ``dist.AXIS``.
+    """
+    prepare, consume = make_infer_prepare_consume(
+        offsets=offsets, num_parts=num_parts, fanouts=fanouts,
+        forward_fn=forward_fn, scheme=scheme,
+        graph_replicated=graph_replicated, backend=backend,
+        level_fn=level_fn, counter=counter, vanilla_fused=vanilla_fused,
+        plan=plan)
+
+    def _body(params, shard, seeds, salt, cache):
+        batch = prepare(shard, seeds, salt, cache)
+        return consume(params, shard, batch, cache)
+
+    if use_cache:
+        def step(params, shard, seeds, salt, cache):
+            return _body(params, shard, seeds, salt, cache)
+    else:
+        def step(params, shard, seeds, salt):
+            return _body(params, shard, seeds, salt, None)
+
+    return step
+
+
+def _unused_loss(params, mfgs, h_src, seed_labels, seed_valid):
+    raise AssertionError(
+        "the inference path dropped the training consume half; its "
+        "loss_fn must never be called")

@@ -225,6 +225,88 @@ class Pipeline:
             counter=self.counter if counted else None,
             features=self.spec.prefetch.features, plan=self.placement)
 
+    def make_infer_prepare_consume(self, forward_fn, *,
+                                   counted: bool = False):
+        """Build the per-worker *prepare* / *consume* halves of the
+        **inference** step (``repro.pipeline.infer``): the prepare half is
+        the training one verbatim (same sampling program, feature/cache
+        stage, hash stream); the consume half computes logits instead of
+        loss/grads.
+
+        Parameters
+        ----------
+        forward_fn : Callable
+            ``forward_fn(params, mfgs, h_src) -> (batch, C) logits``.
+        counted : bool, default False
+            Whether traces tick the pipeline's ``RoundCounter``.  Off by
+            default so serving a trained pipeline does not perturb its
+            training-side round accounting.
+
+        Returns
+        -------
+        (prepare, consume)
+            ``prepare(shard, seeds, salt, cache) -> PreparedBatch`` and
+            ``consume(params, shard, batch, cache) -> (logits, metrics)``.
+        """
+        from repro.pipeline import infer as _infer
+
+        plan, sampler = self.spec.plan, self.spec.sampler
+        return _infer.make_infer_prepare_consume(
+            offsets=self.layout.offsets, num_parts=plan.num_parts,
+            fanouts=sampler.fanouts, forward_fn=forward_fn,
+            scheme=plan.scheme, graph_replicated=self.graph_replicated,
+            backend=sampler.backend,
+            counter=self.counter if counted else None, plan=self.placement)
+
+    def make_infer_step(self, forward_fn, *, counted: bool = False):
+        """Build the raw fused per-worker inference program
+        (``repro.pipeline.infer.make_infer_step``); most callers want
+        ``infer_step_fn`` or ``repro.serve.Predictor``.
+
+        Returns
+        -------
+        Callable
+            ``step(params, shard, seeds, salt[, cache]) ->
+            (logits, metrics)`` written against ``dist.AXIS``.
+        """
+        from repro.pipeline import infer as _infer
+
+        plan, sampler = self.spec.plan, self.spec.sampler
+        return _infer.make_infer_step(
+            offsets=self.layout.offsets, num_parts=plan.num_parts,
+            fanouts=sampler.fanouts, forward_fn=forward_fn,
+            scheme=plan.scheme, graph_replicated=self.graph_replicated,
+            backend=sampler.backend,
+            counter=self.counter if counted else None,
+            use_cache=self.cache is not None, plan=self.placement)
+
+    def infer_step_fn(self, forward_fn, executor=None, *,
+                      jit: bool = True, counted: bool = False):
+        """Bind the inference step to the spec'd executor.
+
+        Returns
+        -------
+        Callable
+            ``fn(params, seeds, salt) -> (logits, metrics)`` taking
+            stacked (P, batch) seeds routed to their owning workers
+            (``repro.serve.batcher.route_by_owner``); ``logits`` is
+            (P, batch, C) — row p holds worker p's seeds' logits, padded
+            slots carry garbage and must be dropped by the caller.
+
+        Sampled inference on the same ``(seeds, salt)`` is bit-identical
+        to the training-side forward for every scheme/executor/cache
+        combination (``tests/test_serve.py``).
+        """
+        if executor is None:
+            executor = resolve_executor(self.spec.executor)
+        bind = getattr(executor, "bind_infer", None)
+        if bind is None:
+            raise TypeError(
+                f"executor {getattr(executor, 'name', executor)!r} does "
+                f"not support inference binding (no bind_infer method)")
+        fn = bind(self, self.make_infer_step(forward_fn, counted=counted))
+        return jax.jit(fn) if jit else fn
+
     def step_fn(self, loss_fn, executor=None):
         """Bind the fused step to the spec'd executor.
 

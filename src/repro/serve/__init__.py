@@ -1,0 +1,31 @@
+"""Online sampled-subgraph GNN inference serving (ROADMAP item 2).
+
+Turns a trained ``repro.pipeline.Pipeline`` into an online predictor:
+
+  * ``Predictor``       — request-shaped API over the pipeline's
+                          inference-mode step (owner routing, bucketed
+                          batch shapes, original-id mapping);
+  * ``MicroBatcher``    — deadline-/size-triggered request accumulator
+                          (``BucketSpec`` bounds jit retraces);
+  * ``RecyclingCache``  — LazyGNN-style reuse of recent results for hot
+                          seeds under a tau/rho staleness contract;
+  * ``GNNServer``       — the serving loop + latency/QPS accounting;
+  * ``repro.serve.traffic`` — open-loop synthetic arrival generators.
+
+Quickstart: ``python -m repro.launch.serve_gnn``; design notes in
+docs/architecture.md.
+"""
+from repro.serve.batcher import (BucketSpec, MicroBatcher, Request,
+                                 max_owner_count, route_by_owner)
+from repro.serve.predictor import Predictor
+from repro.serve.recycler import RecyclingCache, hot_set_admit
+from repro.serve.server import GNNServer, ServeStats
+from repro.serve.traffic import (available_arrivals, register_arrival,
+                                 resolve_arrival)
+
+__all__ = [
+    "BucketSpec", "MicroBatcher", "Request", "max_owner_count",
+    "route_by_owner", "Predictor", "RecyclingCache", "hot_set_admit",
+    "GNNServer", "ServeStats", "available_arrivals", "register_arrival",
+    "resolve_arrival",
+]

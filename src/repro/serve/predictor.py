@@ -1,0 +1,148 @@
+"""``Predictor``: a trained ``Pipeline`` turned into an online scorer.
+
+Wraps the pipeline's inference-mode step (``Pipeline.infer_step_fn``,
+i.e. the SAME sampling + feature-fetch program training runs, minus
+loss/grad) behind a request-shaped API:
+
+    pred = trainer.predictor()              # or Predictor(pipeline, ...)
+    logits = pred.predict([seed ids])       # (N, num_classes)
+
+Three serving concerns live here:
+
+  * **id space** — requests use ORIGINAL graph node ids; the partition
+    relabels nodes contiguously per owner (``layout.perm``), so the
+    predictor maps through the inverse permutation on the way in.
+  * **routing** — every placement scheme requires each worker's seed row
+    to contain only seeds that worker OWNS, so the flat request batch is
+    routed into the stacked (P, bucket) layout and scattered back.
+  * **bucketing** — batches are padded to a ``BucketSpec`` size so the
+    jitted step compiles once per (bucket, executor) rather than once
+    per batch size.  Padding is row-local (-1 seeds), and sampling is a
+    stateless per-seed hash, so a seed's logits are bit-identical across
+    bucket sizes and co-batched seeds.
+
+Salt policy: ``predict`` defaults to the predictor's FIXED ``base_salt``
+so the same seed always resamples the same subgraph — deterministic
+serving, and the recycler's bit-identity guarantee.  Pass ``salt=`` (or
+use ``GNNServer(salt_policy="step")``) to draw fresh samples instead.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn import GNNConfig, gnn_forward
+from repro.serve.batcher import BucketSpec, max_owner_count, route_by_owner
+
+
+class Predictor:
+    """Online sampled-subgraph inference over a trained pipeline.
+
+    Parameters
+    ----------
+    pipeline : repro.pipeline.Pipeline
+        The (trained) pipeline whose sampler/placement/cache machinery
+        the inference step reuses.
+    params
+        Trained model parameters.
+    cfg : GNNConfig | None
+        Model config; builds the default forward
+        ``gnn_forward(p, mfgs, h, cfg)`` (no dropout).  Exactly one of
+        ``cfg`` / ``forward_fn`` must be given.
+    forward_fn : Callable | None
+        Custom ``forward_fn(params, mfgs, h_src) -> (batch, C) logits``.
+    buckets : sequence of int
+        Per-worker batch capacities (see ``BucketSpec``).
+    base_salt : int
+        Sampling salt used when ``predict(salt=None)``.
+    ids_are_original : bool
+        Whether request seeds are original (pre-partition) node ids
+        (default) or already in the layout's relabeled id space.
+    """
+
+    def __init__(self, pipeline, params, cfg: GNNConfig | None = None, *,
+                 forward_fn: Callable | None = None,
+                 buckets: Sequence[int] = (1, 8, 32, 128),
+                 base_salt: int = 0, ids_are_original: bool = True,
+                 executor=None, jit: bool = True):
+        if (cfg is None) == (forward_fn is None):
+            raise ValueError("pass exactly one of cfg= or forward_fn=")
+        if forward_fn is None:
+            def forward_fn(p, mfgs, h_src):
+                return gnn_forward(p, mfgs, h_src, cfg)
+        self.pipeline = pipeline
+        self.params = params
+        self.buckets = BucketSpec(buckets)
+        self.base_salt = int(base_salt)
+        self.offsets = np.asarray(pipeline.layout.offsets)
+        self.num_classes: int | None = None
+        self.last_metrics: dict | None = None
+        if ids_are_original:
+            perm = np.asarray(pipeline.layout.perm)
+            inv = np.empty_like(perm)
+            inv[perm] = np.arange(perm.shape[0])
+            self._old_to_new = inv
+        else:
+            self._old_to_new = None
+        self._infer = pipeline.infer_step_fn(forward_fn, executor,
+                                             jit=jit)
+
+    def _to_internal(self, seeds: np.ndarray) -> np.ndarray:
+        if seeds.size and (seeds.min() < 0
+                           or seeds.max() >= self.offsets[-1]):
+            raise ValueError("seed ids out of range for this graph")
+        if self._old_to_new is None:
+            return seeds
+        return self._old_to_new[seeds].astype(np.int32)
+
+    def warmup(self, *, buckets: Sequence[int] | None = None):
+        """Compile the jitted step for each bucket up front (so serving
+        latencies never include compile time)."""
+        for b in (buckets or self.buckets.sizes):
+            seeds = np.full((self.offsets.shape[0] - 1, b), -1, np.int32)
+            seeds[:, 0] = self.offsets[:-1]        # one owned seed per row
+            self._infer(self.params, jnp.asarray(seeds),
+                        jnp.uint32(self.base_salt))
+
+    def predict(self, seeds, *, salt: int | None = None) -> np.ndarray:
+        """Logits for a flat batch of seed node ids.
+
+        Returns (N, num_classes) float32 in request order.  Batches whose
+        max per-owner count exceeds the largest bucket are served in
+        several chunks transparently.  ``self.last_metrics`` holds the
+        final chunk's step metrics (cache hit rate, utilized bytes).
+        """
+        seeds = np.asarray(seeds, dtype=np.int64).ravel()
+        if seeds.size == 0:
+            return np.zeros((0, self.num_classes or 0), np.float32)
+        internal = self._to_internal(seeds)
+        salt = self.base_salt if salt is None else int(salt)
+
+        out: np.ndarray | None = None
+        start = 0
+        while start < internal.size:
+            # greedily grow the chunk until an owner would overflow the
+            # largest bucket
+            end = start + 1
+            while end < internal.size and max_owner_count(
+                    self.offsets, internal[start:end + 1]) \
+                    <= self.buckets.max_size:
+                end += 1
+            chunk = internal[start:end]
+            bucket = self.buckets.bucket_for(
+                max_owner_count(self.offsets, chunk))
+            routed, pos = route_by_owner(self.offsets, chunk, bucket)
+            logits, metrics = self._infer(
+                self.params, jnp.asarray(routed), jnp.uint32(salt))
+            logits = np.asarray(logits)
+            if out is None:
+                self.num_classes = logits.shape[-1]
+                out = np.empty((seeds.size, self.num_classes),
+                               logits.dtype)
+            out[start:end] = logits[pos[:, 0], pos[:, 1]]
+            self.last_metrics = {k: np.asarray(v) for k, v
+                                 in metrics.items()}
+            start = end
+        return out

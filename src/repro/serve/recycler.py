@@ -1,0 +1,145 @@
+"""LazyGNN-style recycling cache: reuse recent results for hot seeds.
+
+Read-heavy serving traffic is highly repetitive — a small hot set of
+seeds accounts for most requests.  Re-running the full sampled L-hop
+pipeline for a seed served moments ago wastes exactly the work FastSample
+exists to accelerate.  The recycler keeps the final logits of recently
+computed seeds and serves them again, WITHOUT resampling, under an
+explicit staleness contract:
+
+  * ``tau``  — a recycled entry may be served only if it was computed at
+    most ``tau`` fresh serve steps ago (age bound, in units of batch
+    flushes — the cadence at which new samples/params could drift);
+  * ``rho``  — at most a ``rho`` fraction of ALL answered requests may be
+    served from recycled entries (global staleness budget; ``rho=0``
+    disables serving from the cache, ``rho=1`` removes the budget).
+
+Admission is pluggable: by default every computed seed is admitted (LRU
+evicted at capacity); passing ``admit`` restricts the cache to a known
+hot set — e.g. ``repro.core.cache.degree_hot_ids`` for degree-skewed
+traffic, or an online ``repro.core.cache.FrequencyTracker`` — sharing the
+"who's hot" machinery with the feature-cache policies.
+
+The cache stores FINAL logits keyed by seed id: with fixed params and the
+predictor's default fixed salt, a hit is bit-identical to recomputation,
+so recycling is pure win; under a per-step salt policy a hit is a stale
+*sample* of the same expectation, and tau/rho bound how stale the served
+mix may get.  Hit/miss/stale accounting is exposed via ``stats()`` for
+the benchmark's hit-rate column.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable
+
+import numpy as np
+
+
+class RecyclingCache:
+    """Seed-id -> (logits, stamp) store with staleness bounds.
+
+    Parameters
+    ----------
+    capacity : int
+        Max entries (LRU eviction).
+    tau : int
+        Max entry age, in fresh serve steps (batch flushes).
+    rho : float
+        Max fraction of answered requests served from the cache.
+    admit : Callable[[int], bool] | None
+        Optional admission filter on seed ids; None admits everything.
+    """
+
+    def __init__(self, *, capacity: int = 1024, tau: int = 64,
+                 rho: float = 1.0,
+                 admit: Callable[[int], bool] | None = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if tau < 0:
+            raise ValueError(f"tau must be >= 0, got {tau}")
+        if not 0.0 <= rho <= 1.0:
+            raise ValueError(f"rho must be in [0, 1], got {rho}")
+        self.capacity = int(capacity)
+        self.tau = int(tau)
+        self.rho = float(rho)
+        self.admit = admit
+        self._entries: OrderedDict[int, tuple[np.ndarray, int]] = \
+            OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.expired = 0
+        self.evictions = 0
+        self.rho_deferrals = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, seed: int) -> bool:
+        return int(seed) in self._entries
+
+    @property
+    def answered(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.answered if self.answered else 0.0
+
+    def lookup(self, seed: int, step: int) -> np.ndarray | None:
+        """Recycled logits for ``seed`` at serve step ``step``, or None.
+
+        Serves only entries within the ``tau`` age bound and only while
+        the global ``rho`` stale-fraction budget allows; every call
+        counts as one answered request (hit or miss).
+        """
+        seed = int(seed)
+        entry = self._entries.get(seed)
+        if entry is not None and step - entry[1] > self.tau:
+            # age bound exceeded: drop so it cannot be served later
+            del self._entries[seed]
+            self.expired += 1
+            entry = None
+        if entry is not None and \
+                (self.hits + 1) > self.rho * (self.answered + 1):
+            # within tau but over the stale-fraction budget this step
+            self.rho_deferrals += 1
+            entry = None
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._entries.move_to_end(seed)
+        return entry[0]
+
+    def insert(self, seed: int, logits, step: int) -> None:
+        """Admit (or refresh) a freshly computed seed's logits."""
+        seed = int(seed)
+        if self.admit is not None and not self.admit(seed):
+            return
+        if seed not in self._entries and \
+                len(self._entries) >= self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        self._entries[seed] = (np.asarray(logits), int(step))
+        self._entries.move_to_end(seed)
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hit_rate,
+            "expired": self.expired,
+            "evictions": self.evictions,
+            "rho_deferrals": self.rho_deferrals,
+            "entries": len(self._entries),
+            "capacity": self.capacity,
+            "tau": self.tau,
+            "rho": self.rho,
+        }
+
+
+def hot_set_admit(hot_ids) -> Callable[[int], bool]:
+    """Admission filter keeping only a fixed hot set (e.g. the output of
+    ``repro.core.cache.degree_hot_ids``)."""
+    hot = set(int(i) for i in np.asarray(hot_ids).ravel())
+    return lambda seed: int(seed) in hot

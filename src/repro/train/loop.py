@@ -94,6 +94,20 @@ class GNNTrainer:
                 "comm_rounds_per_step": self._rounds_per_step,
                 "cache_hit_rate": sum(hit_rates) / len(hit_rates)}
 
+    def predictor(self, *, buckets=(1, 8, 32, 128), base_salt: int = 0,
+                  executor=None):
+        """Export the trained params into an online ``repro.serve``
+        predictor sharing this trainer's pipeline (same placement
+        scheme, sampler backend, and feature cache).
+
+        The predictor snapshots ``self.params`` at call time — re-export
+        after further training to serve updated weights.
+        """
+        from repro.serve import Predictor
+        return Predictor(self.pipeline, self.params, self.cfg,
+                         buckets=buckets, base_salt=base_salt,
+                         executor=executor)
+
     def close(self) -> None:
         """Release driver resources (the staging thread, when
         ``staging=True``) — call when done with a trainer in a long-lived

@@ -1,0 +1,379 @@
+"""``repro.serve``: serving determinism matrix (recycling off ==
+bit-identical to the training-side forward across schemes and both
+executors), batcher/bucket/routing units, recycler staleness contract,
+traffic generators, and the launch shim."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cache import FrequencyTracker, degree_hot_ids
+from repro.core.partition import build_layout, partition_graph
+from repro.data.synthetic_graph import make_power_law_graph
+from repro.models.gnn import GNNConfig, gnn_forward, init_gnn_params
+from repro.pipeline import Pipeline, PipelineSpec, PlanSpec, SamplerSpec
+from repro.serve import (BucketSpec, GNNServer, MicroBatcher, Predictor,
+                         RecyclingCache, Request, hot_set_admit,
+                         max_owner_count, route_by_owner)
+from repro.serve.traffic import (hotset_arrivals, resolve_arrival,
+                                 uniform_arrivals)
+
+P_ = 4
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = make_power_law_graph(1200, 6, num_features=8, num_classes=4,
+                              seed=0)
+    assign = partition_graph(ds.graph, P_, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P_)
+    cfg = GNNConfig(in_dim=8, hidden_dim=8, num_classes=4, num_layers=2,
+                    fanouts=(3, 3), dropout=0.0)
+    params = init_gnn_params(jax.random.key(1), cfg)
+    return ds, layout, cfg, params
+
+
+def _spec(scheme="hybrid", cache=0):
+    return PipelineSpec(
+        plan=PlanSpec(num_parts=P_, scheme=scheme, cache_capacity=cache),
+        sampler=SamplerSpec(fanouts=(3, 3), backend="reference"))
+
+
+def _training_side_forward(pipe, layout, cfg, params, internal_seeds,
+                           salt):
+    """Reference logits via the raw training-path machinery: per-worker
+    stacked sampling + feature gather + gnn_forward (no serve code)."""
+    cap = max_owner_count(layout.offsets, internal_seeds)
+    routed, pos = route_by_owner(layout.offsets, internal_seeds, cap)
+    fn = pipe.infer_step_fn(
+        lambda p, mfgs, h: gnn_forward(p, mfgs, h, cfg), jit=False)
+    logits, _ = fn(params, jnp.asarray(routed), jnp.uint32(salt))
+    return np.asarray(logits)[pos[:, 0], pos[:, 1]]
+
+
+# --------------------------------------------------------------------------
+# determinism matrix: Predictor == training-side forward (vmap executor)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme,cache", [
+    ("vanilla", 0),
+    ("hybrid", 0),
+    ("hybrid", 64),
+    ("hybrid_partial(0.3)", 0),
+])
+def test_predictor_bit_identical_to_training_forward(world, scheme, cache):
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec(scheme, cache))
+    pred = Predictor(pipe, params, cfg, buckets=(1, 4, 16), base_salt=7)
+    rng = np.random.default_rng(3)
+    seeds = rng.integers(0, ds.graph.num_nodes, size=24)
+    out = pred.predict(seeds)
+    ref = _training_side_forward(pipe, layout, cfg, params,
+                                 pred._to_internal(seeds), salt=7)
+    np.testing.assert_array_equal(out, ref, err_msg=(scheme, cache))
+
+
+def test_predictor_bit_identical_across_bucketing(world):
+    """A seed's logits do not depend on co-batched seeds or bucket
+    padding — the property that lets the microbatcher regroup requests
+    freely without changing served bits."""
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec())
+    pred = Predictor(pipe, params, cfg, buckets=(1, 4, 16))
+    rng = np.random.default_rng(5)
+    seeds = rng.integers(0, ds.graph.num_nodes, size=16)
+    batched = pred.predict(seeds)
+    for i in (0, 5, 15):
+        single = pred.predict([seeds[i]])
+        np.testing.assert_array_equal(single[0], batched[i])
+    pairs = pred.predict(seeds[:2])
+    np.testing.assert_array_equal(pairs, batched[:2])
+
+
+def test_served_bits_equal_direct_predict_with_recycling_off(world):
+    """The full server path (queue -> batcher -> predictor), recycling
+    OFF, returns bit-identical logits to direct Pipeline inference on
+    the same seeds (the issue's correctness oracle)."""
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec())
+    pred = Predictor(pipe, params, cfg, buckets=(1, 4, 16))
+    arrivals = hotset_arrivals(60, rate=5000.0,
+                               num_nodes=ds.graph.num_nodes,
+                               hot_ids=degree_hot_ids(ds.graph, 16),
+                               seed=2)
+    server = GNNServer(pred, max_delay=1e-3)
+    stats, outputs = server.run(arrivals, collect_outputs=True)
+    assert stats.num_recycled == 0
+    direct = pred.predict([s for _, s in arrivals])
+    np.testing.assert_array_equal(outputs, direct)
+
+
+def test_recycled_bits_equal_fresh_under_fixed_salt(world):
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec())
+    pred = Predictor(pipe, params, cfg, buckets=(1, 4, 16))
+    arrivals = hotset_arrivals(80, rate=5000.0,
+                               num_nodes=ds.graph.num_nodes,
+                               hot_ids=degree_hot_ids(ds.graph, 8),
+                               hot_prob=0.95, seed=4)
+    server = GNNServer(pred, max_delay=1e-3,
+                       recycler=RecyclingCache(capacity=64, tau=1000))
+    stats, outputs = server.run(arrivals, collect_outputs=True)
+    assert stats.num_recycled > 0
+    direct = pred.predict([s for _, s in arrivals])
+    np.testing.assert_array_equal(outputs, direct)
+
+
+def test_trainer_predictor_export(world):
+    """GNNTrainer.predictor() serves the trained params through the
+    trainer's own pipeline."""
+    from repro.train.loop import GNNTrainer
+    ds, layout, cfg, params = world
+    tr = GNNTrainer(layout, cfg, scheme="hybrid", batch_per_worker=8)
+    tr.run_epoch(0, steps_per_epoch=2)
+    pred = tr.predictor(buckets=(1, 4))
+    out = pred.predict([0, 3, 11])
+    ref = _training_side_forward(tr.pipeline, layout, cfg, tr.params,
+                                 pred._to_internal(np.array([0, 3, 11])),
+                                 salt=0)
+    np.testing.assert_array_equal(out, ref)
+    tr.close()
+
+
+# --------------------------------------------------------------------------
+# batcher / bucketing / routing units
+# --------------------------------------------------------------------------
+
+def test_bucket_spec_rounding():
+    b = BucketSpec((32, 1, 8))
+    assert b.sizes == (1, 8, 32)
+    assert b.max_size == 32
+    assert b.bucket_for(1) == 1
+    assert b.bucket_for(2) == 8
+    assert b.bucket_for(9) == 32
+    with pytest.raises(ValueError, match="exceeds"):
+        b.bucket_for(33)
+    with pytest.raises(ValueError):
+        BucketSpec(())
+    with pytest.raises(ValueError):
+        BucketSpec((0, 4))
+
+
+def test_route_by_owner_roundtrip(world):
+    ds, layout, cfg, params = world
+    offsets = np.asarray(layout.offsets)
+    rng = np.random.default_rng(0)
+    seeds = rng.integers(0, offsets[-1], size=40).astype(np.int32)
+    cap = max_owner_count(offsets, seeds)
+    routed, pos = route_by_owner(offsets, seeds, cap)
+    assert routed.shape == (P_, cap)
+    for i, (p, c) in enumerate(pos):
+        assert routed[p, c] == seeds[i]
+        assert offsets[p] <= seeds[i] < offsets[p + 1]   # owner row
+    # padding is -1 and capacity overflow raises
+    counts = np.bincount(pos[:, 0], minlength=P_)
+    for p in range(P_):
+        assert (routed[p, counts[p]:] == -1).all()
+    with pytest.raises(ValueError, match="capacity"):
+        route_by_owner(offsets, seeds, cap - 1)
+
+
+def test_microbatcher_triggers():
+    b = MicroBatcher(BucketSpec((1, 4)), max_delay=0.010)
+    assert not b.due(0.0) and b.next_due() == float("inf")
+    b.add(Request(seed=1, arrival=0.000))
+    b.add(Request(seed=2, arrival=0.002))
+    assert not b.due(0.005)                 # neither full nor expired
+    assert b.next_due() == pytest.approx(0.010)
+    assert b.due(0.010)                     # deadline (oldest request)
+    b.add(Request(seed=3, arrival=0.003))
+    b.add(Request(seed=4, arrival=0.004))
+    assert b.due(0.005)                     # size trigger at max bucket
+    flushed = b.flush()
+    assert [r.seed for r in flushed] == [1, 2, 3, 4]
+    assert len(b) == 0
+    # zero delay = no batching: due immediately on arrival
+    nb = MicroBatcher(BucketSpec((1,)), max_delay=0.0)
+    nb.add(Request(seed=9, arrival=1.5))
+    assert nb.due(1.5)
+
+
+# --------------------------------------------------------------------------
+# recycler staleness contract
+# --------------------------------------------------------------------------
+
+def test_recycler_tau_bound():
+    rc = RecyclingCache(capacity=8, tau=2)
+    rc.insert(5, np.ones(3), step=0)
+    assert rc.lookup(5, step=1) is not None
+    assert rc.lookup(5, step=2) is not None      # age == tau: servable
+    rc2 = RecyclingCache(capacity=8, tau=2)
+    rc2.insert(5, np.ones(3), step=0)
+    assert rc2.lookup(5, step=3) is None         # age > tau: expired
+    assert rc2.expired == 1
+    assert 5 not in rc2                          # dropped, not just skipped
+
+
+def test_recycler_rho_budget():
+    rc = RecyclingCache(capacity=8, tau=100, rho=0.5)
+    rc.insert(1, np.ones(2), step=0)
+    served = [rc.lookup(1, step=0) is not None for _ in range(10)]
+    # at most half the answered requests may be recycled
+    assert 0 < sum(served) <= 5
+    assert rc.rho_deferrals > 0
+    off = RecyclingCache(capacity=8, tau=100, rho=0.0)
+    off.insert(1, np.ones(2), step=0)
+    assert off.lookup(1, step=0) is None         # rho=0 disables serving
+
+
+def test_recycler_lru_and_admission():
+    rc = RecyclingCache(capacity=2, tau=10)
+    rc.insert(1, np.zeros(1), 0)
+    rc.insert(2, np.zeros(1), 0)
+    rc.lookup(1, 0)                              # 1 most-recently used
+    rc.insert(3, np.zeros(1), 0)                 # evicts 2
+    assert 1 in rc and 3 in rc and 2 not in rc
+    assert rc.evictions == 1
+    hot = RecyclingCache(capacity=8, tau=10, admit=hot_set_admit([7, 9]))
+    hot.insert(7, np.zeros(1), 0)
+    hot.insert(8, np.zeros(1), 0)                # not admitted
+    assert 7 in hot and 8 not in hot
+
+
+def test_recycler_validation():
+    with pytest.raises(ValueError, match="rho"):
+        RecyclingCache(rho=1.5)
+    with pytest.raises(ValueError, match="tau"):
+        RecyclingCache(tau=-1)
+    with pytest.raises(ValueError, match="capacity"):
+        RecyclingCache(capacity=0)
+
+
+# --------------------------------------------------------------------------
+# hot-set machinery shared with core.cache
+# --------------------------------------------------------------------------
+
+def test_degree_hot_ids_ranking(world):
+    ds, *_ = world
+    deg = np.asarray(ds.graph.degrees())
+    hot = degree_hot_ids(ds.graph, 10)
+    assert len(hot) == 10
+    ranked = np.sort(deg)[::-1]
+    np.testing.assert_array_equal(deg[hot], ranked[:10])
+    assert deg[hot[0]] == deg.max()
+
+
+def test_frequency_tracker():
+    ft = FrequencyTracker(10, decay=0.5)
+    ft.observe([1, 1, 1, 2])
+    assert list(ft.topk(2)) == [1, 2]
+    for _ in range(6):
+        ft.observe([3])                          # decays 1's counts away
+    assert ft.topk(1)[0] == 3
+    assert ft.is_hot([3, 1], k=1).tolist() == [True, False]
+    with pytest.raises(ValueError, match="decay"):
+        FrequencyTracker(10, decay=0.0)
+
+
+# --------------------------------------------------------------------------
+# traffic generators
+# --------------------------------------------------------------------------
+
+def test_traffic_generators():
+    arr = uniform_arrivals(50, rate=100.0, num_nodes=20, seed=0)
+    times = [t for t, _ in arr]
+    assert times == sorted(times) and len(arr) == 50
+    assert all(0 <= s < 20 for _, s in arr)
+    hot = hotset_arrivals(200, rate=100.0, num_nodes=1000,
+                          hot_ids=[1, 2, 3], hot_prob=0.9, seed=0)
+    frac_hot = np.mean([s in (1, 2, 3) for _, s in hot])
+    assert frac_hot > 0.8                        # ~hot_prob
+    assert resolve_arrival("uniform") is uniform_arrivals
+    with pytest.raises(KeyError, match="available"):
+        resolve_arrival("nope")
+    with pytest.raises(ValueError, match="hot_ids"):
+        hotset_arrivals(5, rate=1.0, num_nodes=10)
+
+
+# --------------------------------------------------------------------------
+# launch shim (satellite: serve.py -> serve_lm.py rename)
+# --------------------------------------------------------------------------
+
+def test_serve_lm_shim_warns():
+    code = ("import warnings\n"
+            "with warnings.catch_warnings(record=True) as w:\n"
+            "    warnings.simplefilter('always')\n"
+            "    import repro.launch.serve as shim\n"
+            "assert any('serve_lm' in str(x.message) and\n"
+            "           issubclass(x.category, DeprecationWarning)\n"
+            "           for x in w), [str(x.message) for x in w]\n"
+            "import repro.launch.serve_lm as lm\n"
+            "assert shim.main is lm.main\n"
+            "assert shim.prefill_cache is lm.prefill_cache\n"
+            "print('SHIM_OK')\n")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=ENV, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "SHIM_OK" in r.stdout
+
+
+# --------------------------------------------------------------------------
+# shard_map executor (subprocess: needs placeholder devices at jax init)
+# --------------------------------------------------------------------------
+
+SHARD_MAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np, jax
+    from repro.core.partition import build_layout, partition_graph
+    from repro.data.synthetic_graph import make_power_law_graph
+    from repro.models.gnn import GNNConfig, init_gnn_params
+    from repro.pipeline import (Pipeline, PipelineSpec, PlanSpec,
+                                SamplerSpec)
+    from repro.serve import Predictor
+
+    P = 2
+    ds = make_power_law_graph(800, 6, num_features=8, num_classes=4,
+                              seed=0)
+    assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
+    cfg = GNNConfig(in_dim=8, hidden_dim=8, num_classes=4, num_layers=2,
+                    fanouts=(3, 3), dropout=0.0)
+    params = init_gnn_params(jax.random.key(1), cfg)
+    rng = np.random.default_rng(3)
+    seeds = rng.integers(0, ds.graph.num_nodes, size=20)
+
+    for scheme, cache in (("vanilla", 0), ("hybrid", 0), ("hybrid", 64)):
+        outs = {}
+        for executor in ("vmap", "shard_map"):
+            spec = PipelineSpec(
+                plan=PlanSpec(num_parts=P, scheme=scheme,
+                              cache_capacity=cache),
+                sampler=SamplerSpec(fanouts=(3, 3), backend="reference"),
+                executor=executor)
+            pipe = Pipeline.from_layout(layout, spec)
+            pred = Predictor(pipe, params, cfg, buckets=(1, 8, 32),
+                             base_salt=5)
+            outs[executor] = pred.predict(seeds)
+        np.testing.assert_array_equal(outs["vmap"], outs["shard_map"],
+                                      err_msg=f"{scheme}/{cache}")
+    print("SERVE_SHARD_MAP_OK")
+""")
+
+
+def test_predictor_bit_equivalence_shard_map_subprocess():
+    """Served logits are bit-identical between the vmap simulation and
+    the shard_map device-mesh executor for every scheme/cache combo
+    (subprocess so the main process keeps its single-device view)."""
+    r = subprocess.run([sys.executable, "-c", SHARD_MAP_SCRIPT],
+                       capture_output=True, text=True, env=ENV,
+                       timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "SERVE_SHARD_MAP_OK" in r.stdout

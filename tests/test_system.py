@@ -97,7 +97,7 @@ def test_lm_train_reduces_loss_subprocess():
 
 def test_serve_subprocess():
     r = subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve", "--arch",
+        [sys.executable, "-m", "repro.launch.serve_lm", "--arch",
          "stablelm-1.6b", "--reduced", "--batch", "2", "--prompt-len", "16",
          "--gen", "8"],
         capture_output=True, text=True, env=ENV, timeout=900)
