@@ -2,10 +2,16 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint bench-smoke bench data-smoke dev-install docs-check
+.PHONY: test test-multihost lint bench-smoke bench data-smoke dev-install \
+	docs-check
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+# multi-process executor tests: 2-rank jax.distributed fleets (minutes —
+# excluded from tier-1 by the conftest marker gate; own CI job)
+test-multihost:
+	$(PYTHON) -m pytest -x -q -m multihost tests/test_multihost.py
 
 # critical-rule lint gate (ruff.toml); CI runs this as its own job
 lint:
@@ -17,9 +23,11 @@ docs-check:
 
 # quick benchmark sanity (minutes not hours): the §5 cache figure + the
 # placement-scheme and graph-source sweeps, which exercise every registry
-# dispatch path, + the staged-vs-unstaged seed-staging delta
+# dispatch path, + the staged-vs-unstaged seed-staging delta + the
+# multi-process executor scaling sweep (real jax.distributed fleets)
 bench-smoke:
-	$(PYTHON) -m benchmarks.run cache schemes datasets staging serve
+	$(PYTHON) -m benchmarks.run cache schemes datasets staging serve \
+		multihost
 
 # graph-source subsystem smoke: generate every synthetic family at toy
 # scale, round-trip save/load exactly, re-check determinism + streaming

@@ -1,0 +1,121 @@
+"""Multi-process executor scaling: steps/s for 1 / 2 / 4 local ranks.
+
+The ``"multiprocess"`` executor runs the same shard_map program as the
+single-process path but spreads the worker mesh across real OS
+processes (one jax.distributed "host" each, gloo CPU collectives,
+rank-local feature builds).  This benchmark launches a fleet per
+(scheme, num_procs) cell through the production
+``repro.launch.multihost`` supervisor and reports rank 0's measured
+steps/s — the process-count scaling trajectory per placement scheme.
+
+On one machine the ranks share the same cores, so this measures the
+multiprocess *overhead* trajectory (coordination + gloo collectives vs
+intra-process XLA collectives), not a speedup: flat is good, and the
+scheme gap (hybrid's 2 rounds vs vanilla's 2L) should persist across
+process counts.  Cells keep the partition count fixed at ``P = 4`` and
+vary only how many processes carve it up, so every cell runs the
+bit-identical program (``tests/test_multihost.py`` asserts exactly
+that).
+
+One JSON record per cell lands in ``experiments/multihost`` for the
+``benchmarks.report`` multihost table.
+
+  PYTHONPATH=src python -m benchmarks.run multihost
+"""
+import json
+import os
+import sys
+import textwrap
+
+from benchmarks.common import emit
+from repro.launch import multihost
+
+SCHEMES = ("vanilla", "hybrid")
+PROCS = (1, 2, 4)
+P = 4                      # worker partitions (fixed; processes carve it up)
+OUT_DIR = os.path.join("experiments", "multihost")
+
+WORKER = textwrap.dedent("""
+    import json, os, time
+    from repro.launch import multihost
+    rank, num_procs = multihost.init_from_env()
+    import jax
+    from benchmarks.common import dataset_columns
+    from repro.core.partition import build_layout, partition_graph
+    from repro.data.synthetic_graph import make_power_law_graph
+    from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+    from repro.optim import init_opt_state
+    from repro.pipeline import (Pipeline, PipelineSpec, PlanSpec,
+                                SamplerSpec)
+
+    scheme = os.environ["REPRO_BENCH_SCHEME"]
+    P = int(os.environ["REPRO_BENCH_PARTS"])
+    nodes = int(os.environ.get("REPRO_BENCH_NODES", "20000"))
+    steps = int(os.environ.get("REPRO_BENCH_STEPS", "4"))
+    batch = int(os.environ.get("REPRO_BENCH_BATCH", "64"))
+
+    ds = make_power_law_graph(nodes, 6, num_features=16, num_classes=8,
+                              seed=0)
+    assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
+    per = P // num_procs
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P,
+                          local_parts=(rank * per, (rank + 1) * per))
+    cfg = GNNConfig(in_dim=16, hidden_dim=32, num_classes=8, num_layers=2,
+                    fanouts=(5, 5), dropout=0.0)
+    def loss_fn(p, mfgs, h, y, v):
+        return gnn_loss(p, mfgs, h, y, v, cfg)
+
+    spec = PipelineSpec(
+        plan=PlanSpec(num_parts=P, scheme=scheme),
+        sampler=SamplerSpec(fanouts=cfg.fanouts, backend="reference"),
+        executor="multiprocess")
+    pipe = Pipeline.from_layout(layout, spec)
+    driver = pipe.train_driver(loss_fn, batch=batch, lr=6e-3)
+    params = init_gnn_params(jax.random.key(0), cfg)
+    opt = init_opt_state(params, kind="adamw")
+    for _ in range(2):                       # compile + settle
+        params, opt, loss, _ = driver.step(params, opt)
+        float(loss)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        params, opt, loss, _ = driver.step(params, opt)
+        float(loss)                          # per-step host sync, as the
+    dt = (time.perf_counter() - t0) / steps  # real training loop does
+    if rank == 0:
+        rec = {"workload": "multihost-scaling", "scheme": scheme,
+               "executor": "multiprocess", "num_procs": num_procs,
+               "local_devices": per, "workers": P, "batch": batch,
+               "timed_steps": steps, "steps_per_s": 1.0 / dt,
+               **dataset_columns(ds)}
+        print("RECORD" + json.dumps(rec))
+""")
+
+
+def main() -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for scheme in SCHEMES:
+        for nprocs in PROCS:
+            env = dict(os.environ, REPRO_BENCH_SCHEME=scheme,
+                       REPRO_BENCH_PARTS=str(P))
+            log_dir = multihost.launch(
+                [sys.executable, "-c", WORKER], num_procs=nprocs,
+                local_devices=P // nprocs, timeout=900, env=env)
+            out = open(os.path.join(log_dir, "rank0.out")).read()
+            lines = [l for l in out.splitlines() if l.startswith("RECORD")]
+            if not lines:
+                raise RuntimeError(
+                    f"no RECORD line from rank 0 ({scheme}, "
+                    f"num_procs={nprocs}); rank0.out tail:\n{out[-2000:]}")
+            rec = json.loads(lines[-1][len("RECORD"):])
+            emit(f"multihost/P{P}/{scheme}/procs{nprocs}/steps_per_s",
+                 rec["steps_per_s"],
+                 f"executor=multiprocess num_procs={nprocs} "
+                 f"local_devices={P // nprocs}")
+            with open(os.path.join(
+                    OUT_DIR, f"multihost__{scheme}__n{nprocs}.json"),
+                    "w") as f:
+                json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -120,6 +120,25 @@ def staging_table(recs):
     return "\n".join(rows)
 
 
+def multihost_table(recs):
+    """Multi-process executor table (bench_multihost records): steps/s
+    per (scheme, num_procs) with the partition count held fixed — the
+    process-count overhead trajectory (flat is good; every cell runs
+    the bit-identical program)."""
+    rows = ["| scheme | procs | devices/proc | workers | batch "
+            "| steps/s | dataset |",
+            "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("workload") != "multihost-scaling":
+            continue
+        rows.append(
+            f"| {r['scheme']} | {r['num_procs']} "
+            f"| {r.get('local_devices', '-')} | {r['workers']} "
+            f"| {r['batch']} | {r['steps_per_s']:.2f} "
+            f"| {dataset_cols_label(r)} |")
+    return "\n".join(rows)
+
+
 def datasets_table(recs):
     """Dataset-sweep table (bench_datasets records): per graph-source
     family x scheme, the expected utilized rounds next to the family's
@@ -235,6 +254,7 @@ def main():
     ap.add_argument("--datasets-dir", default="experiments/datasets")
     ap.add_argument("--staging-dir", default="experiments/staging")
     ap.add_argument("--serve-dir", default="experiments/serve")
+    ap.add_argument("--multihost-dir", default="experiments/multihost")
     args = ap.parse_args()
     recs = load(args.dir)
     print(f"## Dry-run ({args.mesh})\n")
@@ -256,6 +276,11 @@ def main():
     if st_recs:
         print("\n## Host-side seed staging (staged vs unstaged steps/s)\n")
         print(staging_table(st_recs))
+    mh_recs = load(args.multihost_dir) \
+        if os.path.isdir(args.multihost_dir) else []
+    if mh_recs:
+        print("\n## Multi-process executor (steps/s vs process count)\n")
+        print(multihost_table(mh_recs))
     sv_recs = load(args.serve_dir) if os.path.isdir(args.serve_dir) \
         else []
     if sv_recs:

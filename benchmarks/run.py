@@ -18,6 +18,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      expected rounds vs dataset skew at equal nnz
   * bench_serve    — online serving (repro.serve): p50/p99/QPS per
                      scheme x bucket config x recycling on/off
+  * bench_multihost — multi-process executor scaling: steps/s for
+                     1/2/4 local jax.distributed ranks per scheme
 
 Pass section names to run a subset: ``python -m benchmarks.run cache
 schemes``.
@@ -27,9 +29,9 @@ import sys
 
 def main() -> None:
     from benchmarks import (bench_cache, bench_datasets, bench_epoch,
-                            bench_kernels, bench_prefetch, bench_sampling,
-                            bench_schemes, bench_serve, bench_staging,
-                            bench_storage, bench_table1)
+                            bench_kernels, bench_multihost, bench_prefetch,
+                            bench_sampling, bench_schemes, bench_serve,
+                            bench_staging, bench_storage, bench_table1)
     mods = {
         "table1": bench_table1,
         "storage": bench_storage,
@@ -42,6 +44,7 @@ def main() -> None:
         "staging": bench_staging,
         "datasets": bench_datasets,
         "serve": bench_serve,
+        "multihost": bench_multihost,
     }
     only = set(sys.argv[1:])
     unknown = only - set(mods)

@@ -305,8 +305,10 @@ def make_cached_worker_step(*, graph_replicated, offsets, num_parts,
             return loss_fn(p, mfgs, h_src, seed_labels, seed_valid)
 
         loss, grads = jax.value_and_grad(objective)(params)
-        grads = lax.pmean(grads, dist.AXIS)
-        loss = lax.pmean(loss, dist.AXIS)
+        # ordered reductions so this legacy step stays bit-aligned with the
+        # pipeline path (test_extensions compares them array-equal)
+        grads = dist.pmean_ordered(grads)
+        loss = dist.pmean_ordered(loss)
         hit_rate = hits / jnp.maximum(jnp.sum(mfgs[-1].src_nodes >= 0), 1)
         return loss, grads, hit_rate
 

@@ -140,6 +140,38 @@ def exchange(buf: jnp.ndarray, counter: RoundCounter | None,
 
 
 # --------------------------------------------------------------------------
+# order-deterministic worker-axis reductions
+# --------------------------------------------------------------------------
+
+def pmean_ordered(x, axis_name: str = AXIS):
+    """``lax.pmean`` with a reduction order fixed by the program itself.
+
+    ``lax.pmean``/``lax.psum`` leave the summation order to the backend:
+    XLA's intra-process reduction and gloo's cross-process ring allreduce
+    (the CPU collectives the ``"multiprocess"`` executor runs on) sum in
+    different orders, so their float results can differ in the last bit.
+    This variant makes the order part of the program — ``all_gather``
+    (pure data movement, bit-exact on every backend) followed by a local
+    mean over the gathered worker axis — so vmap, shard_map, and
+    multi-process gloo all execute the *same* reduction and agree
+    bit-for-bit (``tests/test_multihost.py`` asserts it).
+
+    Works on any pytree, like ``lax.pmean``.
+    """
+    return jax.tree.map(
+        lambda a: jnp.mean(lax.all_gather(a, axis_name), axis=0), x)
+
+
+def psum_ordered(x, axis_name: str = AXIS):
+    """``lax.psum`` with a program-fixed reduction order (all_gather +
+    local sum over the gathered worker axis); see ``pmean_ordered`` for
+    why backend-ordered reductions break cross-process bit-equivalence.
+    """
+    return jax.tree.map(
+        lambda a: jnp.sum(lax.all_gather(a, axis_name), axis=0), x)
+
+
+# --------------------------------------------------------------------------
 # owner-based packing
 # --------------------------------------------------------------------------
 

@@ -221,7 +221,16 @@ def edge_cut(graph: CSCGraph, assign: np.ndarray) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class PartitionLayout:
-    """Relabeled graph + ownership metadata shared by both plans."""
+    """Relabeled graph + ownership metadata shared by both plans.
+
+    ``local_parts`` marks a **rank-local** build (multi-process executor):
+    only feature rows for partitions in ``range(*local_parts)`` are
+    materialized — the other rows of ``features`` are zero and must never
+    be read by this rank (the global mesh places each partition's row on
+    its owning process).  ``labels`` / ``node_valid`` stay full on every
+    rank: the host seed draw (``seeds_per_worker_host``) argsorts over the
+    whole labeled table.
+    """
     graph: CSCGraph              # relabeled global topology
     offsets: jnp.ndarray         # (P+1,) ownership ranges
     perm: np.ndarray             # new id -> old id
@@ -229,6 +238,7 @@ class PartitionLayout:
     labels: jnp.ndarray          # (P, n_max) int32, -1 where unlabeled/pad
     node_valid: jnp.ndarray      # (P, n_max) bool
     num_parts: int
+    local_parts: tuple[int, int] | None = None   # rank-local [lo, hi)
 
     @property
     def n_max(self) -> int:
@@ -262,8 +272,20 @@ class HybridPlan:
 
 
 def build_layout(graph: CSCGraph, features: np.ndarray, labels: np.ndarray,
-                 assign: np.ndarray, num_parts: int) -> PartitionLayout:
-    """Relabel so each partition owns a contiguous id range; shard features."""
+                 assign: np.ndarray, num_parts: int,
+                 local_parts: tuple[int, int] | None = None
+                 ) -> PartitionLayout:
+    """Relabel so each partition owns a contiguous id range; shard features.
+
+    ``local_parts=(lo, hi)`` builds a **rank-local** layout for the
+    multi-process executor: only partitions in ``[lo, hi)`` get their
+    feature rows filled (the rest of the ``(P, n_max, D)`` table stays
+    zero — ``np.zeros`` is calloc-backed, so untouched remote pages are
+    never committed to physical memory).  Topology, offsets, labels, and
+    ``node_valid`` remain full: they are small relative to features and
+    every rank needs them (sampling walks the global topology; the host
+    seed draw scans the whole labeled table).
+    """
     n = graph.num_nodes
     assign = np.asarray(assign)
     perm_new_to_old = np.argsort(assign, kind="stable")
@@ -282,6 +304,17 @@ def build_layout(graph: CSCGraph, features: np.ndarray, labels: np.ndarray,
     new_src = old_to_new[indices].astype(np.int64)
     new_graph = csc_from_numpy_edges(new_dst, new_src, n)
 
+    if local_parts is not None:
+        lo, hi = int(local_parts[0]), int(local_parts[1])
+        if not (0 <= lo < hi <= num_parts):
+            raise ValueError(
+                f"local_parts {local_parts!r} out of range for "
+                f"num_parts={num_parts}")
+        local_parts = (lo, hi)
+        feature_parts = range(lo, hi)
+    else:
+        feature_parts = range(num_parts)
+
     D = features.shape[1]
     feat = np.zeros((num_parts, n_max, D), features.dtype)
     lab = np.full((num_parts, n_max), -1, np.int32)
@@ -289,7 +322,8 @@ def build_layout(graph: CSCGraph, features: np.ndarray, labels: np.ndarray,
     for p in range(num_parts):
         ids_old = perm_new_to_old[offsets[p]:offsets[p + 1]]
         k = ids_old.size
-        feat[p, :k] = features[ids_old]
+        if p in feature_parts:
+            feat[p, :k] = features[ids_old]
         lab[p, :k] = labels[ids_old]
         valid[p, :k] = True
 
@@ -301,6 +335,7 @@ def build_layout(graph: CSCGraph, features: np.ndarray, labels: np.ndarray,
         labels=jnp.asarray(lab),
         node_valid=jnp.asarray(valid),
         num_parts=num_parts,
+        local_parts=local_parts,
     )
 
 

@@ -1,6 +1,6 @@
 """Distributed GNN training launcher — the paper's workload through the
-``repro.pipeline`` API, under vmap simulation or shard_map on real (or
-host-placeholder) devices.
+``repro.pipeline`` API, under vmap simulation, shard_map on real (or
+host-placeholder) devices, or real OS processes (``multiprocess``).
 
   PYTHONPATH=src python -m repro.launch.train_gnn --devices 8 \
       --scheme hybrid+fused --epochs 3
@@ -12,6 +12,13 @@ host-placeholder) devices.
       --dataset "rmat(0.57,0.19,0.19,0.05)" --scheme "hybrid_partial(0.1)"
   PYTHONPATH=src python -m repro.launch.train_gnn --devices 4 \
       --dataset datasets/ogbn-arxiv.npz
+  PYTHONPATH=src python -m repro.launch.train_gnn --devices 4 \
+      --executor multiprocess --num-procs 2 --scheme hybrid
+
+With ``--executor multiprocess`` the parent re-execs itself as
+``--num-procs`` coordinated worker processes (``repro.launch.multihost``)
+and each rank materializes only its own partitions' feature arrays
+(``Pipeline.build_from_source(local_parts=...)``).
 """
 import argparse
 
@@ -62,11 +69,54 @@ def main():
     ap.add_argument("--lr", type=float, default=0.006)   # paper §4
     ap.add_argument("--shard-map", action="store_true",
                     help="run under shard_map on a device mesh instead of "
-                         "the vmap single-device simulation")
+                         "the vmap single-device simulation "
+                         "(legacy alias for --executor shard_map)")
+    ap.add_argument("--executor", default=None,
+                    choices=["vmap", "shard_map", "multiprocess"],
+                    help="executor registry name (default: vmap, or "
+                         "shard_map when --shard-map is set)")
+    ap.add_argument("--num-procs", type=int, default=2,
+                    help="worker processes for --executor multiprocess "
+                         "(must divide --devices; each process hosts "
+                         "devices/num-procs placeholder devices)")
+    ap.add_argument("--mh-timeout", type=float, default=600.0,
+                    help="multiprocess launcher wall-clock timeout in "
+                         "seconds (hang detection)")
     args = ap.parse_args()
 
+    executor = args.executor or ("shard_map" if args.shard_map else "vmap")
+
     import os
-    if args.shard_map:
+    import sys
+
+    from repro.launch import multihost
+
+    if executor == "multiprocess" and not multihost.is_worker():
+        # parent: re-exec this command line as the worker fleet, then
+        # surface rank 0's captured stdout
+        if args.devices % args.num_procs != 0:
+            ap.error(f"--devices {args.devices} must be divisible by "
+                     f"--num-procs {args.num_procs}")
+        log_dir = multihost.launch(
+            [sys.executable, "-m", "repro.launch.train_gnn"]
+            + sys.argv[1:],
+            num_procs=args.num_procs,
+            local_devices=args.devices // args.num_procs,
+            timeout=args.mh_timeout)
+        with open(os.path.join(log_dir, "rank0.out")) as f:
+            sys.stdout.write(f.read())
+        print(f"multiprocess run complete; per-rank logs in {log_dir}")
+        return
+
+    rank, local_parts = 0, None
+    if executor == "multiprocess":
+        # worker: join the jax.distributed job BEFORE any backend use,
+        # then build only this rank's partitions' feature arrays
+        rank, num_procs = multihost.init_from_env()
+        per = args.devices // num_procs
+        if args.cache_capacity == 0:
+            local_parts = (rank * per, (rank + 1) * per)
+    elif executor == "shard_map":
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
 
@@ -85,25 +135,30 @@ def main():
         args.scheme, num_parts=args.devices, fanouts=fanouts,
         cache_capacity=args.cache_capacity,
         cache_policy=args.cache_policy,
-        executor="shard_map" if args.shard_map else "vmap",
+        executor=executor,
         prefetch_depth=args.prefetch_depth, staging=args.staging,
         staging_lead=args.staging_lead, data=data)
-    pipe = Pipeline.build_from_source(spec=spec)
+    pipe = Pipeline.build_from_source(spec=spec, local_parts=local_parts)
     ds = pipe.dataset
-    print(f"dataset: {stats_label(dataset_stats(ds))}")
+    say = print if rank == 0 else (lambda *a, **k: None)
+    say(f"dataset: {stats_label(dataset_stats(ds))}")
 
     cfg = GNNConfig(in_dim=ds.features.shape[1], hidden_dim=256,
                     num_classes=ds.num_classes, num_layers=len(fanouts),
                     fanouts=fanouts, dropout=0.0)
-    print(f"partitioned into {args.devices}: "
-          f"edge-cut {pipe.edge_cut_fraction:.1%}")
+    say(f"partitioned into {args.devices}: "
+        f"edge-cut {pipe.edge_cut_fraction:.1%}")
+    if local_parts is not None:
+        say(f"rank-local build: each rank materializes "
+            f"{args.devices // args.num_procs} of {args.devices} "
+            f"feature partitions")
     if pipe.placement is not None \
             and hasattr(pipe.placement, "replicated_edge_fraction"):
-        print(f"partial replication: "
-              f"{pipe.placement.replicated_edge_fraction:.1%} of edges "
-              f"replicated, expected rounds/step "
-              f"{pipe.expected_rounds_estimate:.2f} "
-              f"(hybrid=2, vanilla={2 * cfg.num_layers})")
+        say(f"partial replication: "
+            f"{pipe.placement.replicated_edge_fraction:.1%} of edges "
+            f"replicated, expected rounds/step "
+            f"{pipe.expected_rounds_estimate:.2f} "
+            f"(hybrid=2, vanilla={2 * cfg.num_layers})")
 
     def loss_fn(p, mfgs, h_src, labels, valid):
         return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
@@ -123,13 +178,13 @@ def main():
             if epoch == 0 and s == 0:
                 # the round counter fills at first trace — report it only
                 # once a step has actually traced
-                print(f"scheme={args.scheme} executor={spec.executor} "
-                      f"prefetch={args.prefetch_depth} "
-                      f"staging={'on' if args.staging else 'off'}: "
-                      f"{pipe.counter.rounds} comm rounds/step "
-                      f"({pipe.counter.sampling_rounds} sampling + "
-                      f"{pipe.counter.feature_rounds} feature; "
-                      f"vanilla=2L={2*cfg.num_layers}, hybrid=2)")
+                say(f"scheme={args.scheme} executor={spec.executor} "
+                    f"prefetch={args.prefetch_depth} "
+                    f"staging={'on' if args.staging else 'off'}: "
+                    f"{pipe.counter.rounds} comm rounds/step "
+                    f"({pipe.counter.sampling_rounds} sampling + "
+                    f"{pipe.counter.feature_rounds} feature; "
+                    f"vanilla=2L={2*cfg.num_layers}, hybrid=2)")
         jax.block_until_ready(loss)
         msg = (f"epoch {epoch}: loss {float(loss):.4f} "
                f"rounds/step {pipe.counter.rounds} "
@@ -139,7 +194,7 @@ def main():
                f"time {time.time()-t0:.2f}s")
         if args.cache_capacity:
             msg += f" cache-hit {float(metrics['cache_hit_rate']):.1%}"
-        print(msg)
+        say(msg)
     driver.close()
 
 

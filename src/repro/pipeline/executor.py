@@ -10,11 +10,17 @@ where ``step`` is a ``repro.pipeline.worker`` step.  Both executors bind
 the pipeline's shards (and cache, when present) so callers only supply
 the per-call arguments.
 
-  * ``"vmap"``      — single-device simulation: vmap over the stacked
-                      worker axis; bit-identical collective semantics.
-  * ``"shard_map"`` — production path on a device mesh (one worker per
-                      device along ``dist.AXIS``).  Requires the process
-                      to expose >= num_parts devices.
+  * ``"vmap"``         — single-device simulation: vmap over the stacked
+                         worker axis; bit-identical collective semantics.
+  * ``"shard_map"``    — production path on a device mesh (one worker per
+                         device along ``dist.AXIS``).  Requires the
+                         process to expose >= num_parts devices.
+  * ``"multiprocess"`` — the same shard_map program over the **global**
+                         mesh spanning real OS processes
+                         (``jax.distributed.initialize``); see
+                         ``MultiprocessExecutor`` and
+                         ``repro.launch.multihost``.  Bit-identical to
+                         both of the above.
 
 Executors additionally implement ``bind_prefetch`` — the double-buffered
 execution mode behind ``repro.pipeline.prefetch.DoubleBufferDriver``.  It
@@ -142,6 +148,20 @@ class _RotatingBufferRunner:
         return self._fused(params, opt_state, queue, seeds_next, salt_next)
 
 
+def _require_full_layout(executor, pipeline):
+    """Rank-local pipelines (``local_parts``) hold zero rows for remote
+    partitions; only the multi-process executor (whose global mesh places
+    each partition's row on its owning process) may bind them."""
+    if getattr(pipeline.layout, "local_parts", None) is not None \
+            and not getattr(executor, "handles_local_parts", False):
+        raise ValueError(
+            f"executor {executor.name!r} cannot bind a rank-local "
+            f"pipeline (layout.local_parts="
+            f"{pipeline.layout.local_parts!r}): remote partitions' "
+            f"feature rows were never materialized.  Use the "
+            f"'multiprocess' executor, or build with local_parts=None.")
+
+
 class VmapExecutor:
     """Single-device simulation: vmap over the stacked worker axis.
 
@@ -152,6 +172,7 @@ class VmapExecutor:
     """
 
     name = "vmap"
+    handles_local_parts = False
 
     def seed_sharding(self, pipeline):
         """Placement for pre-staged seed arrays
@@ -167,6 +188,7 @@ class VmapExecutor:
         Returns ``run(params, seeds, salt) -> (loss, grads, metrics)``
         with the worker axis already reduced (worker 0's pmean-ed copy).
         """
+        _require_full_layout(self, pipeline)
         use_cache = pipeline.cache is not None
         in_axes = (None, 0, 0, None) + ((0,) if use_cache else ())
         vstep = jax.vmap(step, in_axes=in_axes, axis_name=dist.AXIS)
@@ -192,6 +214,7 @@ class VmapExecutor:
         owning worker's row.  ``metrics`` is already pmean/psum-reduced
         inside the step, so worker 0's copy is returned.
         """
+        _require_full_layout(self, pipeline)
         use_cache = pipeline.cache is not None
         in_axes = (None, 0, 0, None) + ((0,) if use_cache else ())
         vstep = jax.vmap(infer_step, in_axes=in_axes, axis_name=dist.AXIS)
@@ -218,6 +241,7 @@ class VmapExecutor:
         same jitted prepare serves warmup and steady state (it traces,
         and therefore ticks the round counter, exactly once).
         """
+        _require_full_layout(self, pipeline)
         use_cache = pipeline.cache is not None
         cache_ax = 0 if use_cache else None
         vprep = jax.vmap(prepare, in_axes=(0, 0, None, cache_ax),
@@ -253,6 +277,7 @@ class ShardMapExecutor:
     """
 
     name = "shard_map"
+    handles_local_parts = False
 
     def __init__(self, mesh=None):
         self.mesh = mesh
@@ -271,6 +296,7 @@ class ShardMapExecutor:
     def _resolve_mesh(self, pipeline):
         from repro.compat import make_mesh
 
+        _require_full_layout(self, pipeline)
         num_parts = pipeline.spec.plan.num_parts
         mesh = self.mesh
         if mesh is None:
@@ -283,13 +309,13 @@ class ShardMapExecutor:
             mesh = make_mesh((num_parts,), (dist.AXIS,))
         return mesh
 
-    def bind(self, pipeline, step):
-        """Bind ``step`` to the pipeline's shards/cache under ``shard_map``
-        on the executor's mesh (built lazily when not supplied).
-
-        Returns ``run(params, seeds, salt) -> (loss, grads, metrics)``
-        with replicated (pmean-ed) outputs.
-        """
+    def _build_smap(self, pipeline, step):
+        """The shard_map program for the fused train step, taking the
+        worker-axis data (shards [+ cache]) as explicit *arguments* —
+        ``(smap, use_cache)`` where ``smap(params, shards, seeds[,
+        cache], salt)``.  Shared by the closure-binding single-process
+        ``bind`` and the argument-threading multi-process one (global
+        arrays may not be closed over inside jit)."""
         from jax.sharding import PartitionSpec as P
 
         from repro.compat import shard_map
@@ -308,10 +334,6 @@ class ShardMapExecutor:
                 in_specs=(P(), P(dist.AXIS), P(dist.AXIS), P(dist.AXIS),
                           P()),
                 out_specs=(P(), P(), P()), check=False)
-
-            def run(params, seeds, salt):
-                return smap(params, pipeline.shards, seeds,
-                            pipeline.cache, salt)
         else:
             def wrapper(params, shards, seeds, salt):
                 return step(params, squeeze(shards), seeds[0], salt)
@@ -320,21 +342,31 @@ class ShardMapExecutor:
                 wrapper, mesh=mesh,
                 in_specs=(P(), P(dist.AXIS), P(dist.AXIS), P()),
                 out_specs=(P(), P(), P()), check=False)
+        return smap, use_cache
 
+    def bind(self, pipeline, step):
+        """Bind ``step`` to the pipeline's shards/cache under ``shard_map``
+        on the executor's mesh (built lazily when not supplied).
+
+        Returns ``run(params, seeds, salt) -> (loss, grads, metrics)``
+        with replicated (pmean-ed) outputs.
+        """
+        smap, use_cache = self._build_smap(pipeline, step)
+
+        if use_cache:
+            def run(params, seeds, salt):
+                return smap(params, pipeline.shards, seeds,
+                            pipeline.cache, salt)
+        else:
             def run(params, seeds, salt):
                 return smap(params, pipeline.shards, seeds, salt)
 
         return run
 
-    def bind_infer(self, pipeline, infer_step):
-        """Bind an inference step (``repro.pipeline.infer``) under
-        shard_map on the executor's mesh.
-
-        ``run(params, seeds, salt) -> (logits, metrics)``: ``logits`` is
-        (P, batch, C), sharded along the worker axis (each device holds
-        its own seeds' logits); ``metrics`` is replicated (the step
-        pmean/psums it over ``dist.AXIS``).
-        """
+    def _build_infer_smap(self, pipeline, infer_step):
+        """shard_map program for the inference step with data as
+        arguments: ``(smap, use_cache)`` where ``smap(params, shards,
+        seeds[, cache], salt) -> (logits, metrics)``."""
         from jax.sharding import PartitionSpec as P
 
         from repro.compat import shard_map
@@ -355,10 +387,6 @@ class ShardMapExecutor:
                 in_specs=(P(), P(dist.AXIS), P(dist.AXIS), P(dist.AXIS),
                           P()),
                 out_specs=(P(dist.AXIS), P()), check=False)
-
-            def run(params, seeds, salt):
-                return smap(params, pipeline.shards, seeds,
-                            pipeline.cache, salt)
         else:
             def wrapper(params, shards, seeds, salt):
                 logits, metrics = infer_step(params, squeeze(shards),
@@ -369,7 +397,24 @@ class ShardMapExecutor:
                 wrapper, mesh=mesh,
                 in_specs=(P(), P(dist.AXIS), P(dist.AXIS), P()),
                 out_specs=(P(dist.AXIS), P()), check=False)
+        return smap, use_cache
 
+    def bind_infer(self, pipeline, infer_step):
+        """Bind an inference step (``repro.pipeline.infer``) under
+        shard_map on the executor's mesh.
+
+        ``run(params, seeds, salt) -> (logits, metrics)``: ``logits`` is
+        (P, batch, C), sharded along the worker axis (each device holds
+        its own seeds' logits); ``metrics`` is replicated (the step
+        pmean/psums it over ``dist.AXIS``).
+        """
+        smap, use_cache = self._build_infer_smap(pipeline, infer_step)
+
+        if use_cache:
+            def run(params, seeds, salt):
+                return smap(params, pipeline.shards, seeds,
+                            pipeline.cache, salt)
+        else:
             def run(params, seeds, salt):
                 return smap(params, pipeline.shards, seeds, salt)
 
@@ -395,13 +440,49 @@ class ShardMapExecutor:
         """
         from functools import partial
 
+        smap_prep, smap_prep_warm, smap_cons, use_cache = \
+            self._build_prefetch_smaps(pipeline, prepare, prepare_warm,
+                                       consume)
+        shards, cache = pipeline.shards, pipeline.cache
+
+        def _call_prep(smap, seeds, salt):
+            if use_cache:
+                return smap(shards, seeds, cache, salt)
+            return smap(shards, seeds, salt)
+
+        def _consume(params, batch):
+            if use_cache:
+                return smap_cons(params, batch, shards, cache)
+            return smap_cons(params, batch, shards)
+
+        @partial(jax.jit, donate_argnums=(2,))
+        def fused_j(params, opt_state, queue, seeds_next, salt_next):
+            loss, grads, metrics = _consume(params, queue[0])
+            params, opt_state, metrics = update(params, opt_state, grads,
+                                                metrics)
+            nxt = _call_prep(smap_prep, seeds_next, salt_next)
+            return params, opt_state, loss, metrics, queue[1:] + (nxt,)
+
+        @jax.jit
+        def warm_j(seeds, salt):
+            return _call_prep(smap_prep_warm, seeds, salt)
+
+        return _RotatingBufferRunner(warm_j, fused_j)
+
+    def _build_prefetch_smaps(self, pipeline, prepare, prepare_warm,
+                              consume):
+        """shard_map programs for the split step with the worker-axis
+        data as explicit arguments: ``(smap_prep, smap_prep_warm,
+        smap_cons, use_cache)`` where the prepares take ``(shards,
+        seeds[, cache], salt)`` and the consume ``(params, batch,
+        shards[, cache])``.  Shared with ``MultiprocessExecutor``, whose
+        jits must receive global arrays as arguments, never closures."""
         from jax.sharding import PartitionSpec as P
 
         from repro.compat import shard_map
 
         mesh = self._resolve_mesh(pipeline)
         use_cache = pipeline.cache is not None
-        shards, cache = pipeline.shards, pipeline.cache
         squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
         expand = lambda t: jax.tree.map(lambda a: a[None], t)
         A = dist.AXIS
@@ -427,11 +508,6 @@ class ShardMapExecutor:
         smap_prep = _smap_prepare(prepare)
         smap_prep_warm = _smap_prepare(prepare_warm)
 
-        def _call_prep(smap, seeds, salt):
-            if use_cache:
-                return smap(shards, seeds, cache, salt)
-            return smap(shards, seeds, salt)
-
         if use_cache:
             def cons_wrapper(params, batch, shards_, cache_):
                 return consume(params, squeeze(shards_), squeeze(batch),
@@ -441,9 +517,6 @@ class ShardMapExecutor:
                 cons_wrapper, mesh=mesh,
                 in_specs=(P(), P(A), P(A), P(A)),
                 out_specs=(P(), P(), P()), check=False)
-
-            def _consume(params, batch):
-                return smap_cons(params, batch, shards, cache)
         else:
             def cons_wrapper(params, batch, shards_):
                 return consume(params, squeeze(shards_), squeeze(batch),
@@ -454,23 +527,199 @@ class ShardMapExecutor:
                 in_specs=(P(), P(A), P(A)),
                 out_specs=(P(), P(), P()), check=False)
 
-            def _consume(params, batch):
-                return smap_cons(params, batch, shards)
+        return smap_prep, smap_prep_warm, smap_cons, use_cache
+
+
+class MultiprocessExecutor(ShardMapExecutor):
+    """Multi-host path: the same per-worker program under shard_map over
+    the **global** mesh spanning every JAX process.
+
+    Each rank must have called ``jax.distributed.initialize`` (see
+    ``repro.launch.multihost.init_from_env``) before any JAX work; the
+    executor then builds a 1-D mesh over ALL processes' devices — sorted
+    ``(process_index, id)`` so partition ``p`` lands on the process that
+    built it — and binds the identical step program ``ShardMapExecutor``
+    binds.  Placement schemes, cache policies, prefetch drivers, and seed
+    staging therefore compose unchanged.
+
+    Two things differ from single-process shard_map:
+
+    * the pipeline's worker-axis arrays (shards, cache) are converted to
+      global arrays at bind time (``Pipeline.globalize_shards``): each
+      process contributes only its **addressable** rows, which is what
+      makes rank-local builds (``Pipeline.build(local_parts=...)``) safe
+      — a rank never materializes (or ships) partitions it doesn't own.
+      Params, opt state, seeds, and salt stay ordinary uncommitted host
+      arrays; JAX replicates/auto-shards them per the program's specs.
+    * cross-process collectives run on the CPU backend's gloo
+      implementation.  ``lax.all_to_all`` (the paper's communication
+      primitive) is pure data movement and bit-exact everywhere; the
+      loss/grad reductions go through ``dist.pmean_ordered`` /
+      ``dist.psum_ordered`` (all_gather + program-fixed local reduce), so
+      results are bit-identical to ``vmap`` and ``shard_map``
+      (``tests/test_multihost.py`` asserts the full matrix).
+    """
+
+    name = "multiprocess"
+    handles_local_parts = True
+
+    def _resolve_mesh(self, pipeline):
+        import numpy as np
+
+        num_parts = pipeline.spec.plan.num_parts
+        mesh = self.mesh
+        if mesh is None:
+            devices = sorted(jax.devices(),
+                             key=lambda d: (d.process_index, d.id))
+            if len(devices) != num_parts:
+                raise RuntimeError(
+                    f"multiprocess executor needs exactly {num_parts} "
+                    f"global devices (one per worker/partition), found "
+                    f"{len(devices)} across {jax.process_count()} "
+                    f"process(es); set "
+                    f"--xla_force_host_platform_device_count="
+                    f"{num_parts // max(jax.process_count(), 1)} per "
+                    f"process")
+            if num_parts % jax.process_count() != 0:
+                raise RuntimeError(
+                    f"num_parts={num_parts} must divide evenly across "
+                    f"{jax.process_count()} processes")
+            mesh = jax.sharding.Mesh(np.asarray(devices), (dist.AXIS,))
+            self.mesh = mesh
+        self._check_local_parts(pipeline, mesh)
+        return mesh
+
+    def _check_local_parts(self, pipeline, mesh):
+        """A rank-local layout must cover exactly the partitions whose
+        mesh rows this process addresses — otherwise the global array
+        assembly would read never-materialized zero rows."""
+        lp = getattr(pipeline.layout, "local_parts", None)
+        if lp is None:
+            return
+        me = jax.process_index()
+        rows = [i for i, d in enumerate(mesh.devices.flat)
+                if d.process_index == me]
+        want = (min(rows), max(rows) + 1)
+        if tuple(lp) != want or len(rows) != want[1] - want[0]:
+            raise ValueError(
+                f"rank-local layout covers partitions {tuple(lp)!r} but "
+                f"process {me} addresses mesh rows {want!r}; build with "
+                f"local_parts={want!r}")
+
+    def _globalize(self, pipeline):
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        mesh = self._resolve_mesh(pipeline)
+        pipeline.globalize_shards(NamedSharding(mesh, P(dist.AXIS)))
+
+    @staticmethod
+    def _data_of(pipeline, use_cache):
+        return ((pipeline.shards, pipeline.cache) if use_cache
+                else (pipeline.shards,))
+
+    def bind(self, pipeline, step):
+        """Like ``ShardMapExecutor.bind``, but the returned ``run``
+        carries a ``with_data(params, seeds, salt, data)`` twin plus the
+        bound ``data`` pytree: global arrays may not be *closed over*
+        inside jit, so outer jits (``Pipeline.train_step``) re-thread
+        them as arguments."""
+        self._globalize(pipeline)
+        smap, use_cache = self._build_smap(pipeline, step)
+
+        if use_cache:
+            def with_data(params, seeds, salt, data):
+                shards, cache = data
+                return smap(params, shards, seeds, cache, salt)
+        else:
+            def with_data(params, seeds, salt, data):
+                (shards,) = data
+                return smap(params, shards, seeds, salt)
+
+        data = self._data_of(pipeline, use_cache)
+
+        def run(params, seeds, salt):
+            return with_data(params, seeds, salt, data)
+
+        run.with_data = with_data
+        run.data = data
+        return run
+
+    def bind_infer(self, pipeline, infer_step):
+        """``ShardMapExecutor.bind_infer`` with the multi-process
+        data-as-arguments protocol (see ``bind``)."""
+        self._globalize(pipeline)
+        smap, use_cache = self._build_infer_smap(pipeline, infer_step)
+
+        if use_cache:
+            def with_data(params, seeds, salt, data):
+                shards, cache = data
+                return smap(params, shards, seeds, cache, salt)
+        else:
+            def with_data(params, seeds, salt, data):
+                (shards,) = data
+                return smap(params, shards, seeds, salt)
+
+        data = self._data_of(pipeline, use_cache)
+
+        def run(params, seeds, salt):
+            return with_data(params, seeds, salt, data)
+
+        run.with_data = with_data
+        run.data = data
+        return run
+
+    def bind_prefetch(self, pipeline, prepare, prepare_warm, consume,
+                      update):
+        """``ShardMapExecutor.bind_prefetch`` with the global shards and
+        cache passed into the fused jit as arguments each step (the
+        rotation/donation structure is unchanged; ``data`` is appended
+        after the donated queue, so only the queue's buffers rotate)."""
+        from functools import partial
+
+        self._globalize(pipeline)
+        smap_prep, smap_prep_warm, smap_cons, use_cache = \
+            self._build_prefetch_smaps(pipeline, prepare, prepare_warm,
+                                       consume)
+        data = self._data_of(pipeline, use_cache)
+
+        def _call_prep(smap, seeds, salt, data):
+            if use_cache:
+                shards, cache = data
+                return smap(shards, seeds, cache, salt)
+            (shards,) = data
+            return smap(shards, seeds, salt)
+
+        def _consume(params, batch, data):
+            if use_cache:
+                shards, cache = data
+                return smap_cons(params, batch, shards, cache)
+            (shards,) = data
+            return smap_cons(params, batch, shards)
 
         @partial(jax.jit, donate_argnums=(2,))
-        def fused_j(params, opt_state, queue, seeds_next, salt_next):
-            loss, grads, metrics = _consume(params, queue[0])
+        def fused_raw(params, opt_state, queue, seeds_next, salt_next,
+                      data):
+            loss, grads, metrics = _consume(params, queue[0], data)
             params, opt_state, metrics = update(params, opt_state, grads,
                                                 metrics)
-            nxt = _call_prep(smap_prep, seeds_next, salt_next)
+            nxt = _call_prep(smap_prep, seeds_next, salt_next, data)
             return params, opt_state, loss, metrics, queue[1:] + (nxt,)
 
         @jax.jit
+        def warm_raw(seeds, salt, data):
+            return _call_prep(smap_prep_warm, seeds, salt, data)
+
         def warm_j(seeds, salt):
-            return _call_prep(smap_prep_warm, seeds, salt)
+            return warm_raw(seeds, salt, data)
+
+        def fused_j(params, opt_state, queue, seeds_next, salt_next):
+            return fused_raw(params, opt_state, queue, seeds_next,
+                             salt_next, data)
 
         return _RotatingBufferRunner(warm_j, fused_j)
 
 
 register_executor("vmap", VmapExecutor)
 register_executor("shard_map", ShardMapExecutor)
+register_executor("multiprocess", MultiprocessExecutor)

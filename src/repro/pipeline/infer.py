@@ -31,7 +31,6 @@ from __future__ import annotations
 from typing import Callable, Sequence
 
 import jax.numpy as jnp
-from jax import lax
 
 from repro.core import dist
 from repro.pipeline.prefetch import PreparedBatch, make_prepare_consume
@@ -86,12 +85,12 @@ def make_infer_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
             jnp.sum(mfgs[-1].src_nodes >= 0), 1)
         comm = dict(batch.comm)
         metrics = {
-            "cache_hit_rate": lax.pmean(hit_rate.astype(jnp.float32),
-                                        dist.AXIS),
-            "sampling_utilized_bytes": lax.psum(
-                comm["sampling_utilized_bytes"], dist.AXIS),
-            "feature_utilized_bytes": lax.psum(
-                comm["feature_utilized_bytes"], dist.AXIS),
+            "cache_hit_rate": dist.pmean_ordered(
+                hit_rate.astype(jnp.float32)),
+            "sampling_utilized_bytes": dist.psum_ordered(
+                comm["sampling_utilized_bytes"]),
+            "feature_utilized_bytes": dist.psum_ordered(
+                comm["feature_utilized_bytes"]),
         }
         return logits, metrics
 

@@ -55,15 +55,22 @@ class Pipeline:
     placement: "PlacementPlan | None" = None        # noqa: F821
     dataset: "GraphDataset | None" = None           # noqa: F821
     _edge_cut: float | None = None
+    _global_sharding: object = None
 
     # ---------------------------------------------------------------- build
 
     @classmethod
     def build(cls, graph: CSCGraph, features, labels,
-              spec: PipelineSpec, *, labeled_mask=None) -> "Pipeline":
+              spec: PipelineSpec, *, labeled_mask=None,
+              local_parts=None) -> "Pipeline":
         """Partition ``graph`` and assemble every stage the spec asks for.
 
-        ``labeled_mask`` defaults to ``labels >= 0``.
+        ``labeled_mask`` defaults to ``labels >= 0``.  ``local_parts``
+        (a ``(lo, hi)`` partition range) builds a rank-local pipeline for
+        the multi-process executor: only this rank's partitions get their
+        feature rows materialized (see
+        ``repro.core.partition.build_layout``); the partitioning itself
+        is deterministic, so every rank derives the identical assignment.
         """
         from repro.core.partition import build_layout, partition_graph
 
@@ -77,7 +84,7 @@ class Pipeline:
                                  slack=plan.node_slack,
                                  labeled_slack=plan.labeled_slack)
         layout = build_layout(graph, np.asarray(features), labels, assign,
-                              plan.num_parts)
+                              plan.num_parts, local_parts=local_parts)
         # the build chain shared one memoized CSR view of the input graph;
         # release its O(nnz) derived arrays now that the chain is done
         from repro.core.graph import csr_view_release
@@ -86,7 +93,8 @@ class Pipeline:
 
     @classmethod
     def build_from_source(cls, source=None, spec: PipelineSpec = None,
-                          *, mmap: bool = True) -> "Pipeline":
+                          *, mmap: bool = True,
+                          local_parts=None) -> "Pipeline":
         """``Pipeline.build`` with the dataset resolved by the
         ``repro.data`` graph-source subsystem.
 
@@ -104,6 +112,9 @@ class Pipeline:
             sources).
         mmap : bool, default True
             Memory-map on-disk datasets instead of loading them eagerly.
+        local_parts : (lo, hi), optional
+            Rank-local build for the multi-process executor (see
+            ``Pipeline.build``).
 
         The resulting pipeline is **bit-identical** to calling
         ``Pipeline.build(ds.graph, ds.features, ds.labels, spec)`` on the
@@ -123,7 +134,8 @@ class Pipeline:
         if spec is None:
             raise ValueError("build_from_source needs a PipelineSpec")
         ds = resolve_dataset(source, spec.data, mmap=mmap)
-        pipe = cls.build(ds.graph, ds.features, ds.labels, spec)
+        pipe = cls.build(ds.graph, ds.features, ds.labels, spec,
+                         local_parts=local_parts)
         pipe.dataset = ds
         return pipe
 
@@ -158,6 +170,13 @@ class Pipeline:
 
         cache = None
         if plan.cache_capacity > 0:
+            if getattr(layout, "local_parts", None) is not None:
+                raise ValueError(
+                    "cache_capacity > 0 is incompatible with a rank-local "
+                    "layout (local_parts): cache construction copies "
+                    "*remote* partitions' hot feature rows, which a "
+                    "rank-local build never materializes.  Build the "
+                    "full layout (local_parts=None) when caching.")
             policy = resolve_cache_policy(plan.cache_policy)
             cache = policy(layout, plan.cache_capacity,
                            fanouts=spec.sampler.fanouts,
@@ -305,6 +324,13 @@ class Pipeline:
                 f"executor {getattr(executor, 'name', executor)!r} does "
                 f"not support inference binding (no bind_infer method)")
         fn = bind(self, self.make_infer_step(forward_fn, counted=counted))
+        with_data = getattr(fn, "with_data", None)
+        if with_data is not None and jit:
+            # multi-process data-as-arguments protocol (see train_step)
+            data = fn.data
+            jfn = jax.jit(with_data)
+            return lambda params, seeds, salt: jfn(params, seeds, salt,
+                                                   data)
         return jax.jit(fn) if jit else fn
 
     def step_fn(self, loss_fn, executor=None):
@@ -351,6 +377,32 @@ class Pipeline:
         run = self.step_fn(loss_fn, executor=executor)
         update = make_update_fn(lr=lr, optimizer=optimizer,
                                 grad_clip=grad_clip)
+
+        with_data = getattr(run, "with_data", None)
+        if with_data is not None:
+            # multi-process executor: global arrays may not be closed
+            # over inside jit — the bound data pytree is threaded through
+            # the jitted program as an argument instead
+            data = run.data
+
+            @jax.jit
+            def jfn(params, opt_state, seeds, salt, data):
+                loss, grads, metrics = with_data(params, seeds, salt,
+                                                 data)
+                params, opt_state, metrics = update(params, opt_state,
+                                                    grads, metrics)
+                return params, opt_state, loss, metrics
+
+            def fn(params, opt_state, seeds, salt):
+                return jfn(params, opt_state, seeds, salt, data)
+
+            if not jit:
+                def fn(params, opt_state, seeds, salt):      # noqa: F811
+                    loss, grads, metrics = run(params, seeds, salt)
+                    params, opt_state, metrics = update(
+                        params, opt_state, grads, metrics)
+                    return params, opt_state, loss, metrics
+            return fn
 
         def fn(params, opt_state, seeds, salt):
             loss, grads, metrics = run(params, seeds, salt)
@@ -413,6 +465,38 @@ class Pipeline:
                    base_salt=base_salt, staging=staging)
 
     # ------------------------------------------------------------ utilities
+
+    def globalize_shards(self, sharding) -> None:
+        """Convert ``shards`` (and ``cache``) into multi-process global
+        arrays sharded along the worker axis (idempotent).
+
+        Called by the ``"multiprocess"`` executor at bind time:
+        ``sharding`` is a ``NamedSharding`` over the *global* device mesh
+        with ``PartitionSpec(dist.AXIS)`` on the leading (worker) axis.
+        Each process materializes only its **addressable** rows via
+        ``jax.make_array_from_callback`` — which is exactly what a
+        rank-local build (``local_parts``) filled; the zero rows a rank
+        never owns are never read.  Params/opt-state/seeds stay ordinary
+        uncommitted arrays (JAX replicates/auto-shards them), so only the
+        worker-axis data needs this conversion.
+        """
+        if self._global_sharding is not None:
+            if self._global_sharding != sharding:
+                raise ValueError(
+                    "pipeline shards were already globalized with a "
+                    "different sharding; build a fresh Pipeline to bind "
+                    "a different mesh")
+            return
+
+        def to_global(leaf):
+            host = np.asarray(leaf)
+            return jax.make_array_from_callback(
+                host.shape, sharding, lambda idx, h=host: h[idx])
+
+        self.shards = jax.tree.map(to_global, self.shards)
+        if self.cache is not None:
+            self.cache = jax.tree.map(to_global, self.cache)
+        self._global_sharding = sharding
 
     def seeds_host(self, batch: int, epoch_salt: int) -> np.ndarray:
         """Host-side half of ``seeds``: the hash-rank argsort over labeled

@@ -219,17 +219,21 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
                            batch.seed_valid)
 
         loss, grads = jax.value_and_grad(objective)(params)
-        grads = lax.pmean(grads, dist.AXIS)
-        loss = lax.pmean(loss, dist.AXIS)
+        # order-deterministic reductions (all_gather + local reduce): the
+        # summation order is part of the program, so every executor — vmap,
+        # shard_map, and the cross-process gloo collectives behind
+        # "multiprocess" — produces bit-identical loss/grads
+        grads = dist.pmean_ordered(grads)
+        loss = dist.pmean_ordered(loss)
         hit_rate = hits / jnp.maximum(jnp.sum(mfgs[-1].src_nodes >= 0), 1)
         metrics = {
-            "cache_hit_rate": lax.pmean(hit_rate.astype(jnp.float32),
-                                        dist.AXIS),
+            "cache_hit_rate": dist.pmean_ordered(
+                hit_rate.astype(jnp.float32)),
             # totals across the worker axis (the fabric-wide volume)
-            "sampling_utilized_bytes": lax.psum(
-                comm["sampling_utilized_bytes"], dist.AXIS),
-            "feature_utilized_bytes": lax.psum(
-                comm["feature_utilized_bytes"], dist.AXIS),
+            "sampling_utilized_bytes": dist.psum_ordered(
+                comm["sampling_utilized_bytes"]),
+            "feature_utilized_bytes": dist.psum_ordered(
+                comm["feature_utilized_bytes"]),
         }
         return loss, grads, metrics
 

@@ -215,8 +215,10 @@ class PipelineSpec:
     sampler : SamplerSpec
         Fanouts + level-backend registry name.
     executor : str, default "vmap"
-        Executor registry name: ``"vmap"`` (single-device simulation) or
-        ``"shard_map"`` (device mesh).
+        Executor registry name: ``"vmap"`` (single-device simulation),
+        ``"shard_map"`` (device mesh), or ``"multiprocess"`` (shard_map
+        over the global mesh of real OS processes — see
+        ``repro.launch.multihost``).
     prefetch : PrefetchSpec, default PrefetchSpec()
         Double-buffering config; the default (depth 0) is the synchronous
         path.
@@ -242,7 +244,7 @@ class PipelineSpec:
     """
     plan: PlanSpec
     sampler: SamplerSpec
-    executor: str = "vmap"           # "vmap" | "shard_map" (registry)
+    executor: str = "vmap"   # "vmap" | "shard_map" | "multiprocess"
     prefetch: PrefetchSpec = dataclasses.field(default_factory=PrefetchSpec)
     data: DataSpec | None = None
 

@@ -99,10 +99,22 @@ class SeedStager:
         """Compute step ``k``'s seeds/salt on the host and start their
         device transfer.  Runs on the worker thread; the host half is
         pure numpy (``SeedStream.seeds_host``), then ``jax.device_put``
-        enqueues the (async where supported) H2D copy."""
+        enqueues the (async where supported) H2D copy.
+
+        Under the multi-process executor the sharding spans devices this
+        process cannot address; ``jax.make_array_from_callback`` then
+        assembles the global array from this rank's addressable rows
+        (every rank computes the identical full ``(P, batch)`` host
+        table, so the rows are consistent by construction)."""
         seeds_np = self.stream.seeds_host(k)
         salt_np = np.uint32(self.stream.salt_int(k))
-        seeds = jax.device_put(seeds_np, self.sharding)
+        if self.sharding is not None \
+                and not self.sharding.is_fully_addressable:
+            seeds = jax.make_array_from_callback(
+                seeds_np.shape, self.sharding,
+                lambda idx: seeds_np[idx])
+        else:
+            seeds = jax.device_put(seeds_np, self.sharding)
         salt = jax.device_put(salt_np)
         return seeds, salt
 

@@ -1,0 +1,65 @@
+"""Shared subprocess-runner scaffolding for the test suite.
+
+Many tests must run JAX code in a *fresh* process — anything that needs
+``--xla_force_host_platform_device_count`` (set before backend init),
+``jax.distributed`` rank wiring, or a launcher module's ``__main__`` —
+while the main pytest process keeps its single-device view.  The same
+boilerplate (interpreter path, ``PYTHONPATH=src`` env, timeout,
+stderr-tail-on-failure assertion, stdout sentinel check) was duplicated
+across six test files; it lives here now, exposed directly and through
+the ``subproc`` fixture in ``conftest.py``.
+"""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+TIMEOUT = 900
+
+
+def run(argv, *, expect=None, timeout=TIMEOUT, env=None, check=True):
+    """Run ``argv`` in a fresh process with the repo's ``src`` on
+    PYTHONPATH.
+
+    Parameters
+    ----------
+    argv : list[str]
+        Full command line (``sys.executable`` is NOT prepended).
+    expect : str, optional
+        Sentinel that must appear in stdout (asserted after the
+        return-code check, so failures show stderr first).
+    timeout : float, default 900
+        Seconds before ``subprocess.TimeoutExpired``.
+    env : dict, optional
+        Environment override (defaults to ``ENV``).
+    check : bool, default True
+        Assert returncode == 0, reporting the stderr tail.  Pass
+        ``False`` for tests that assert on failures themselves.
+
+    Returns the ``CompletedProcess`` (text mode, output captured).
+    """
+    r = subprocess.run(argv, capture_output=True, text=True,
+                       env=ENV if env is None else env, timeout=timeout)
+    if check:
+        assert r.returncode == 0, r.stderr[-2000:]
+    if expect is not None:
+        assert expect in r.stdout, (r.stdout[-1000:], r.stderr[-1000:])
+    return r
+
+
+def run_code(script, *, expect=None, timeout=TIMEOUT, env=None,
+             check=True):
+    """``python -c script`` via ``run`` — the inline-script pattern used
+    by the shard_map / staging / serve / placement / prefetch / data
+    equivalence tests."""
+    return run([sys.executable, "-c", script], expect=expect,
+               timeout=timeout, env=env, check=check)
+
+
+def run_module(module, *args, expect=None, timeout=TIMEOUT, env=None,
+               check=True):
+    """``python -m module *args`` via ``run`` — the launcher-entrypoint
+    pattern used by the system tests."""
+    return run([sys.executable, "-m", module, *args], expect=expect,
+               timeout=timeout, env=env, check=check)

@@ -67,6 +67,42 @@ def _install_hypothesis_stub() -> None:
 _install_hypothesis_stub()
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multihost: multi-process executor tests (spawn coordinated "
+        "worker fleets; excluded from the default run — select with "
+        "pytest -m multihost)")
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running tests excluded from the default fast run")
+
+
+def pytest_collection_modifyitems(config, items):
+    """Keep tier-1 ``make test`` fast: ``multihost``-marked tests only
+    run when explicitly selected via ``-m`` (they spawn 2-process JAX
+    fleets and compile cross-process collectives — minutes, not
+    seconds)."""
+    markexpr = config.getoption("-m") or ""
+    if "multihost" in markexpr:
+        return
+    skip = pytest.mark.skip(
+        reason="multihost tests run only under `pytest -m multihost`")
+    for item in items:
+        if "multihost" in item.keywords:
+            item.add_marker(skip)
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    """The shared subprocess-runner scaffolding (``tests/_subproc.py``):
+    ``subproc.run_code(script, expect=...)`` /
+    ``subproc.run_module(mod, *args, expect=...)`` with PYTHONPATH,
+    timeout, and stderr-tail reporting handled once."""
+    import _subproc
+    return _subproc
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -3,9 +3,6 @@ policies, on-disk round-trips (mmap'd npz), chunked/streaming ingest,
 ``Pipeline.build_from_source`` bit-equivalence on both executors, and
 the skew win (``hybrid_partial`` expected rounds fall on skewed
 sources at equal nnz)."""
-import os
-import subprocess
-import sys
 import textwrap
 
 import numpy as np
@@ -26,9 +23,6 @@ from repro.pipeline import Pipeline, PipelineSpec, PlanSpec, SamplerSpec
 
 FAMILIES = ("uniform", "powerlaw(1.8)", "rmat(0.57,0.19,0.19,0.05)",
             "sbm(4,0.9,0.1)")
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
-
 
 def _gen(name, n=500, d=5, seed=3, **kw):
     kw.setdefault("num_features", 8)
@@ -440,9 +434,7 @@ EXECUTOR_SCRIPT = textwrap.dedent("""
 """)
 
 
-def test_build_from_source_bit_identical_across_executors_subprocess():
-    r = subprocess.run([sys.executable, "-c", EXECUTOR_SCRIPT],
-                       capture_output=True, text=True, env=ENV,
-                       timeout=900)
-    assert r.returncode == 0, r.stderr[-2000:]
-    assert "BUILD_FROM_SOURCE_EXECUTORS_OK" in r.stdout
+def test_build_from_source_bit_identical_across_executors_subprocess(
+        subproc):
+    subproc.run_code(EXECUTOR_SCRIPT,
+                     expect="BUILD_FROM_SOURCE_EXECUTORS_OK")

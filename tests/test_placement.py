@@ -3,9 +3,6 @@ minibatches across schemes x cache policies x executors, trace-time round
 accounting (vanilla=2L, hybrid=2, partial in [2, 2L]) including under
 prefetch, the data-dependent expected-round interpolation of
 ``hybrid_partial``, and spec parsing of parameterized scheme names."""
-import os
-import subprocess
-import sys
 import textwrap
 
 import numpy as np
@@ -26,8 +23,6 @@ from repro.pipeline import (Pipeline, PipelineSpec, PlanSpec, PrefetchSpec,
 P_ = 4
 L_ = 3
 SCHEMES = ("vanilla", "hybrid", "hybrid_partial(0.5)")
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
 
 
 @pytest.fixture(scope="module")
@@ -359,12 +354,9 @@ SHARD_MAP_SCRIPT = textwrap.dedent("""
 """)
 
 
-def test_scheme_matrix_bit_identical_shard_map_subprocess():
+def test_scheme_matrix_bit_identical_shard_map_subprocess(subproc):
     """schemes x cache policies x {vmap, shard_map}: every cell produces
     the identical loss/gradients (subprocess so the main process keeps
     its single-device view)."""
-    r = subprocess.run([sys.executable, "-c", SHARD_MAP_SCRIPT],
-                       capture_output=True, text=True, env=ENV,
-                       timeout=900)
-    assert r.returncode == 0, r.stderr[-2000:]
-    assert "PLACEMENT_EXECUTOR_MATRIX_OK" in r.stdout
+    subproc.run_code(SHARD_MAP_SCRIPT,
+                     expect="PLACEMENT_EXECUTOR_MATRIX_OK")

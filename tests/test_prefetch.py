@@ -1,9 +1,6 @@
 """Double-buffered prefetch: bit-equivalence of ``prefetch_depth > 0``
 vs the synchronous ``"sync"`` driver on both executors, seed-stream
 determinism across restarts, and ``PrefetchSpec`` validation."""
-import os
-import subprocess
-import sys
 import textwrap
 
 import numpy as np
@@ -20,9 +17,6 @@ from repro.pipeline import (Pipeline, PipelineSpec, PlanSpec, PrefetchSpec,
                             resolve_prefetcher)
 
 P_ = 4
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
-
 
 @pytest.fixture(scope="module")
 def world():
@@ -241,12 +235,8 @@ SHARD_MAP_SCRIPT = textwrap.dedent("""
 """)
 
 
-def test_prefetch_bit_equivalence_shard_map_subprocess():
+def test_prefetch_bit_equivalence_shard_map_subprocess(subproc):
     """Donated rotating double buffers under shard_map replay the sync
     path bit-for-bit (subprocess so the main process keeps its
     single-device view)."""
-    r = subprocess.run([sys.executable, "-c", SHARD_MAP_SCRIPT],
-                       capture_output=True, text=True, env=ENV,
-                       timeout=900)
-    assert r.returncode == 0, r.stderr[-2000:]
-    assert "SHARD_MAP_PREFETCH_OK" in r.stdout
+    subproc.run_code(SHARD_MAP_SCRIPT, expect="SHARD_MAP_PREFETCH_OK")

@@ -2,9 +2,6 @@
 bit-identical to the training-side forward across schemes and both
 executors), batcher/bucket/routing units, recycler staleness contract,
 traffic generators, and the launch shim."""
-import os
-import subprocess
-import sys
 import textwrap
 
 import numpy as np
@@ -24,9 +21,6 @@ from repro.serve.traffic import (hotset_arrivals, resolve_arrival,
                                  uniform_arrivals)
 
 P_ = 4
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
-
 
 @pytest.fixture(scope="module")
 def world():
@@ -306,7 +300,7 @@ def test_traffic_generators():
 # launch shim (satellite: serve.py -> serve_lm.py rename)
 # --------------------------------------------------------------------------
 
-def test_serve_lm_shim_warns():
+def test_serve_lm_shim_warns(subproc):
     code = ("import warnings\n"
             "with warnings.catch_warnings(record=True) as w:\n"
             "    warnings.simplefilter('always')\n"
@@ -318,10 +312,7 @@ def test_serve_lm_shim_warns():
             "assert shim.main is lm.main\n"
             "assert shim.prefill_cache is lm.prefill_cache\n"
             "print('SHIM_OK')\n")
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env=ENV, timeout=300)
-    assert r.returncode == 0, r.stderr[-2000:]
-    assert "SHIM_OK" in r.stdout
+    subproc.run_code(code, expect="SHIM_OK", timeout=300)
 
 
 # --------------------------------------------------------------------------
@@ -368,12 +359,8 @@ SHARD_MAP_SCRIPT = textwrap.dedent("""
 """)
 
 
-def test_predictor_bit_equivalence_shard_map_subprocess():
+def test_predictor_bit_equivalence_shard_map_subprocess(subproc):
     """Served logits are bit-identical between the vmap simulation and
     the shard_map device-mesh executor for every scheme/cache combo
     (subprocess so the main process keeps its single-device view)."""
-    r = subprocess.run([sys.executable, "-c", SHARD_MAP_SCRIPT],
-                       capture_output=True, text=True, env=ENV,
-                       timeout=900)
-    assert r.returncode == 0, r.stderr[-2000:]
-    assert "SERVE_SHARD_MAP_OK" in r.stdout
+    subproc.run_code(SHARD_MAP_SCRIPT, expect="SERVE_SHARD_MAP_OK")

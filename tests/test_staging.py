@@ -4,8 +4,6 @@ ring drain/refill on out-of-sequence indices, checkpoint save/restore
 resume equivalence (the ``DoubleBufferDriver._warmup`` re-fill path), and
 ``PrefetchSpec`` staging validation."""
 import os
-import subprocess
-import sys
 import textwrap
 
 import numpy as np
@@ -21,9 +19,6 @@ from repro.pipeline import (Pipeline, PipelineSpec, PlanSpec, PrefetchSpec,
 from repro.train.checkpoint import restore_checkpoint, save_checkpoint
 
 P_ = 4
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
-
 
 @pytest.fixture(scope="module")
 def world():
@@ -329,12 +324,8 @@ SHARD_MAP_SCRIPT = textwrap.dedent("""
 """)
 
 
-def test_staging_bit_equivalence_shard_map_subprocess():
+def test_staging_bit_equivalence_shard_map_subprocess(subproc):
     """Pre-sharded staged seeds under shard_map replay the unstaged path
     bit-for-bit at depths 0/1/2, including a staged checkpoint resume
     (subprocess so the main process keeps its single-device view)."""
-    r = subprocess.run([sys.executable, "-c", SHARD_MAP_SCRIPT],
-                       capture_output=True, text=True, env=ENV,
-                       timeout=900)
-    assert r.returncode == 0, r.stderr[-2000:]
-    assert "SHARD_MAP_STAGING_OK" in r.stdout
+    subproc.run_code(SHARD_MAP_SCRIPT, expect="SHARD_MAP_STAGING_OK")

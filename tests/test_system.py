@@ -1,7 +1,4 @@
 """End-to-end behaviour tests for the full system."""
-import subprocess
-import sys
-import os
 
 import numpy as np
 import jax
@@ -12,9 +9,6 @@ from repro.core.partition import build_layout, partition_graph
 from repro.data.synthetic_graph import make_power_law_graph
 from repro.models.gnn import GNNConfig
 from repro.train.loop import GNNTrainer
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
 
 
 @pytest.fixture(scope="module")
@@ -59,47 +53,35 @@ def test_scheme_loss_trajectories_identical(world):
     assert losses["vanilla"] == losses["hybrid"] == losses["hybrid+fused"]
 
 
-def test_shard_map_multidevice_subprocess():
+def test_shard_map_multidevice_subprocess(subproc):
     """The production shard_map path on 4 placeholder devices (subprocess so
     the main process keeps its single-device view)."""
-    r = subprocess.run(
-        [sys.executable, "-m", "repro.launch.train_gnn", "--devices", "4",
-         "--shard-map", "--scheme", "hybrid+fused", "--nodes", "1500",
-         "--epochs", "1", "--steps-per-epoch", "2", "--batch", "16"],
-        capture_output=True, text=True, env=ENV, timeout=900)
-    assert r.returncode == 0, r.stderr[-2000:]
-    assert "epoch 0" in r.stdout
+    subproc.run_module(
+        "repro.launch.train_gnn", "--devices", "4", "--shard-map",
+        "--scheme", "hybrid+fused", "--nodes", "1500", "--epochs", "1",
+        "--steps-per-epoch", "2", "--batch", "16", expect="epoch 0")
 
 
-def test_dryrun_single_combo_subprocess():
+def test_dryrun_single_combo_subprocess(subproc):
     """One real dry-run combo (512 placeholder devices) end to end."""
-    r = subprocess.run(
-        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
-         "mamba2-130m", "--shape", "decode_32k", "--mesh", "pod",
-         "--skip-probes", "--out", "/tmp/test_dryrun"],
-        capture_output=True, text=True, env=ENV, timeout=900)
-    assert r.returncode == 0, r.stderr[-2000:]
-    assert '"status": "ok"' in r.stdout
+    subproc.run_module(
+        "repro.launch.dryrun", "--arch", "mamba2-130m", "--shape",
+        "decode_32k", "--mesh", "pod", "--skip-probes", "--out",
+        "/tmp/test_dryrun", expect='"status": "ok"')
 
 
-def test_lm_train_reduces_loss_subprocess():
-    r = subprocess.run(
-        [sys.executable, "-m", "repro.launch.train", "--arch",
-         "stablelm-1.6b", "--reduced", "--steps", "30", "--batch", "16",
-         "--seq", "64", "--lr", "5e-3"],
-        capture_output=True, text=True, env=ENV, timeout=900)
-    assert r.returncode == 0, r.stderr[-2000:]
+def test_lm_train_reduces_loss_subprocess(subproc):
+    r = subproc.run_module(
+        "repro.launch.train", "--arch", "stablelm-1.6b", "--reduced",
+        "--steps", "30", "--batch", "16", "--seq", "64", "--lr", "5e-3")
     lines = [l for l in r.stdout.splitlines() if l.startswith("step")]
     first = float(lines[0].split("loss")[1].split()[0])
     last = float(lines[-1].split("loss")[1].split()[0])
     assert last < first - 0.5, r.stdout
 
 
-def test_serve_subprocess():
-    r = subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve_lm", "--arch",
-         "stablelm-1.6b", "--reduced", "--batch", "2", "--prompt-len", "16",
-         "--gen", "8"],
-        capture_output=True, text=True, env=ENV, timeout=900)
-    assert r.returncode == 0, r.stderr[-2000:]
-    assert "decoded 8 tokens" in r.stdout
+def test_serve_subprocess(subproc):
+    subproc.run_module(
+        "repro.launch.serve_lm", "--arch", "stablelm-1.6b", "--reduced",
+        "--batch", "2", "--prompt-len", "16", "--gen", "8",
+        expect="decoded 8 tokens")
