@@ -24,10 +24,11 @@ docs-check:
 # quick benchmark sanity (minutes not hours): the §5 cache figure + the
 # placement-scheme and graph-source sweeps, which exercise every registry
 # dispatch path, + the staged-vs-unstaged seed-staging delta + the
+# feature-store sweep (exchange / pinned_hot / staged) + the
 # multi-process executor scaling sweep (real jax.distributed fleets)
 bench-smoke:
-	$(PYTHON) -m benchmarks.run cache schemes datasets staging serve \
-		multihost
+	$(PYTHON) -m benchmarks.run cache schemes datasets staging \
+		feature_staging serve multihost
 
 # graph-source subsystem smoke: generate every synthetic family at toy
 # scale, round-trip save/load exactly, re-check determinism + streaming

@@ -120,6 +120,28 @@ def staging_table(recs):
     return "\n".join(rows)
 
 
+def feature_staging_table(recs):
+    """Feature-store table (bench_feature_staging records): steps/s,
+    speedup vs the exchange baseline, and the isolated per-worker fetch
+    wall time per (store, cache) arm — where the step's feature rows are
+    served from and what that costs."""
+    rows = ["| store | cache | executor | depth | steps/s "
+            "| speedup vs exchange | fetch ms | hit rate | dataset |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("workload") != "feature-staging-sweep":
+            continue
+        rows.append(
+            f"| {r['arm']} | {r['cache_capacity']} | {r['executor']} "
+            f"| {r['prefetch_depth']} "
+            f"| {r['steps_per_s']:.2f} "
+            f"| {r['speedup_vs_exchange']:.2f}x "
+            f"| {1e3 * r['fetch_wall_s']:.1f} "
+            f"| {100.0 * r['cache_hit_rate']:.1f}% "
+            f"| {dataset_cols_label(r)} |")
+    return "\n".join(rows)
+
+
 def multihost_table(recs):
     """Multi-process executor table (bench_multihost records): steps/s
     per (scheme, num_procs) with the partition count held fixed — the
@@ -253,6 +275,8 @@ def main():
     ap.add_argument("--schemes-dir", default="experiments/schemes")
     ap.add_argument("--datasets-dir", default="experiments/datasets")
     ap.add_argument("--staging-dir", default="experiments/staging")
+    ap.add_argument("--feature-staging-dir",
+                    default="experiments/feature_staging")
     ap.add_argument("--serve-dir", default="experiments/serve")
     ap.add_argument("--multihost-dir", default="experiments/multihost")
     args = ap.parse_args()
@@ -276,6 +300,11 @@ def main():
     if st_recs:
         print("\n## Host-side seed staging (staged vs unstaged steps/s)\n")
         print(staging_table(st_recs))
+    fs_recs = load(args.feature_staging_dir) \
+        if os.path.isdir(args.feature_staging_dir) else []
+    if fs_recs:
+        print("\n## Feature stores (steps/s + fetch wall time per store)\n")
+        print(feature_staging_table(fs_recs))
     mh_recs = load(args.multihost_dir) \
         if os.path.isdir(args.multihost_dir) else []
     if mh_recs:

@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      0/1/2 per scheme)
   * bench_staging  — host-side seed staging overlap (steps/s staged vs
                      unstaged at depth 0/1/2 per scheme)
+  * bench_feature_staging — feature-store sweep (exchange / pinned_hot /
+                     staged / staged+pinned): steps/s and feature-fetch
+                     wall time per store on a skewed graph
   * bench_datasets — scheme x graph-source sweep (repro.data registry):
                      expected rounds vs dataset skew at equal nnz
   * bench_serve    — online serving (repro.serve): p50/p99/QPS per
@@ -29,9 +32,10 @@ import sys
 
 def main() -> None:
     from benchmarks import (bench_cache, bench_datasets, bench_epoch,
-                            bench_kernels, bench_multihost, bench_prefetch,
-                            bench_sampling, bench_schemes, bench_serve,
-                            bench_staging, bench_storage, bench_table1)
+                            bench_feature_staging, bench_kernels,
+                            bench_multihost, bench_prefetch, bench_sampling,
+                            bench_schemes, bench_serve, bench_staging,
+                            bench_storage, bench_table1)
     mods = {
         "table1": bench_table1,
         "storage": bench_storage,
@@ -42,6 +46,7 @@ def main() -> None:
         "schemes": bench_schemes,
         "prefetch": bench_prefetch,
         "staging": bench_staging,
+        "feature_staging": bench_feature_staging,
         "datasets": bench_datasets,
         "serve": bench_serve,
         "multihost": bench_multihost,

@@ -34,18 +34,34 @@ def fused_sample(graph: CSCGraph, seeds: jnp.ndarray, fanout: int, salt,
 
 
 def fused_sample_level(graph: CSCGraph, seeds: jnp.ndarray, fanout: int,
-                       salt) -> MFG:
+                       salt, *, overflow_sink: list | None = None,
+                       window: int = _fs.MAX_DEG_WINDOW) -> MFG:
     """Drop-in ``level_fn`` for ``sample_mfgs`` backed by the fused kernel.
 
     The kernel emits (samples, R); the sort-based relabel (Algorithm 1's
     second loop, DESIGN.md §2) finishes the MFG.
+
+    The kernel also counts frontier nodes whose degree exceeded its VMEM
+    neighbor ``window`` (their draws cover the first ``window`` neighbors
+    only).  Callers that want that truncation observable pass
+    ``overflow_sink`` — a Python list the traced () int32 count is
+    appended to per level — and the step surfaces the total as the
+    ``sampler_window_overflow`` metric (``repro.pipeline.prefetch``)
+    instead of discarding it.
     """
-    samples, indptr, _overflow = fused_sample(graph, seeds, fanout, salt)
+    samples, indptr, overflow = fused_sample(graph, seeds, fanout, salt,
+                                             window=window)
+    if overflow_sink is not None:
+        overflow_sink.append(overflow)
     valid = samples >= 0
     edges, src_nodes, num_src = relabel(seeds, samples, valid)
     return MFG(dst_nodes=seeds, src_nodes=src_nodes, num_src=num_src,
                edges=edges, edge_mask=valid, indptr=indptr)
 
+
+# advertises the overflow_sink kwarg to the step builder (a function
+# attribute, since functools.partial would not carry one)
+fused_sample_level.supports_overflow_sink = True
 
 # resolvable by name through the level-backend registry (repro.core.sampler)
 register_backend("fused_pallas", fused_sample_level)

@@ -47,6 +47,15 @@ def main():
     ap.add_argument("--cache-policy", default="degree",
                     help="cache-construction policy registry name "
                          "(degree | frequency)")
+    ap.add_argument("--feature-store", default="exchange",
+                    help="feature-store registry name "
+                         "(repro.core.feature_store): exchange (two-round "
+                         "all_to_all fetch, the default) | pinned_hot "
+                         "(cache's hot rows pinned in device memory, "
+                         "needs --cache-capacity > 0) | staged (host "
+                         "pre-gathered rows streamed ahead of the step, "
+                         "needs --prefetch-depth >= 1); rows are "
+                         "bit-identical across stores")
     ap.add_argument("--prefetch-depth", type=int, default=0,
                     help="double-buffered prefetch depth: overlap step "
                          "k's sampling/feature all_to_all with step k-1's "
@@ -114,7 +123,10 @@ def main():
         # then build only this rank's partitions' feature arrays
         rank, num_procs = multihost.init_from_env()
         per = args.devices // num_procs
-        if args.cache_capacity == 0:
+        # rank-local feature builds save memory but preclude stages that
+        # read remote rows: the cache copies remote hot rows, and the
+        # staged store's host gather walks the full table
+        if args.cache_capacity == 0 and args.feature_store != "staged":
             local_parts = (rank * per, (rank + 1) * per)
     elif executor == "shard_map":
         os.environ["XLA_FLAGS"] = (
@@ -137,7 +149,8 @@ def main():
         cache_policy=args.cache_policy,
         executor=executor,
         prefetch_depth=args.prefetch_depth, staging=args.staging,
-        staging_lead=args.staging_lead, data=data)
+        staging_lead=args.staging_lead,
+        feature_store=args.feature_store, data=data)
     pipe = Pipeline.build_from_source(spec=spec, local_parts=local_parts)
     ds = pipe.dataset
     say = print if rank == 0 else (lambda *a, **k: None)

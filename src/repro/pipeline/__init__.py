@@ -85,6 +85,10 @@ dataclasses remain as thin legacy containers).
 """
 from repro.core.cache import (available_cache_policies,
                               register_cache_policy, resolve_cache_policy)
+from repro.core.feature_store import (FeatureStore,
+                                      available_feature_stores,
+                                      register_feature_store,
+                                      resolve_feature_store)
 from repro.data.sources import (available_sources, register_source,
                                 resolve_source)
 from repro.data.spec import DataSpec, resolve_dataset
@@ -102,7 +106,7 @@ from repro.pipeline.prefetch import (DoubleBufferDriver, PreparedBatch,
                                      resolve_prefetcher)
 from repro.pipeline.specs import (PipelineSpec, PlanSpec, PrefetchSpec,
                                   SamplerSpec)
-from repro.pipeline.staging import SeedStager
+from repro.pipeline.staging import FeatureStager, SeedStager
 
 __all__ = [
     "Pipeline", "PipelineSpec", "PlanSpec", "SamplerSpec", "PrefetchSpec",
@@ -114,7 +118,9 @@ __all__ = [
     "register_scheme", "resolve_scheme", "available_schemes",
     "register_cache_policy", "resolve_cache_policy",
     "available_cache_policies",
-    "PreparedBatch", "SeedStream", "SeedStager", "SyncDriver",
-    "DoubleBufferDriver",
+    "FeatureStore", "register_feature_store", "resolve_feature_store",
+    "available_feature_stores",
+    "PreparedBatch", "SeedStream", "SeedStager", "FeatureStager",
+    "SyncDriver", "DoubleBufferDriver",
     "register_prefetcher", "resolve_prefetcher", "available_prefetchers",
 ]

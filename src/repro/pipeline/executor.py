@@ -40,6 +40,7 @@ consume:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable
 
 import jax
@@ -106,21 +107,35 @@ class _AsyncDispatchRunner:
     """Prefetch runner for ``VmapExecutor``: two jitted halves + JAX async
     dispatch.  ``step`` enqueues the next prepare *before* consuming the
     oldest queued batch, so on an async backend the two execute
-    concurrently without any host-side synchronisation.  ``seeds_next`` /
-    ``salt_next`` may be pre-staged device arrays
-    (``repro.pipeline.staging``) — the jitted prepare consumes them
-    as-is, keeping the host seed argsort off this critical path."""
+    concurrently without any host-side synchronisation.  The prepare
+    arguments ``(seeds, salt)`` may be pre-staged device arrays
+    (``repro.pipeline.staging``); the jitted prepare consumes them
+    as-is, keeping the host work off this critical path.
+
+    Staged feature rows (``external_rows`` stores) are attached to the
+    prepared batch HERE, on the host, after ``prepare_j`` returns — not
+    threaded through the traced prepare.  A (P, N, D) array that merely
+    passes through a jitted program is copied into a fresh output buffer
+    at the boundary; attaching outside means the stager's buffer enters
+    exactly one program (the consume, which fetches from it) as a
+    zero-copy input."""
 
     def __init__(self, prepare_j, consume_j):
         self._prep = prepare_j
         self._cons = consume_j
 
-    def prepare(self, seeds, salt):
-        """Dispatch one prepare (used by the driver to fill the queue)."""
-        return self._prep(seeds, salt)
+    @staticmethod
+    def _attach(batch, rows):
+        if rows is None:
+            return batch
+        return dataclasses.replace(batch, staged=rows)
 
-    def step(self, params, opt_state, queue, seeds_next, salt_next):
-        nxt = self._prep(seeds_next, salt_next)       # dispatched async ...
+    def prepare(self, seeds, salt, rows=None):
+        """Dispatch one prepare (used by the driver to fill the queue)."""
+        return self._attach(self._prep(seeds, salt), rows)
+
+    def step(self, params, opt_state, queue, seeds, salt, rows=None):
+        nxt = self._attach(self._prep(seeds, salt), rows)  # async ...
         params, opt_state, loss, metrics = self._cons(params, opt_state,
                                                       queue[0])
         # ... and only now does anyone block on device values
@@ -139,13 +154,13 @@ class _RotatingBufferRunner:
         self._warm = warm_j
         self._fused = fused_j
 
-    def prepare(self, seeds, salt):
+    def prepare(self, *extras):
         """Warmup-only prepare (separate jit; its trace does not tick the
         pipeline's RoundCounter)."""
-        return self._warm(seeds, salt)
+        return self._warm(*extras)
 
-    def step(self, params, opt_state, queue, seeds_next, salt_next):
-        return self._fused(params, opt_state, queue, seeds_next, salt_next)
+    def step(self, params, opt_state, queue, *extras):
+        return self._fused(params, opt_state, queue, *extras)
 
 
 def _require_full_layout(executor, pipeline):
@@ -244,6 +259,10 @@ class VmapExecutor:
         _require_full_layout(self, pipeline)
         use_cache = pipeline.cache is not None
         cache_ax = 0 if use_cache else None
+        # feature stores with external_rows (the "staged" store) do NOT
+        # thread their (P, src_capacity, D) rows through this prepare —
+        # the runner attaches them to the batch host-side and the consume
+        # fetches from them (see _AsyncDispatchRunner)
         vprep = jax.vmap(prepare, in_axes=(0, 0, None, cache_ax),
                          axis_name=dist.AXIS)
         vcons = jax.vmap(consume, in_axes=(None, 0, 0, cache_ax),
@@ -445,10 +464,12 @@ class ShardMapExecutor:
                                        consume)
         shards, cache = pipeline.shards, pipeline.cache
 
-        def _call_prep(smap, seeds, salt):
+        def _call_prep(smap, seeds, salt, *rest):
+            args = (shards, seeds)
             if use_cache:
-                return smap(shards, seeds, cache, salt)
-            return smap(shards, seeds, salt)
+                args += (cache,)
+            args += tuple(rest) + (salt,)
+            return smap(*args)
 
         def _consume(params, batch):
             if use_cache:
@@ -456,16 +477,17 @@ class ShardMapExecutor:
             return smap_cons(params, batch, shards)
 
         @partial(jax.jit, donate_argnums=(2,))
-        def fused_j(params, opt_state, queue, seeds_next, salt_next):
+        def fused_j(params, opt_state, queue, seeds_next, salt_next,
+                    *rest):
             loss, grads, metrics = _consume(params, queue[0])
             params, opt_state, metrics = update(params, opt_state, grads,
                                                 metrics)
-            nxt = _call_prep(smap_prep, seeds_next, salt_next)
+            nxt = _call_prep(smap_prep, seeds_next, salt_next, *rest)
             return params, opt_state, loss, metrics, queue[1:] + (nxt,)
 
         @jax.jit
-        def warm_j(seeds, salt):
-            return _call_prep(smap_prep_warm, seeds, salt)
+        def warm_j(seeds, salt, *rest):
+            return _call_prep(smap_prep_warm, seeds, salt, *rest)
 
         return _RotatingBufferRunner(warm_j, fused_j)
 
@@ -483,27 +505,36 @@ class ShardMapExecutor:
 
         mesh = self._resolve_mesh(pipeline)
         use_cache = pipeline.cache is not None
+        ext = bool(getattr(getattr(pipeline, "feature_store", None),
+                           "external_rows", False))
         squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
         expand = lambda t: jax.tree.map(lambda a: a[None], t)
         A = dist.AXIS
 
+        # positional layout (shards, seeds[, cache][, staged], salt):
+        # worker-axis data first, then the optional staged feature rows
+        # (stores with external_rows), replicated salt last
         def _smap_prepare(fn):
-            if use_cache:
-                def wrapper(shards_, seeds, cache_, salt):
-                    return expand(fn(squeeze(shards_), seeds[0], salt,
-                                     squeeze(cache_)))
+            def wrapper(*args):
+                shards_, seeds = args[0], args[1]
+                i = 2
+                cache_ = None
+                if use_cache:
+                    cache_ = squeeze(args[i])
+                    i += 1
+                staged_ = None
+                if ext:
+                    staged_ = args[i][0]
+                    i += 1
+                salt = args[i]
+                return expand(fn(squeeze(shards_), seeds[0], salt,
+                                 cache_, staged_))
 
-                return shard_map(
-                    wrapper, mesh=mesh,
-                    in_specs=(P(A), P(A), P(A), P()), out_specs=P(A),
-                    check=False)
-
-            def wrapper(shards_, seeds, salt):
-                return expand(fn(squeeze(shards_), seeds[0], salt, None))
-
+            specs = [P(A), P(A)] + ([P(A)] if use_cache else []) \
+                + ([P(A)] if ext else []) + [P()]
             return shard_map(
-                wrapper, mesh=mesh,
-                in_specs=(P(A), P(A), P()), out_specs=P(A), check=False)
+                wrapper, mesh=mesh, in_specs=tuple(specs),
+                out_specs=P(A), check=False)
 
         smap_prep = _smap_prepare(prepare)
         smap_prep_warm = _smap_prepare(prepare_warm)
@@ -683,12 +714,15 @@ class MultiprocessExecutor(ShardMapExecutor):
                                        consume)
         data = self._data_of(pipeline, use_cache)
 
-        def _call_prep(smap, seeds, salt, data):
+        def _call_prep(smap, seeds, salt, rest, data):
             if use_cache:
                 shards, cache = data
-                return smap(shards, seeds, cache, salt)
-            (shards,) = data
-            return smap(shards, seeds, salt)
+                args = (shards, seeds, cache)
+            else:
+                (shards,) = data
+                args = (shards, seeds)
+            args += tuple(rest) + (salt,)
+            return smap(*args)
 
         def _consume(params, batch, data):
             if use_cache:
@@ -699,23 +733,24 @@ class MultiprocessExecutor(ShardMapExecutor):
 
         @partial(jax.jit, donate_argnums=(2,))
         def fused_raw(params, opt_state, queue, seeds_next, salt_next,
-                      data):
+                      rest, data):
             loss, grads, metrics = _consume(params, queue[0], data)
             params, opt_state, metrics = update(params, opt_state, grads,
                                                 metrics)
-            nxt = _call_prep(smap_prep, seeds_next, salt_next, data)
+            nxt = _call_prep(smap_prep, seeds_next, salt_next, rest, data)
             return params, opt_state, loss, metrics, queue[1:] + (nxt,)
 
         @jax.jit
-        def warm_raw(seeds, salt, data):
-            return _call_prep(smap_prep_warm, seeds, salt, data)
+        def warm_raw(seeds, salt, rest, data):
+            return _call_prep(smap_prep_warm, seeds, salt, rest, data)
 
-        def warm_j(seeds, salt):
-            return warm_raw(seeds, salt, data)
+        def warm_j(seeds, salt, *rest):
+            return warm_raw(seeds, salt, tuple(rest), data)
 
-        def fused_j(params, opt_state, queue, seeds_next, salt_next):
+        def fused_j(params, opt_state, queue, seeds_next, salt_next,
+                    *rest):
             return fused_raw(params, opt_state, queue, seeds_next,
-                             salt_next, data)
+                             salt_next, tuple(rest), data)
 
         return _RotatingBufferRunner(warm_j, fused_j)
 

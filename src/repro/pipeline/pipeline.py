@@ -43,6 +43,11 @@ class Pipeline:
     dataset:           the source ``GraphDataset`` when the pipeline came
                        through ``build_from_source`` (else None) — lets
                        benchmarks/launchers report dataset skew columns.
+    feature_store:     the resolved ``FeatureStore``
+                       (``repro.core.feature_store``) serving frontier
+                       rows in the training step — "exchange" (default),
+                       "pinned_hot", or "staged" per
+                       ``PlanSpec.feature_store``.
     edge_cut_fraction: fraction of edges crossing partitions (computed
                        lazily on first access).
     """
@@ -54,6 +59,7 @@ class Pipeline:
     counter: dist.RoundCounter
     placement: "PlacementPlan | None" = None        # noqa: F821
     dataset: "GraphDataset | None" = None           # noqa: F821
+    feature_store: "FeatureStore | None" = None     # noqa: F821
     _edge_cut: float | None = None
     _global_sharding: object = None
 
@@ -75,6 +81,16 @@ class Pipeline:
         from repro.core.partition import build_layout, partition_graph
 
         plan = spec.plan
+        # fail before the (possibly hours-long) partitioning: a cache
+        # copies *remote* partitions' hot rows, which a rank-local build
+        # never materializes — same check from_layout enforces
+        if plan.cache_capacity > 0 and local_parts is not None:
+            raise ValueError(
+                "cache_capacity > 0 is incompatible with a rank-local "
+                "build (local_parts): cache construction copies *remote* "
+                "partitions' hot feature rows, which a rank-local build "
+                "never materializes.  Build the full layout "
+                "(local_parts=None) when caching.")
         labels = np.asarray(labels)
         if labeled_mask is None:
             labeled_mask = labels >= 0
@@ -151,6 +167,7 @@ class Pipeline:
         spec'd ``PlanSpec.cache_policy`` builds the feature cache.
         """
         from repro.core.cache import resolve_cache_policy
+        from repro.core.feature_store import resolve_feature_store
         from repro.core.placement import resolve_scheme
 
         plan = spec.plan
@@ -158,6 +175,16 @@ class Pipeline:
             raise ValueError(
                 f"layout has {layout.num_parts} parts, spec asks for "
                 f"{plan.num_parts}")
+
+        store = resolve_feature_store(plan.feature_store)
+        if store.external_rows \
+                and getattr(layout, "local_parts", None) is not None:
+            raise ValueError(
+                f"feature store {plan.feature_store!r} pre-gathers "
+                f"frontier rows on the host from the full feature table; "
+                f"a rank-local layout (local_parts="
+                f"{tuple(layout.local_parts)!r}) never materializes "
+                f"remote partitions' rows.  Build with local_parts=None.")
 
         scheme = resolve_scheme(plan.scheme, frac=plan.replicate_frac)
         placement = scheme.build(layout)
@@ -185,7 +212,7 @@ class Pipeline:
         return cls(spec=spec, layout=layout, shards=shards,
                    graph_replicated=placement.replicated_graph,
                    cache=cache, counter=dist.RoundCounter(),
-                   placement=placement)
+                   placement=placement, feature_store=store)
 
     # ------------------------------------------------------------- programs
 
@@ -211,7 +238,8 @@ class Pipeline:
             fanouts=sampler.fanouts, loss_fn=loss_fn, scheme=plan.scheme,
             graph_replicated=self.graph_replicated,
             backend=sampler.backend, counter=self.counter,
-            use_cache=self.cache is not None, plan=self.placement)
+            use_cache=self.cache is not None, plan=self.placement,
+            store=self.feature_store)
 
     def make_prepare_consume(self, loss_fn, *, counted: bool = True):
         """Build the per-worker *prepare* / *consume* halves of the step —
@@ -242,7 +270,8 @@ class Pipeline:
             graph_replicated=self.graph_replicated,
             backend=sampler.backend,
             counter=self.counter if counted else None,
-            features=self.spec.prefetch.features, plan=self.placement)
+            features=self.spec.prefetch.features, plan=self.placement,
+            store=self.feature_store)
 
     def make_infer_prepare_consume(self, forward_fn, *,
                                    counted: bool = False):

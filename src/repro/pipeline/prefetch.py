@@ -82,6 +82,15 @@ class PreparedBatch:
         "feature_utilized_bytes": f32}`` (the valid-payload counterpart of
         the ``RoundCounter``'s capacity accounting; feature bytes are
         filled in the consume half when the fetch was not prefetched).
+    staged : jnp.ndarray | None
+        (src_capacity, D) host pre-gathered feature rows from a
+        ``FeatureStager`` ring (``external_rows`` stores only).  These
+        deliberately do NOT pass through the prepare program: a
+        large array that merely crosses a jit boundary is copied at the
+        boundary (~tens of ms for (P, N, D) on CPU), so the executor
+        attaches the rows to the batch *outside* the traced prepare and
+        the consume half fetches from them directly — the buffer enters
+        exactly one program, as a zero-copy input.
 
     Examples
     --------
@@ -95,10 +104,11 @@ class PreparedBatch:
     seed_valid: jnp.ndarray
     hits: jnp.ndarray
     comm: Any = None
+    staged: Any = None
 
     def tree_flatten(self):
         return (self.mfgs, self.h_src, self.seed_labels, self.seed_valid,
-                self.hits, self.comm), None
+                self.hits, self.comm, self.staged), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -118,7 +128,8 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
                          counter: dist.RoundCounter | None = None,
                          vanilla_fused: bool | None = None,
                          features: bool = True,
-                         plan=None):
+                         plan=None,
+                         store=None):
     """Build the per-worker *prepare* / *consume* halves of the step program.
 
     This is the prefetch boundary: ``consume(params, shard,
@@ -142,11 +153,24 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
     plan : repro.core.placement.PlacementPlan, optional
         Pre-built placement plan (takes precedence over ``scheme`` /
         ``graph_replicated``).
+    store : repro.core.feature_store.FeatureStore, optional
+        How frontier feature rows are served (``None`` = the default
+        ``"exchange"`` store, bit-identical to the historical
+        ``dist.fetch_features`` path).  Stores with ``external_rows``
+        (the ``"staged"`` store) move the fetch into the *consume* half:
+        the executor attaches the ``FeatureStager``-produced rows to
+        ``PreparedBatch.staged`` outside the traced prepare (see the
+        ``PreparedBatch.staged`` docs for why), and ``consume`` serves
+        ``h_src`` from them.  ``prepare`` still accepts the rows as its
+        fifth argument for callers that want the attach inside the
+        traced program (the shard_map fused step, whose donated FIFO
+        rotates the buffer in place).
 
     Returns
     -------
     (prepare, consume)
-        ``prepare(shard, seeds, salt, cache) -> PreparedBatch`` and
+        ``prepare(shard, seeds, salt, cache=None, staged=None) ->
+        PreparedBatch`` and
         ``consume(params, shard, batch, cache) -> (loss, grads, metrics)``.
         Both must run under the named worker axis ``dist.AXIS`` (vmap or
         shard_map); ``cache`` is ``None`` when no feature cache is attached.
@@ -163,45 +187,71 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
         level_fn = resolve_backend(backend)
     if vanilla_fused is None:
         vanilla_fused = backend is not None and backend != "unfused"
+    if store is None:
+        from repro.core.feature_store import ExchangeStore
+        store = ExchangeStore()
+    if store.external_rows and not features:
+        raise ValueError(
+            f"feature store {store.name!r} serves the feature stage from "
+            f"staged rows; it cannot run with features=False")
 
     row_bytes_of = lambda feats: 4.0 + feats.shape[1] * feats.dtype.itemsize
 
-    def _fetch(src, shard, cache):
-        if cache is not None:
-            return dist.fetch_features_cached(
-                src, offsets, num_parts, shard.features, cache, counter)
-        h = dist.fetch_features(src, offsets, num_parts, shard.features,
-                                counter)
-        return h, jnp.zeros((), jnp.int32)
+    def _fetch(src, shard, cache, staged=None):
+        return store.fetch(src, shard, cache, offsets=offsets,
+                           num_parts=num_parts, counter=counter,
+                           staged_rows=staged)
 
     def _feature_bytes(src, hits, shard):
         # utilized feature volume: ids out + rows back for every valid
-        # source node that missed the cache
-        misses = (jnp.sum((src >= 0).astype(jnp.float32))
-                  - hits.astype(jnp.float32))
-        return misses * row_bytes_of(shard.features)
+        # source node served over the exchange (stores that bypass the
+        # all_to_all — pinned hits, staged rows — report 0 for the part
+        # they serve locally)
+        return store.utilized_bytes(src, hits,
+                                    row_bytes_of(shard.features))
 
-    def prepare(shard: dist.WorkerShard, seeds, salt, cache=None):
+    # overflow observability: the fused level backend counts frontier
+    # nodes whose degree exceeded its neighbor window; backends that
+    # support it append the per-level traced count to a sink list so the
+    # step surfaces total truncation instead of discarding it
+    sink_backend = getattr(level_fn, "supports_overflow_sink", False)
+
+    def prepare(shard: dist.WorkerShard, seeds, salt, cache=None,
+                staged=None):
+        sink: list = []
+        lf = level_fn
+        if sink_backend:
+            def lf(graph, frontier, fanout, level_salt):
+                return level_fn(graph, frontier, fanout, level_salt,
+                                overflow_sink=sink)
         mfgs, samp_bytes = plan.sample(shard, seeds, fanouts, salt,
-                                       level_fn=level_fn,
+                                       level_fn=lf,
                                        fused=vanilla_fused,
                                        counter=counter)
+        overflow = jnp.zeros((), jnp.int32)
+        for o in sink:
+            overflow = overflow + o.astype(jnp.int32)
         me = lax.axis_index(dist.AXIS)
         local_seed = jnp.clip(seeds - offsets[me], 0,
                               shard.labels.shape[0] - 1)
         seed_labels = shard.labels[local_seed]
         seed_valid = seeds >= 0
-        if features:
+        if features and not store.external_rows:
             h_src, hits = _fetch(mfgs[-1].src_nodes, shard, cache)
             feat_bytes = _feature_bytes(mfgs[-1].src_nodes, hits, shard)
         else:
+            # external_rows stores fetch in the consume half, where the
+            # staged rows enter the program directly (threading them
+            # through prepare would copy the whole (N, D) buffer at the
+            # prepare -> consume jit boundary)
             h_src, hits = None, jnp.zeros((), jnp.int32)
             feat_bytes = jnp.zeros((), jnp.float32)
         comm = {"sampling_utilized_bytes": samp_bytes,
-                "feature_utilized_bytes": feat_bytes}
+                "feature_utilized_bytes": feat_bytes,
+                "sampler_window_overflow": overflow}
         return PreparedBatch(mfgs=tuple(mfgs), h_src=h_src,
                              seed_labels=seed_labels, seed_valid=seed_valid,
-                             hits=hits, comm=comm)
+                             hits=hits, comm=comm, staged=staged)
 
     def consume(params, shard: dist.WorkerShard, batch: PreparedBatch,
                 cache=None):
@@ -210,7 +260,8 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
         if batch.h_src is not None:
             h_src, hits = batch.h_src, batch.hits
         else:
-            h_src, hits = _fetch(mfgs[-1].src_nodes, shard, cache)
+            h_src, hits = _fetch(mfgs[-1].src_nodes, shard, cache,
+                                 batch.staged)
             comm["feature_utilized_bytes"] = _feature_bytes(
                 mfgs[-1].src_nodes, hits, shard)
 
@@ -234,6 +285,11 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
                 comm["sampling_utilized_bytes"]),
             "feature_utilized_bytes": dist.psum_ordered(
                 comm["feature_utilized_bytes"]),
+            # total frontier slots truncated by the fused kernel's
+            # neighbor window this step (0 for backends without windows)
+            "sampler_window_overflow": dist.psum_ordered(
+                comm.get("sampler_window_overflow",
+                         jnp.zeros((), jnp.int32)).astype(jnp.float32)),
         }
         return loss, grads, metrics
 
@@ -373,6 +429,9 @@ class SyncDriver:
         self.stager, self._owns_stager = make_stager(
             staging, self.stream, depth=0, spec=pipeline.spec,
             executor=executor, pipeline=pipeline)
+        # see DoubleBufferDriver: a recycling stager's buffer reuse is
+        # only sound with per-step materialization
+        self._fence = getattr(self.stager, "recycles_buffers", False)
         self._next = 0
 
     def _seeds_salt(self, k: int):
@@ -389,6 +448,8 @@ class SyncDriver:
         seeds, salt = self._seeds_salt(k)
         out = self._fn(params, opt_state, seeds, salt)
         self._next = k + 1
+        if self._fence:
+            jax.block_until_ready(out[2])
         return out
 
     def reset(self) -> None:
@@ -458,6 +519,12 @@ class DoubleBufferDriver:
         self.stager, self._owns_stager = make_stager(
             staging, self.stream, depth=self.depth, spec=spec,
             executor=executor, pipeline=pipeline)
+        # a recycling stager (FeatureStager) reuses the row buffers it
+        # handed out a few steps ago; materializing each step's loss
+        # before returning bounds how long device reads stay in flight,
+        # which is what makes that reuse sound (its docstring has the
+        # pool-distance argument)
+        self._fence = getattr(self.stager, "recycles_buffers", False)
         self._queue = None
         self._next = 0
 
@@ -487,6 +554,8 @@ class DoubleBufferDriver:
             params, opt_state, self._queue,
             *self._seeds_salt(k + self.depth))
         self._next = k + 1
+        if self._fence:
+            jax.block_until_ready(loss)
         return params, opt_state, loss, metrics
 
     def reset(self) -> None:

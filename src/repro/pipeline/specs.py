@@ -53,6 +53,16 @@ class PlanSpec:
                     in-degree) or "frequency" (top-K by observed access
                     frequency over a short trace of the actual sampler
                     hash stream).
+    feature_store:  feature-store registry name
+                    (``repro.core.feature_store``): "exchange" (the
+                    two-round all_to_all fetch, the default),
+                    "pinned_hot" (the cache's hot rows pinned in device
+                    memory, served by the Pallas row gather — requires
+                    ``cache_capacity > 0``), or "staged" (cold rows
+                    pre-gathered on the host and streamed ahead of the
+                    step by a ``FeatureStager`` — requires prefetch
+                    depth >= 1).  Like the scheme, a registry axis: all
+                    stores serve bit-identical rows.
     node_slack / labeled_slack: partitioner balance targets (labeled_slack
                     defaults to node_slack when None).
     """
@@ -64,6 +74,7 @@ class PlanSpec:
     partition_seed: int = 0
     cache_policy: str = "degree"
     replicate_frac: float | None = None
+    feature_store: str = "exchange"
 
     def __post_init__(self):
         from repro.core.cache import available_cache_policies
@@ -98,6 +109,18 @@ class PlanSpec:
             raise ValueError(
                 f"unknown cache policy {self.cache_policy!r}; valid: "
                 f"{available_cache_policies()}")
+        from repro.core.feature_store import (available_feature_stores,
+                                              resolve_feature_store)
+        if self.feature_store not in available_feature_stores():
+            raise ValueError(
+                f"unknown feature store {self.feature_store!r}; valid: "
+                f"{available_feature_stores()}")
+        if resolve_feature_store(self.feature_store).needs_cache \
+                and self.cache_capacity == 0:
+            raise ValueError(
+                f"feature store {self.feature_store!r} serves hits from "
+                f"the pinned device cache; set cache_capacity > 0 (and a "
+                f"cache_policy) or use the 'exchange' store")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -248,6 +271,22 @@ class PipelineSpec:
     prefetch: PrefetchSpec = dataclasses.field(default_factory=PrefetchSpec)
     data: DataSpec | None = None
 
+    def __post_init__(self):
+        from repro.core.feature_store import resolve_feature_store
+        store = resolve_feature_store(self.plan.feature_store)
+        if store.external_rows:
+            if self.prefetch.depth < 1:
+                raise ValueError(
+                    f"feature store {self.plan.feature_store!r} streams "
+                    f"rows ahead of the step through the prefetch ring; "
+                    f"it needs PrefetchSpec(depth >= 1), got depth="
+                    f"{self.prefetch.depth}")
+            if not self.prefetch.features:
+                raise ValueError(
+                    f"feature store {self.plan.feature_store!r} needs the "
+                    f"feature stage inside the prefetched prepare half "
+                    f"(PrefetchSpec(features=True))")
+
     @property
     def expected_rounds(self) -> int:
         """Structural (trace-time) round count from the placement scheme's
@@ -273,6 +312,7 @@ class PipelineSpec:
                     staging: bool = False,
                     staging_lead: int = 1,
                     cache_policy: str = "degree",
+                    feature_store: str = "exchange",
                     data: DataSpec | None = None) -> "PipelineSpec":
         """Parse a legacy scheme string — or any registered placement-scheme
         name — into a spec.
@@ -291,6 +331,9 @@ class PipelineSpec:
         default ``PrefetchSpec`` (0 = synchronous); ``staging`` turns on
         host-side async seed staging (``repro.pipeline.staging``) with
         ``staging_lead`` ring slots beyond the prefetch depth.
+        ``feature_store`` selects the feature-serving strategy
+        (``repro.core.feature_store`` registry: exchange | pinned_hot |
+        staged).
         """
         from repro.core.placement import available_schemes, parse_scheme_name
 
@@ -312,7 +355,8 @@ class PipelineSpec:
             plan=PlanSpec(num_parts=num_parts, scheme=placement,
                           cache_capacity=cache_capacity,
                           cache_policy=cache_policy,
-                          partition_seed=partition_seed),
+                          partition_seed=partition_seed,
+                          feature_store=feature_store),
             sampler=SamplerSpec(fanouts=tuple(fanouts), backend=backend),
             executor=executor,
             prefetch=PrefetchSpec(depth=prefetch_depth, staging=staging,

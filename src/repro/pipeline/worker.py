@@ -42,7 +42,8 @@ def make_worker_step(*, offsets: jnp.ndarray, num_parts: int,
                      counter: dist.RoundCounter | None = None,
                      use_cache: bool = False,
                      vanilla_fused: bool | None = None,
-                     plan=None):
+                     plan=None,
+                     store=None):
     """Build the per-worker program for any (scheme, backend, cache) combo.
 
     loss_fn(params, mfgs, h_src, seed_labels, seed_valid) -> scalar loss.
@@ -66,12 +67,25 @@ def make_worker_step(*, offsets: jnp.ndarray, num_parts: int,
     plan:    a ``repro.core.placement.PlacementPlan`` — takes precedence
              over ``scheme`` / ``graph_replicated`` (the pipeline passes
              the plan it built).
+    store:   a ``repro.core.feature_store.FeatureStore`` serving the
+             frontier's rows (``None`` = the default exchange store).
+             Stores that stage rows externally (``"staged"``) cannot run
+             in this fused synchronous program — their rows ride the
+             prefetch ring, so they need a prefetch driver.
     """
+    if store is not None and getattr(store, "external_rows", False):
+        raise ValueError(
+            f"feature store {store.name!r} streams rows through the "
+            f"prefetch ring and cannot run in the fused synchronous "
+            f"step; drive it with prefetch depth >= 1 "
+            f"(PrefetchSpec(depth=1) / train_driver on a spec with "
+            f"prefetch).")
     prepare, consume = make_prepare_consume(
         offsets=offsets, num_parts=num_parts, fanouts=fanouts,
         loss_fn=loss_fn, scheme=scheme, graph_replicated=graph_replicated,
         backend=backend, level_fn=level_fn, counter=counter,
-        vanilla_fused=vanilla_fused, features=True, plan=plan)
+        vanilla_fused=vanilla_fused, features=True, plan=plan,
+        store=store)
 
     def _body(params, shard: dist.WorkerShard, seeds, salt, cache):
         batch = prepare(shard, seeds, salt, cache)

@@ -145,3 +145,94 @@ def test_feature_fetch_correctness(world):
                 np.testing.assert_allclose(
                     got[p, j], feats[owner, gid - offsets[owner]],
                     rtol=1e-6)
+
+
+def test_feature_fetch_all_padded_ids(world):
+    """A frontier of nothing but -1 padding yields all-zero rows (no
+    garbage reads through the clipped local index)."""
+    ds, layout, shards, cfg, params = world
+    ids = jnp.full((P_, 16), -1, jnp.int32)
+
+    def worker(shard, ids_):
+        return dist.fetch_features(ids_, layout.offsets, P_,
+                                   shard.features, None)
+
+    got = np.asarray(jax.vmap(worker, axis_name=dist.AXIS)(shards, ids))
+    np.testing.assert_array_equal(got, 0)
+
+
+def test_feature_fetch_out_of_range_local_indices_masked(world):
+    """Global ids past the table (owner = last part, local index beyond
+    its shard) must come back as zero rows, not clamped-row garbage —
+    the ``(local < n_local)`` mask in ``fetch_features``."""
+    ds, layout, shards, cfg, params = world
+    n = ds.graph.num_nodes
+    bad = np.array([n, n + 1, n + 500], np.int32)
+    good = np.array([0, 7, n - 1], np.int32)
+    ids = np.tile(np.concatenate([bad, good]), (P_, 1)).astype(np.int32)
+
+    def worker(shard, ids_):
+        return dist.fetch_features(ids_, layout.offsets, P_,
+                                   shard.features, None)
+
+    got = np.asarray(jax.vmap(worker, axis_name=dist.AXIS)(
+        shards, jnp.asarray(ids)))
+    offsets = np.asarray(layout.offsets)
+    feats = np.asarray(layout.features)
+    for p in range(P_):
+        for j in range(3):
+            np.testing.assert_array_equal(got[p, j], 0)
+        for j, g in enumerate(good, start=3):
+            owner = np.searchsorted(offsets, g, side="right") - 1
+            np.testing.assert_array_equal(got[p, j],
+                                          feats[owner, g - offsets[owner]])
+
+
+FETCH_EDGE_SHARD_MAP_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import numpy as np, jax, jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core import dist
+from repro.core.partition import (build_layout, build_vanilla,
+                                  partition_graph)
+from repro.data.synthetic_graph import make_power_law_graph
+
+NP_ = 2
+ds = make_power_law_graph(600, 6, num_features=8, num_classes=4, seed=0)
+assign = partition_graph(ds.graph, NP_, ds.labeled_mask, seed=0)
+layout = build_layout(ds.graph, ds.features, ds.labels, assign, NP_)
+vplan = build_vanilla(layout)
+shards = dist.WorkerShard(features=layout.features, labels=layout.labels,
+                          local_indptr=vplan.local_indptr,
+                          local_indices=vplan.local_indices)
+n = ds.graph.num_nodes
+ids = np.tile(np.array([-1, n, n + 9, 0, 5, n - 1], np.int32), (NP_, 1))
+
+mesh = Mesh(np.array(jax.devices()[:NP_]), (dist.AXIS,))
+def worker(shard, ids_):
+    return dist.fetch_features(ids_[0], layout.offsets, NP_,
+                               jax.tree.map(lambda x: x[0], shard).features,
+                               None)[None]
+got = shard_map(worker, mesh=mesh,
+                in_specs=(P(dist.AXIS), P(dist.AXIS)),
+                out_specs=P(dist.AXIS))(shards, jnp.asarray(ids))
+got = np.asarray(got)
+offsets = np.asarray(layout.offsets)
+feats = np.asarray(layout.features)
+for p in range(NP_):
+    for j in range(3):
+        np.testing.assert_array_equal(got[p, j], 0)
+    for j, g in enumerate([0, 5, n - 1], start=3):
+        owner = np.searchsorted(offsets, g, side="right") - 1
+        np.testing.assert_array_equal(got[p, j],
+                                      feats[owner, g - offsets[owner]])
+print("FETCH_EDGE_SHARD_MAP_OK")
+"""
+
+
+def test_feature_fetch_edge_cases_shard_map_subprocess(subproc):
+    """The same -1 / out-of-range masking holds under shard_map."""
+    subproc.run_code(FETCH_EDGE_SHARD_MAP_SCRIPT,
+                     expect="FETCH_EDGE_SHARD_MAP_OK")

@@ -1,0 +1,406 @@
+"""Pluggable ``FeatureStore`` (repro.core.feature_store): registry and
+spec validation, bit-equivalence of the ``exchange`` / ``pinned_hot`` /
+``staged`` stores across placement schemes on both executors, the
+``FeatureStager`` host ring, and the ``sampler_window_overflow`` metric.
+
+Store equivalence is asserted *within* each executor (vmap stores vs the
+vmap exchange baseline, shard_map stores vs the shard_map exchange
+baseline): the two executors compile separately and may differ by a ULP
+in the loss even on the plain exchange path, but every store must replay
+its executor's exchange rows bit-for-bit.
+"""
+import textwrap
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core.feature_store import (ExchangeStore, PinnedHotStore,
+                                      StagedStore)
+from repro.core.partition import build_layout, partition_graph
+from repro.data.synthetic_graph import make_power_law_graph
+from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+from repro.optim import init_opt_state
+from repro.pipeline import (FeatureStager, Pipeline, PipelineSpec,
+                            PlanSpec, PrefetchSpec, SamplerSpec,
+                            SeedStager, available_feature_stores,
+                            resolve_feature_store)
+from repro.pipeline.staging import make_stager
+from repro.pipeline.worker import make_worker_step
+
+P_ = 4
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = make_power_law_graph(1200, 6, num_features=8, num_classes=4,
+                              seed=0)
+    assign = partition_graph(ds.graph, P_, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P_)
+    cfg = GNNConfig(in_dim=8, hidden_dim=8, num_classes=4, num_layers=2,
+                    fanouts=(3, 3), dropout=0.0)
+    params = init_gnn_params(jax.random.key(1), cfg)
+    return ds, layout, cfg, params
+
+
+def _spec(scheme="hybrid", cache=0, depth=1, store="exchange",
+          backend="reference", fanouts=(3, 3)):
+    return PipelineSpec(
+        plan=PlanSpec(num_parts=P_, scheme=scheme, cache_capacity=cache,
+                      feature_store=store),
+        sampler=SamplerSpec(fanouts=fanouts, backend=backend),
+        prefetch=PrefetchSpec(depth=depth))
+
+
+def _loss_fn(cfg):
+    def loss_fn(p, mfgs, h_src, labels, valid):
+        return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
+    return loss_fn
+
+
+def _run(layout, cfg, params, spec, steps=3, batch=8):
+    pipe = Pipeline.from_layout(layout, spec)
+    driver = pipe.train_driver(_loss_fn(cfg), batch=batch, lr=0.01)
+    p, opt = params, init_opt_state(params, kind="adamw")
+    losses = []
+    for k in range(steps):
+        p, opt, loss, metrics = driver.step(p, opt, k)
+        losses.append(float(loss))
+    driver.close()
+    return losses, p, metrics
+
+
+def _assert_trees_equal(a, b, msg=""):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=msg)
+
+
+# --------------------------------------------------------------------------
+# registry + spec validation
+# --------------------------------------------------------------------------
+
+def test_store_registry():
+    assert {"exchange", "pinned_hot", "staged"} \
+        <= set(available_feature_stores())
+    assert isinstance(resolve_feature_store("exchange"), ExchangeStore)
+    assert isinstance(resolve_feature_store("pinned_hot"), PinnedHotStore)
+    assert isinstance(resolve_feature_store("staged"), StagedStore)
+    with pytest.raises(KeyError, match="carrier-pigeon"):
+        resolve_feature_store("carrier-pigeon")
+
+
+def test_store_contract_flags():
+    assert ExchangeStore.uses_exchange and not ExchangeStore.needs_cache
+    assert PinnedHotStore.needs_cache and PinnedHotStore.uses_exchange
+    assert StagedStore.external_rows and not StagedStore.uses_exchange
+
+
+def test_plan_spec_rejects_unknown_store():
+    with pytest.raises(ValueError, match="unknown feature store"):
+        PlanSpec(num_parts=P_, feature_store="bogus")
+
+
+def test_plan_spec_pinned_hot_needs_cache():
+    with pytest.raises(ValueError, match="cache_capacity"):
+        PlanSpec(num_parts=P_, feature_store="pinned_hot")
+    # with a cache it constructs fine
+    PlanSpec(num_parts=P_, feature_store="pinned_hot", cache_capacity=32)
+
+
+def test_pipeline_spec_staged_needs_prefetch():
+    with pytest.raises(ValueError, match="depth >= 1"):
+        PipelineSpec(plan=PlanSpec(num_parts=P_, feature_store="staged"),
+                     sampler=SamplerSpec(fanouts=(3, 3)))
+    with pytest.raises(ValueError, match="features"):
+        PipelineSpec(plan=PlanSpec(num_parts=P_, feature_store="staged"),
+                     sampler=SamplerSpec(fanouts=(3, 3)),
+                     prefetch=PrefetchSpec(depth=1, features=False))
+
+
+def test_worker_step_rejects_external_rows_store(world):
+    ds, layout, cfg, params = world
+    with pytest.raises(ValueError, match="prefetch"):
+        make_worker_step(offsets=layout.offsets, num_parts=P_,
+                         fanouts=(3, 3), loss_fn=_loss_fn(cfg),
+                         graph_replicated=layout.graph,
+                         store=StagedStore())
+
+
+def test_build_rejects_cache_with_local_parts(world):
+    """Satellite: a rank-local build cannot copy remote hot rows into a
+    cache — ``Pipeline.build`` refuses up front instead of crashing in
+    the cache policy."""
+    ds, layout, cfg, params = world
+    spec = PipelineSpec(
+        plan=PlanSpec(num_parts=P_, scheme="hybrid", cache_capacity=32),
+        sampler=SamplerSpec(fanouts=(3, 3)))
+    with pytest.raises(ValueError, match="rank-local"):
+        Pipeline.build(ds.graph, ds.features, ds.labels, spec,
+                       local_parts=(0, 2))
+
+
+def test_staged_store_rejects_local_parts(world):
+    """The staged store's host gather walks the full feature table."""
+    ds, layout, cfg, params = world
+    spec = _spec(store="staged")
+    with pytest.raises(ValueError, match="local_parts|rank-local"):
+        Pipeline.build(ds.graph, ds.features, ds.labels, spec,
+                       local_parts=(0, 2))
+
+
+# --------------------------------------------------------------------------
+# bit-equivalence: every store replays the exchange rows (vmap executor)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ["hybrid", "vanilla",
+                                    "hybrid_partial(0.25)"])
+def test_stores_bit_identical_vmap(world, scheme):
+    """pinned_hot and staged losses/params == the exchange baseline on
+    the same executor, scheme by scheme."""
+    ds, layout, cfg, params = world
+    base = _run(layout, cfg, params, _spec(scheme=scheme, cache=64))
+    for store, cache in [("pinned_hot", 64), ("staged", 0),
+                         ("staged", 64)]:
+        got = _run(layout, cfg, params,
+                   _spec(scheme=scheme, cache=cache, store=store))
+        if cache == 0:
+            ref = _run(layout, cfg, params,
+                       _spec(scheme=scheme, cache=0))
+            assert got[0] == ref[0], (store, scheme)
+            _assert_trees_equal(got[1], ref[1], f"{store}/{scheme}")
+        else:
+            assert got[0] == base[0], (store, scheme)
+            _assert_trees_equal(got[1], base[1], f"{store}/{scheme}")
+
+
+def test_staged_depth2_and_hit_rate(world):
+    """The staged ring composes with deeper prefetch, and the pinned
+    cache still reports its hit rate."""
+    ds, layout, cfg, params = world
+    base = _run(layout, cfg, params, _spec(cache=64, depth=1))
+    got = _run(layout, cfg, params,
+               _spec(cache=64, depth=2, store="staged"))
+    assert got[0] == base[0]
+    _assert_trees_equal(got[1], base[1])
+    assert float(got[2]["cache_hit_rate"]) > 0
+    # staged bypasses the exchange entirely -> no utilized feature bytes
+    assert float(got[2]["feature_utilized_bytes"]) == 0
+    assert float(base[2]["feature_utilized_bytes"]) > 0
+
+
+def test_pinned_hot_kernel_matches_oracle(world):
+    """PinnedHotStore(gather="kernel") (interpret-mode Pallas) produces
+    the same training trajectory as the jnp.take oracle path."""
+    ds, layout, cfg, params = world
+    outs = {}
+    for mode in ("jnp", "kernel"):
+        pipe_m = Pipeline.from_layout(layout, _spec(cache=64))
+        pipe_m.feature_store = PinnedHotStore(gather=mode)
+        driver = pipe_m.train_driver(_loss_fn(cfg), batch=8, lr=0.01)
+        p, opt = params, init_opt_state(params, kind="adamw")
+        losses = []
+        for k in range(2):
+            p, opt, loss, _ = driver.step(p, opt, k)
+            losses.append(float(loss))
+        driver.close()
+        outs[mode] = (losses, p)
+    assert outs["kernel"][0] == outs["jnp"][0]
+    _assert_trees_equal(outs["kernel"][1], outs["jnp"][1])
+
+
+def test_staged_combine_paths_bit_identical(world):
+    """StagedStore(combine="device") (hot rows via the pinned device
+    gather, cold-only staging) and combine="host" (hot rows staged with
+    the cold ones) produce the same trajectory — the pinned rows are
+    copies of the same feature table, so the combine is pure dataflow."""
+    with pytest.raises(ValueError, match="combine"):
+        StagedStore(combine="bogus")
+    assert StagedStore(combine="device").hot_rows_from_cache
+    assert not StagedStore(combine="host").hot_rows_from_cache
+
+    ds, layout, cfg, params = world
+    outs = {}
+    for mode in ("host", "device"):
+        pipe_m = Pipeline.from_layout(layout,
+                                      _spec(cache=64, store="staged"))
+        pipe_m.feature_store = StagedStore(gather="jnp", combine=mode)
+        driver = pipe_m.train_driver(_loss_fn(cfg), batch=8, lr=0.01)
+        p, opt = params, init_opt_state(params, kind="adamw")
+        losses = []
+        for k in range(3):
+            p, opt, loss, m = driver.step(p, opt, k)
+            losses.append(float(loss))
+        driver.close()
+        outs[mode] = (losses, p, m)
+    assert outs["device"][0] == outs["host"][0]
+    _assert_trees_equal(outs["device"][1], outs["host"][1])
+    # both report the same hit accounting
+    assert float(outs["device"][2]["cache_hit_rate"]) \
+        == float(outs["host"][2]["cache_hit_rate"]) > 0
+
+
+# --------------------------------------------------------------------------
+# FeatureStager ring
+# --------------------------------------------------------------------------
+
+def test_make_stager_builds_feature_stager_for_staged_store(world):
+    """The staged store forces a FeatureStager even when the staging
+    flag is off — its slots carry (seeds, salt, rows) triples."""
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec(store="staged"))
+    from repro.pipeline.executor import resolve_executor
+    from repro.pipeline.prefetch import SeedStream
+    ex = resolve_executor(pipe.spec.executor)
+    stream = SeedStream(pipe, batch=8)
+    stager, owned = make_stager(None, stream, depth=1, spec=pipe.spec,
+                                executor=ex, pipeline=pipe)
+    try:
+        assert isinstance(stager, FeatureStager) and owned
+        seeds, salt, rows = stager.get(0)
+        assert np.asarray(rows).shape[0] == P_
+        assert np.asarray(rows).ndim == 3
+    finally:
+        stager.close()
+
+
+def test_make_stager_rejects_adopted_seed_stager(world):
+    """A plain SeedStager cannot serve an external-rows store — its ring
+    carries no staged rows."""
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec(store="staged"))
+    from repro.pipeline.executor import resolve_executor
+    from repro.pipeline.prefetch import SeedStream
+    ex = resolve_executor(pipe.spec.executor)
+    stream = SeedStream(pipe, batch=8)
+    seed_stager = SeedStager(stream, depth=1)
+    try:
+        with pytest.raises(ValueError, match="FeatureStager"):
+            make_stager(seed_stager, stream, depth=1, spec=pipe.spec,
+                        executor=ex, pipeline=pipe)
+    finally:
+        seed_stager.close()
+
+
+def test_feature_stager_rows_match_device_fetch(world):
+    """The host pre-gather reproduces the exchange store's rows exactly
+    (valid slots) and zeroes the padded ones."""
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec(store="staged"))
+    from repro.pipeline.prefetch import SeedStream
+    stream = SeedStream(pipe, batch=8)
+    stager = FeatureStager(stream, pipeline=pipe, depth=1)
+    try:
+        seeds, salt, rows = stager.get(0)
+        rows = np.asarray(rows)
+    finally:
+        stager.close()
+
+    # replay the frontier on the host and gather directly
+    from repro.core.sampler import sample_mfgs
+    frontier = np.stack([
+        np.asarray(sample_mfgs(layout.graph, np.asarray(seeds)[p],
+                               (3, 3), np.asarray(salt))[-1].src_nodes)
+        for p in range(P_)])
+    offsets = np.asarray(layout.offsets)
+    feats = np.asarray(layout.features)
+    for p in range(P_):
+        for j, g in enumerate(frontier[p]):
+            if g < 0:
+                np.testing.assert_array_equal(rows[p, j], 0)
+            else:
+                own = np.searchsorted(offsets, g, side="right") - 1
+                np.testing.assert_array_equal(
+                    rows[p, j], feats[own, g - offsets[own]])
+
+
+# --------------------------------------------------------------------------
+# sampler_window_overflow metric (fused backend)
+# --------------------------------------------------------------------------
+
+def test_overflow_metric_zero_at_default_window(world):
+    ds, layout, cfg, params = world
+    losses, p, metrics = _run(
+        layout, cfg, params,
+        _spec(backend="fused_pallas", depth=0), steps=1)
+    assert float(metrics["sampler_window_overflow"]) == 0.0
+
+
+def test_overflow_metric_counts_truncated_seeds(world):
+    """With a tiny VMEM window high-degree frontier nodes overflow, and
+    the count surfaces in the step metrics instead of being discarded."""
+    from repro.core.sampler import register_backend
+    from repro.kernels.ops import fused_sample_level
+
+    def tiny_window_level(graph, seeds, fanout, salt, *,
+                          overflow_sink=None):
+        return fused_sample_level(graph, seeds, fanout, salt,
+                                  overflow_sink=overflow_sink, window=4)
+    tiny_window_level.supports_overflow_sink = True
+    register_backend("fused_tiny_window_test", tiny_window_level)
+
+    ds, layout, cfg, params = world
+    losses, p, metrics = _run(
+        layout, cfg, params,
+        _spec(backend="fused_tiny_window_test", depth=0), steps=1)
+    assert float(metrics["sampler_window_overflow"]) > 0
+
+
+# --------------------------------------------------------------------------
+# shard_map executor (subprocess: needs placeholder devices at jax init)
+# --------------------------------------------------------------------------
+
+SHARD_MAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np, jax
+    from repro.core.partition import build_layout, partition_graph
+    from repro.data.synthetic_graph import make_power_law_graph
+    from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+    from repro.optim import init_opt_state
+    from repro.pipeline import (Pipeline, PipelineSpec, PlanSpec,
+                                PrefetchSpec, SamplerSpec)
+
+    P = 2
+    ds = make_power_law_graph(800, 6, num_features=8, num_classes=4, seed=0)
+    assign = partition_graph(ds.graph, P, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
+    cfg = GNNConfig(in_dim=8, hidden_dim=8, num_classes=4, num_layers=2,
+                    fanouts=(3, 3), dropout=0.0)
+    def loss_fn(p, mfgs, h, y, v):
+        return gnn_loss(p, mfgs, h, y, v, cfg)
+
+    def run(store, cache):
+        spec = PipelineSpec(
+            plan=PlanSpec(num_parts=P, scheme="hybrid",
+                          cache_capacity=cache, feature_store=store),
+            sampler=SamplerSpec(fanouts=cfg.fanouts, backend="reference"),
+            executor="shard_map", prefetch=PrefetchSpec(depth=1))
+        pipe = Pipeline.from_layout(layout, spec)
+        driver = pipe.train_driver(loss_fn, batch=8, lr=0.01)
+        params = init_gnn_params(jax.random.key(0), cfg)
+        opt = init_opt_state(params, kind="adamw")
+        losses = []
+        for k in range(3):
+            params, opt, loss, m = driver.step(params, opt)
+            losses.append(float(loss))
+        driver.close()
+        return losses, params
+
+    # within-executor baselines: shard_map stores vs shard_map exchange
+    base0 = run("exchange", 0)
+    base64 = run("exchange", 64)
+    for store, cache, base in [("pinned_hot", 64, base64),
+                               ("staged", 0, base0),
+                               ("staged", 64, base64)]:
+        losses, params = run(store, cache)
+        assert losses == base[0], (store, cache, losses, base[0])
+        for a, b in zip(jax.tree.leaves(base[1]),
+                        jax.tree.leaves(params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("SHARD_MAP_STORES_OK")
+""")
+
+
+def test_stores_bit_identical_shard_map_subprocess(subproc):
+    subproc.run_code(SHARD_MAP_SCRIPT, expect="SHARD_MAP_STORES_OK")

@@ -155,3 +155,65 @@ def test_sage_aggregate_duplicate_edges_weighting():
     out = sage_aggregate(edges, h, tile_s=8, tile_n=8)
     expected = (2 * h[2] + h[0]) / 3
     np.testing.assert_allclose(np.asarray(out[0]), np.asarray(expected))
+
+
+# ---------------------------------------------------------------------------
+# gather_rows (double-buffered feature row gather, repro.kernels.gather)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.gather import gather_rows, gather_rows_reference
+
+
+@pytest.mark.parametrize("n_ids,rows,D,block", [
+    (32, 50, 8, 8), (10, 50, 8, 8),       # non-divisible N pads with -1
+    (8, 1, 3, 4), (64, 200, 16, 16),
+])
+def test_gather_rows_matches_oracle(n_ids, rows, D, block):
+    rng = np.random.default_rng(3)
+    table = rng.normal(0, 1, (rows, D)).astype(np.float32)
+    ids = rng.integers(0, rows, n_ids).astype(np.int32)
+    got = gather_rows(jnp.asarray(table), jnp.asarray(ids), block=block)
+    ref = gather_rows_reference(jnp.asarray(table), jnp.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(got), table[ids])
+
+
+def test_gather_rows_invalid_ids_zeroed():
+    """-1 padding and out-of-range ids produce zero rows, matching the
+    oracle (the DMA reads a clamped row, the mask kills it)."""
+    rng = np.random.default_rng(4)
+    table = rng.normal(0, 1, (37, 8)).astype(np.float32)
+    ids = np.array([0, -1, 36, 37, 1000, 5, -1, 2], np.int32)
+    got = np.asarray(gather_rows(jnp.asarray(table), jnp.asarray(ids)))
+    ref = np.asarray(gather_rows_reference(jnp.asarray(table),
+                                           jnp.asarray(ids)))
+    np.testing.assert_array_equal(got, ref)
+    for j, g in enumerate(ids):
+        if 0 <= g < 37:
+            np.testing.assert_array_equal(got[j], table[g])
+        else:
+            np.testing.assert_array_equal(got[j], 0)
+
+
+def test_gather_rows_all_invalid():
+    table = jnp.ones((5, 4), jnp.float32)
+    ids = jnp.full((9,), -1, jnp.int32)
+    got = gather_rows(table, ids)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((9, 4)))
+
+
+def test_fused_level_overflow_sink():
+    """Satellite: fused_sample_level reports window-truncated seeds
+    through ``overflow_sink`` instead of discarding the kernel's count."""
+    g = make_power_law_graph(400, 8, num_features=4, num_classes=3,
+                             seed=2).graph
+    deg = np.asarray(g.degrees())
+    window = 4
+    hubs = np.nonzero(deg > window)[0]
+    assert hubs.size > 0
+    seeds = jnp.asarray(hubs[:8].astype(np.int32))
+    sink = []
+    fused_sample_level(g, seeds, 3, jnp.uint32(1), overflow_sink=sink,
+                       window=window)
+    assert len(sink) == 1 and int(sink[0]) > 0
+    assert fused_sample_level.supports_overflow_sink

@@ -139,6 +139,30 @@ def test_stager_propagates_worker_errors():
     stager.close()
 
 
+def test_host_frontier_replay_matches_sampler(world):
+    """The stager's pure-numpy sampler replay is bit-identical to
+    ``sample_mfgs`` — the property cold-row feature staging rests on
+    (a single wrong frontier slot would stage the wrong row)."""
+    from repro.core.sampler import sample_mfgs
+    from repro.pipeline.staging import _frontier_src_nodes_host
+
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec(depth=1))
+    stream = SeedStream(pipe, batch=8)
+    indptr = np.asarray(layout.graph.indptr)
+    indices = np.asarray(layout.graph.indices)
+    for k in (0, 1, 7):
+        seeds = np.asarray(stream.seeds(k))
+        salt = int(np.asarray(stream.salt(k)))
+        for p in range(P_):
+            want = np.asarray(
+                sample_mfgs(layout.graph, seeds[p], cfg.fanouts,
+                            np.uint32(salt))[-1].src_nodes)
+            got = _frontier_src_nodes_host(indptr, indices, seeds[p],
+                                           cfg.fanouts, salt)
+            np.testing.assert_array_equal(got, want, err_msg=f"k={k} p={p}")
+
+
 # --------------------------------------------------------------------------
 # bit-equivalence: staging on == staging off (vmap executor)
 # --------------------------------------------------------------------------
