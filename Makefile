@@ -3,7 +3,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-multihost lint bench-smoke bench data-smoke dev-install \
-	docs-check
+	docs-check trace-smoke
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -25,10 +25,16 @@ docs-check:
 # placement-scheme and graph-source sweeps, which exercise every registry
 # dispatch path, + the staged-vs-unstaged seed-staging delta + the
 # feature-store sweep (exchange / pinned_hot / staged) + the
-# multi-process executor scaling sweep (real jax.distributed fleets)
+# multi-process executor scaling sweep (real jax.distributed fleets) +
+# the observability arms (tracing overhead + stage-share table)
 bench-smoke:
 	$(PYTHON) -m benchmarks.run cache schemes datasets staging \
-		feature_staging serve multihost
+		feature_staging serve multihost obs
+
+# traced-run smoke: 5 traced training steps (single-process and 2-rank
+# multiprocess) + Chrome trace-event schema validation + report render
+trace-smoke:
+	$(PYTHON) tools/trace_smoke.py
 
 # graph-source subsystem smoke: generate every synthetic family at toy
 # scale, round-trip save/load exactly, re-check determinism + streaming

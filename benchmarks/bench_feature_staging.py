@@ -46,7 +46,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import dataset_columns, emit
+from benchmarks.common import (dataset_columns, emit, stage_breakdown,
+                               time_driver)
 from repro.core import dist
 from repro.core.partition import build_layout, partition_graph
 from repro.data.synthetic_graph import make_power_law_graph
@@ -61,25 +62,6 @@ ARMS = (("exchange", 0), ("exchange", CAP), ("pinned_hot", CAP),
 EXECUTOR = "vmap"
 DEPTH = 1
 OUT_DIR = os.path.join("experiments", "feature_staging")
-
-
-def _time_driver(driver, params, opt, steps, repeats=4):
-    # warmup compiles every program and fills queue + staging ring
-    params, opt, loss, _ = driver.step(params, opt)
-    params, opt, loss, metrics = driver.step(params, opt)
-    jax.block_until_ready(loss)
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        for _ in range(steps):
-            params, opt, loss, metrics = driver.step(params, opt)
-            # materialize the loss each step, exactly like a real
-            # training loop does for logging — this is what exposes any
-            # host segment the staging ring fails to hide
-            float(loss)
-        times.append((time.perf_counter() - t0) / steps)
-    times.sort()
-    return times[len(times) // 2], metrics
 
 
 def _time_fetch(pipe, frontier, staged_rows, repeats=30):
@@ -136,11 +118,12 @@ def run(ds, P=4, batch=512, steps=6):
             feature_store=store)
         pipe = Pipeline.from_layout(layout, spec)
 
-        driver = pipe.train_driver(loss_fn, batch=batch, lr=6e-3)
         params = init_gnn_params(jax.random.key(0), cfg)
-        opt = init_opt_state(params, kind="adamw")
-        dt, metrics = _time_driver(driver, params, opt, steps)
-        driver.close()
+        with pipe.train_driver(loss_fn, batch=batch, lr=6e-3) as driver:
+            opt = init_opt_state(params, kind="adamw")
+            dt, metrics = time_driver(driver, params, opt, steps=steps)
+        breakdown = stage_breakdown(pipe, loss_fn, params, batch=batch,
+                                    arm=store)
 
         stream = SeedStream(pipe, batch=batch)
         seeds_np = np.asarray(stream.seeds(0))
@@ -178,6 +161,7 @@ def run(ds, P=4, batch=512, steps=6):
             "steps_per_s": 1.0 / dt, "speedup_vs_exchange": speedup,
             "fetch_wall_s": fetch_s,
             "cache_hit_rate": float(metrics.get("cache_hit_rate", 0.0)),
+            "stage_breakdown": breakdown,
             **ds_cols,
         }
         with open(os.path.join(

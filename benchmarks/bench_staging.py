@@ -20,11 +20,11 @@ carries executor/depth/staging labels, and one JSON record per
 """
 import json
 import os
-import time
 
 import jax
 
-from benchmarks.common import dataset_columns, emit
+from benchmarks.common import (dataset_columns, emit, stage_breakdown,
+                               time_driver)
 from repro.core.partition import build_layout, partition_graph
 from repro.data.synthetic_graph import make_power_law_graph
 from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
@@ -36,28 +36,6 @@ DEPTHS = (0, 1, 2)
 EXECUTOR = "vmap"
 LEAD = 2
 OUT_DIR = os.path.join("experiments", "staging")
-
-
-def _time_driver(driver, params, opt, steps, repeats=4):
-    # warmup compiles every program and fills queue + staging ring
-    params, opt, loss, _ = driver.step(params, opt)
-    params, opt, loss, _ = driver.step(params, opt)
-    jax.block_until_ready(loss)
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        for _ in range(steps):
-            params, opt, loss, _ = driver.step(params, opt)
-            # materialize the loss each step, exactly like a real training
-            # loop (GNNTrainer.run_epoch / train_gnn) does for logging.
-            # This per-step host block is what exposes the unstaged seed
-            # argsort: in a free-running loop JAX's async dispatch would
-            # hide it behind queued device work and there would be
-            # nothing left to measure.
-            float(loss)
-        times.append((time.perf_counter() - t0) / steps)
-    times.sort()
-    return times[len(times) // 2]
 
 
 def run(ds, P=4, batch=128, steps=6):
@@ -72,6 +50,7 @@ def run(ds, P=4, batch=128, steps=6):
         return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
 
     os.makedirs(OUT_DIR, exist_ok=True)
+    breakdowns = {}   # per-stage share is depth-independent: one/scheme
     for scheme in SCHEMES:
         for depth in DEPTHS:
             spec = PipelineSpec.from_scheme(
@@ -79,14 +58,18 @@ def run(ds, P=4, batch=128, steps=6):
                 executor=EXECUTOR, fused_backend="reference",
                 prefetch_depth=depth, staging_lead=LEAD)
             pipe = Pipeline.from_layout(layout, spec)
+            if scheme not in breakdowns:
+                breakdowns[scheme] = stage_breakdown(
+                    pipe, loss_fn, init_gnn_params(jax.random.key(0), cfg),
+                    batch=batch, arm=scheme)
             dt = {}
             for staging in (False, True):
-                driver = pipe.train_driver(loss_fn, batch=batch, lr=6e-3,
-                                           staging=staging)
-                params = init_gnn_params(jax.random.key(0), cfg)
-                opt = init_opt_state(params, kind="adamw")
-                dt[staging] = _time_driver(driver, params, opt, steps)
-                driver.close()
+                with pipe.train_driver(loss_fn, batch=batch, lr=6e-3,
+                                       staging=staging) as driver:
+                    params = init_gnn_params(jax.random.key(0), cfg)
+                    opt = init_opt_state(params, kind="adamw")
+                    dt[staging], _ = time_driver(driver, params, opt,
+                                                 steps=steps)
                 tag = "on" if staging else "off"
                 emit(f"staging/P{P}/{scheme}/depth{depth}/{tag}/steps_per_s",
                      1.0 / dt[staging],
@@ -101,6 +84,7 @@ def run(ds, P=4, batch=128, steps=6):
                 "steps_per_s_unstaged": 1.0 / dt[False],
                 "steps_per_s_staged": 1.0 / dt[True],
                 "staging_speedup": speedup,
+                "stage_breakdown": breakdowns[scheme],
                 **ds_cols,
             }
             with open(os.path.join(

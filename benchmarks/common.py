@@ -1,9 +1,15 @@
 """Shared benchmark utilities: timing, CSV emission, and the dataset
 columns (name, n, nnz, max/mean degree, skew) every JSON record carries
-so trajectories are comparable across graph-source families."""
-import time
+so trajectories are comparable across graph-source families.
 
+Timing delegates to ``repro.obs.metrics`` — the same median-wall and
+driver-loop timers the observability subsystem uses — so benchmark
+numbers and traced/monitored numbers come from one implementation.
+"""
 import jax
+
+from repro.obs.metrics import median_wall
+from repro.obs.metrics import time_driver  # noqa: F401  (bench_* import)
 
 
 def dataset_columns(ds) -> dict:
@@ -26,15 +32,25 @@ def dataset_label(ds) -> str:
 
 def timeit(fn, *args, warmup=2, iters=5):
     """Median wall-time of a jitted callable (block_until_ready)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+    return median_wall(lambda: fn(*args), warmup=warmup, iters=iters,
+                       sync=jax.block_until_ready)
+
+
+def stage_breakdown(pipe, loss_fn, params, *, batch, arm,
+                    steps=3) -> dict | None:
+    """Per-stage share column for bench JSON records: the fenced
+    sampling/feature/compute split from ``repro.obs.profile``, or None
+    for stores the stage profiler cannot decompose (the ``staged``
+    store's feature rows come from a host ring, not an in-program
+    stage)."""
+    from repro.obs.profile import profile_stages
+
+    if pipe.feature_store is not None \
+            and getattr(pipe.feature_store, "external_rows", False):
+        return None
+    prof = profile_stages(pipe, loss_fn, params, batch=batch,
+                          steps=steps, arm=arm)
+    return {k: round(v, 4) for k, v in prof["share"].items()}
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -73,6 +73,20 @@ def dataset_cols_label(r):
             f"skew={r.get('degree_skew', '-')})")
 
 
+def breakdown_label(r):
+    """Compact per-stage share cell ("samp/feat/comp %") from the
+    ``stage_breakdown`` column (``benchmarks.common.stage_breakdown``,
+    the fenced ``repro.obs.profile`` split).  Old records predate the
+    column, and arms the profiler cannot decompose (the ``staged``
+    store) carry None — both show "-"."""
+    b = r.get("stage_breakdown")
+    if not b:
+        return "-"
+    return (f"{100.0 * b.get('sampling', 0.0):.0f}/"
+            f"{100.0 * b.get('feature', 0.0):.0f}/"
+            f"{100.0 * b.get('compute', 0.0):.0f}%")
+
+
 def schemes_table(recs):
     """Placement-scheme interpolation table (bench_schemes records):
     traced rounds (sampling + feature), the data-dependent expected-round
@@ -105,8 +119,9 @@ def staging_table(recs):
     the staging thread off vs on per (scheme, prefetch depth) — the
     staged-vs-unstaged delta in the perf trajectory."""
     rows = ["| scheme | executor | depth | lead | steps/s unstaged "
-            "| steps/s staged | staging speedup | dataset |",
-            "|---|---|---|---|---|---|---|---|"]
+            "| steps/s staged | staging speedup | samp/feat/comp "
+            "| dataset |",
+            "|---|---|---|---|---|---|---|---|---|"]
     for r in recs:
         if r.get("workload") != "staging-sweep":
             continue
@@ -116,6 +131,7 @@ def staging_table(recs):
             f"| {r['steps_per_s_unstaged']:.2f} "
             f"| {r['steps_per_s_staged']:.2f} "
             f"| {r['staging_speedup']:.2f}x "
+            f"| {breakdown_label(r)} "
             f"| {dataset_cols_label(r)} |")
     return "\n".join(rows)
 
@@ -126,8 +142,9 @@ def feature_staging_table(recs):
     wall time per (store, cache) arm — where the step's feature rows are
     served from and what that costs."""
     rows = ["| store | cache | executor | depth | steps/s "
-            "| speedup vs exchange | fetch ms | hit rate | dataset |",
-            "|---|---|---|---|---|---|---|---|---|"]
+            "| speedup vs exchange | fetch ms | hit rate "
+            "| samp/feat/comp | dataset |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
     for r in recs:
         if r.get("workload") != "feature-staging-sweep":
             continue
@@ -138,6 +155,7 @@ def feature_staging_table(recs):
             f"| {r['speedup_vs_exchange']:.2f}x "
             f"| {1e3 * r['fetch_wall_s']:.1f} "
             f"| {100.0 * r['cache_hit_rate']:.1f}% "
+            f"| {breakdown_label(r)} "
             f"| {dataset_cols_label(r)} |")
     return "\n".join(rows)
 
@@ -158,6 +176,36 @@ def multihost_table(recs):
             f"| {r.get('local_devices', '-')} | {r['workers']} "
             f"| {r['batch']} | {r['steps_per_s']:.2f} "
             f"| {dataset_cols_label(r)} |")
+    return "\n".join(rows)
+
+
+def obs_table(recs):
+    """Observability tables (bench_obs records): the Figure-1 fenced
+    stage-share rows per placement scheme, plus the tracing-overhead
+    verdict against its <= 2% steps/s budget."""
+    rows = ["| scheme | sampling | feature | compute | step (unoverlapped)"
+            " | dataset |",
+            "|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("workload") != "obs-stage-breakdown":
+            continue
+        b = r["stage_breakdown"]
+        rows.append(
+            f"| {r['scheme']} "
+            f"| {100.0 * b['sampling']:.1f}% "
+            f"| {100.0 * b['feature']:.1f}% "
+            f"| {100.0 * b['compute']:.1f}% "
+            f"| {fmt_s(r['step_s'])} "
+            f"| {dataset_cols_label(r)} |")
+    for r in recs:
+        if r.get("workload") != "obs-overhead":
+            continue
+        rows.append(
+            f"\nTracing overhead ({r['scheme']}, {exec_label(r)}, "
+            f"unfenced): {r['steps_per_s_untraced']:.2f} -> "
+            f"{r['steps_per_s_traced']:.2f} steps/s "
+            f"({100.0 * r['overhead_frac']:+.2f}%; budget <= 2%: "
+            f"{'PASS' if r['within_2pct_budget'] else 'FAIL'})")
     return "\n".join(rows)
 
 
@@ -279,6 +327,7 @@ def main():
                     default="experiments/feature_staging")
     ap.add_argument("--serve-dir", default="experiments/serve")
     ap.add_argument("--multihost-dir", default="experiments/multihost")
+    ap.add_argument("--obs-dir", default="experiments/obs")
     args = ap.parse_args()
     recs = load(args.dir)
     print(f"## Dry-run ({args.mesh})\n")
@@ -310,6 +359,11 @@ def main():
     if mh_recs:
         print("\n## Multi-process executor (steps/s vs process count)\n")
         print(multihost_table(mh_recs))
+    obs_recs = load(args.obs_dir) if os.path.isdir(args.obs_dir) \
+        else []
+    if obs_recs:
+        print("\n## Observability (stage shares + tracing overhead)\n")
+        print(obs_table(obs_recs))
     sv_recs = load(args.serve_dir) if os.path.isdir(args.serve_dir) \
         else []
     if sv_recs:

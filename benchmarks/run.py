@@ -23,6 +23,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      scheme x bucket config x recycling on/off
   * bench_multihost — multi-process executor scaling: steps/s for
                      1/2/4 local jax.distributed ranks per scheme
+  * bench_obs      — observability arms: unfenced tracing overhead
+                     (budget <= 2% steps/s) + the Figure-1 fenced
+                     sampling/feature/compute share per scheme, recorded
+                     into one repro.obs trace
 
 Pass section names to run a subset: ``python -m benchmarks.run cache
 schemes``.
@@ -33,9 +37,9 @@ import sys
 def main() -> None:
     from benchmarks import (bench_cache, bench_datasets, bench_epoch,
                             bench_feature_staging, bench_kernels,
-                            bench_multihost, bench_prefetch, bench_sampling,
-                            bench_schemes, bench_serve, bench_staging,
-                            bench_storage, bench_table1)
+                            bench_multihost, bench_obs, bench_prefetch,
+                            bench_sampling, bench_schemes, bench_serve,
+                            bench_staging, bench_storage, bench_table1)
     mods = {
         "table1": bench_table1,
         "storage": bench_storage,
@@ -50,6 +54,7 @@ def main() -> None:
         "datasets": bench_datasets,
         "serve": bench_serve,
         "multihost": bench_multihost,
+        "obs": bench_obs,
     }
     only = set(sys.argv[1:])
     unknown = only - set(mods)

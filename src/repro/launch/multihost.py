@@ -103,6 +103,33 @@ def init_from_env(env=None):
     return rank, num_procs
 
 
+def rank_trace_path(base: str, rank: int) -> str:
+    """Per-rank trace file for a fleet whose merged trace is ``base``.
+
+    Workers export to ``{base}.rank{r}``; the supervisor merges the rank
+    files into ``base`` with ``merge_rank_traces`` after the fleet
+    exits.
+    """
+    return f"{base}.rank{int(rank)}"
+
+
+def merge_rank_traces(base: str, num_procs: int,
+                      out: str | None = None) -> dict:
+    """Merge the fleet's per-rank trace files into one Perfetto-loadable
+    trace with rank-as-pid mapping.
+
+    Reads ``rank_trace_path(base, r)`` for every rank and writes the
+    merged trace to ``out`` (default: ``base`` itself).  Each rank
+    becomes one process track group (``pid=r``, named ``rank{r}``);
+    virtual pids inside a rank (e.g. the serving loop's request lanes)
+    are shifted into rank-unique ranges.  Returns the merged dict.
+    """
+    from repro.obs.trace import merge_traces
+
+    paths = [rank_trace_path(base, r) for r in range(num_procs)]
+    return merge_traces(paths, out if out is not None else base)
+
+
 def _stderr_tail(log_dir: str, rank: int, limit: int = 4000) -> str:
     path = os.path.join(log_dir, f"rank{rank}.err")
     try:

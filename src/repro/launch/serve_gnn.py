@@ -65,12 +65,23 @@ def main():
                          "(deterministic serving); 'step' draws fresh "
                          "samples each flush")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a Chrome trace-event timeline "
+                         "(repro.obs): real-clock serve/predict spans "
+                         "plus per-request queue-wait / batch-delay / "
+                         "service lanes on the virtual clock; viewable "
+                         "in Perfetto")
     args = ap.parse_args()
 
     import time
 
     import jax
     import numpy as np
+
+    from repro.obs import trace as obs_trace
+
+    if args.trace:
+        obs_trace.start(args.trace, process_name="serve_gnn")
 
     from repro.core.cache import degree_hot_ids
     from repro.data import DataSpec, dataset_stats, stats_label
@@ -98,11 +109,10 @@ def main():
     if args.train_steps:
         def loss_fn(p, mfgs, h, y, v):
             return gnn_loss(p, mfgs, h, y, v, cfg)
-        driver = pipe.train_driver(loss_fn, batch=64, lr=0.006)
-        opt = init_opt_state(params, kind="adamw")
-        for k in range(args.train_steps):
-            params, opt, loss, _ = driver.step(params, opt, k)
-        driver.close()
+        with pipe.train_driver(loss_fn, batch=64, lr=0.006) as driver:
+            opt = init_opt_state(params, kind="adamw")
+            for k in range(args.train_steps):
+                params, opt, loss, _ = driver.step(params, opt, k)
         print(f"trained {args.train_steps} steps, loss {float(loss):.4f}")
 
     buckets = (1,) if args.no_batching else \
@@ -153,6 +163,11 @@ def main():
               f"entries {r['entries']}/{r['capacity']} "
               f"tau={r['tau']} rho={r['rho']} "
               f"expired {r['expired']} deferrals {r['rho_deferrals']}")
+    if args.trace:
+        tracer = obs_trace.stop()
+        print(f"trace written to {args.trace} "
+              f"({tracer.num_recorded} spans); view at "
+              f"https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

@@ -91,6 +91,19 @@ def main():
     ap.add_argument("--mh-timeout", type=float, default=600.0,
                     help="multiprocess launcher wall-clock timeout in "
                          "seconds (hang detection)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a Chrome trace-event timeline of the run "
+                         "(repro.obs): driver/prefetch/stager spans, "
+                         "viewable in Perfetto; with --executor "
+                         "multiprocess each rank writes OUT.json.rankR "
+                         "and the parent merges them into OUT.json "
+                         "(rank-as-pid).  Render the span summary with "
+                         "'python -m repro.obs.report OUT.json --summary'")
+    ap.add_argument("--trace-fence", action="store_true",
+                    help="block_until_ready inside traced spans: honest "
+                         "device-time attribution per span, at the cost "
+                         "of destroying the prepare/consume overlap — a "
+                         "profiling mode, never for production numbers")
     args = ap.parse_args()
 
     executor = args.executor or ("shard_map" if args.shard_map else "vmap")
@@ -114,6 +127,9 @@ def main():
             timeout=args.mh_timeout)
         with open(os.path.join(log_dir, "rank0.out")) as f:
             sys.stdout.write(f.read())
+        if args.trace:
+            multihost.merge_rank_traces(args.trace, args.num_procs)
+            print(f"merged fleet trace written to {args.trace}")
         print(f"multiprocess run complete; per-rank logs in {log_dir}")
         return
 
@@ -133,6 +149,17 @@ def main():
             f"--xla_force_host_platform_device_count={args.devices}")
 
     import jax
+
+    from repro.obs import trace as obs_trace
+
+    if args.trace:
+        # each rank records (and exports) its own trace; the supervisor
+        # merges the rank files after the fleet exits
+        path = args.trace if executor != "multiprocess" \
+            else multihost.rank_trace_path(args.trace, rank)
+        obs_trace.start(path, fenced=args.trace_fence, pid=rank,
+                        process_name=f"rank{rank}" if executor
+                        == "multiprocess" else "train_gnn")
 
     from repro.data import DataSpec, dataset_stats, stats_label
     from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
@@ -176,39 +203,54 @@ def main():
     def loss_fn(p, mfgs, h_src, labels, valid):
         return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
 
-    driver = pipe.train_driver(loss_fn, batch=args.batch, lr=args.lr,
-                               optimizer="adamw", grad_clip=1.0)
-
     params = init_gnn_params(jax.random.key(0), cfg)
     opt_state = init_opt_state(params, kind="adamw")
 
     import time
-    for epoch in range(args.epochs):
-        t0 = time.time()
-        for s in range(args.steps_per_epoch):
-            params, opt_state, loss, metrics = driver.step(params,
-                                                           opt_state)
-            if epoch == 0 and s == 0:
-                # the round counter fills at first trace — report it only
-                # once a step has actually traced
-                say(f"scheme={args.scheme} executor={spec.executor} "
-                    f"prefetch={args.prefetch_depth} "
-                    f"staging={'on' if args.staging else 'off'}: "
-                    f"{pipe.counter.rounds} comm rounds/step "
-                    f"({pipe.counter.sampling_rounds} sampling + "
-                    f"{pipe.counter.feature_rounds} feature; "
-                    f"vanilla=2L={2*cfg.num_layers}, hybrid=2)")
-        jax.block_until_ready(loss)
-        msg = (f"epoch {epoch}: loss {float(loss):.4f} "
-               f"rounds/step {pipe.counter.rounds} "
-               f"utilized-KB/step "
-               f"{float(metrics['sampling_utilized_bytes'])/1024:.0f}s+"
-               f"{float(metrics['feature_utilized_bytes'])/1024:.0f}f "
-               f"time {time.time()-t0:.2f}s")
-        if args.cache_capacity:
-            msg += f" cache-hit {float(metrics['cache_hit_rate']):.1%}"
-        say(msg)
-    driver.close()
+
+    from repro.obs.metrics import get_registry
+
+    registry = get_registry()
+    # the driver context guarantees the staging thread is released even
+    # when an epoch raises
+    with pipe.train_driver(loss_fn, batch=args.batch, lr=args.lr,
+                           optimizer="adamw", grad_clip=1.0) as driver:
+        for epoch in range(args.epochs):
+            t0 = time.time()
+            for s in range(args.steps_per_epoch):
+                params, opt_state, loss, metrics = driver.step(params,
+                                                               opt_state)
+                if epoch == 0 and s == 0:
+                    # the round counter fills at first trace — report it
+                    # only once a step has actually traced
+                    say(f"scheme={args.scheme} executor={spec.executor} "
+                        f"prefetch={args.prefetch_depth} "
+                        f"staging={'on' if args.staging else 'off'}: "
+                        f"{pipe.counter.rounds} comm rounds/step "
+                        f"({pipe.counter.sampling_rounds} sampling + "
+                        f"{pipe.counter.feature_rounds} feature; "
+                        f"vanilla=2L={2*cfg.num_layers}, hybrid=2)")
+            jax.block_until_ready(loss)
+            # the epoch end already materializes metrics for the log
+            # line; absorbing them here also runs the warn-once
+            # sampler-overflow watch without adding a per-step sync
+            registry.observe_step(
+                metrics, step=(epoch + 1) * args.steps_per_epoch - 1)
+            msg = (f"epoch {epoch}: loss {float(loss):.4f} "
+                   f"rounds/step {pipe.counter.rounds} "
+                   f"utilized-KB/step "
+                   f"{float(metrics['sampling_utilized_bytes'])/1024:.0f}s+"
+                   f"{float(metrics['feature_utilized_bytes'])/1024:.0f}f "
+                   f"time {time.time()-t0:.2f}s")
+            if args.cache_capacity:
+                msg += f" cache-hit {float(metrics['cache_hit_rate']):.1%}"
+            say(msg)
+    if args.trace:
+        tracer = obs_trace.stop()
+        say(f"trace written to {args.trace} "
+            f"({tracer.num_recorded} spans, {tracer.dropped} dropped); "
+            f"view at https://ui.perfetto.dev or render with "
+            f"python -m repro.obs.report {args.trace} --summary")
 
 
 if __name__ == "__main__":

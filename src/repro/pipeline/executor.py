@@ -46,6 +46,7 @@ from typing import Callable
 import jax
 
 from repro.core import dist
+from repro.obs import trace as _trace
 
 
 _EXECUTORS: dict[str, Callable] = {}
@@ -132,13 +133,25 @@ class _AsyncDispatchRunner:
 
     def prepare(self, seeds, salt, rows=None):
         """Dispatch one prepare (used by the driver to fill the queue)."""
-        return self._attach(self._prep(seeds, salt), rows)
+        with _trace.span("prefetch/prepare", cat="prefetch"):
+            nxt = self._attach(self._prep(seeds, salt), rows)
+            _trace.fence(nxt)
+        return nxt
 
     def step(self, params, opt_state, queue, seeds, salt, rows=None):
-        nxt = self._attach(self._prep(seeds, salt), rows)  # async ...
-        params, opt_state, loss, metrics = self._cons(params, opt_state,
-                                                      queue[0])
-        # ... and only now does anyone block on device values
+        # unfenced, these spans time *dispatch* — prepare(k+depth) and
+        # consume(k) still overlap on the device.  A fenced tracer
+        # (trace.start(fenced=True)) blocks inside each span for honest
+        # per-half device attribution, destroying exactly that overlap.
+        with _trace.span("prefetch/prepare", cat="prefetch"):
+            nxt = self._attach(self._prep(seeds, salt), rows)  # async ...
+            _trace.fence(nxt)
+        with _trace.span("prefetch/consume", cat="prefetch"):
+            params, opt_state, loss, metrics = self._cons(params,
+                                                          opt_state,
+                                                          queue[0])
+            # ... and only now does anyone block on device values
+            _trace.fence(loss)
         return params, opt_state, loss, metrics, queue[1:] + (nxt,)
 
 

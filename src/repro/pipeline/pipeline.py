@@ -273,6 +273,26 @@ class Pipeline:
             features=self.spec.prefetch.features, plan=self.placement,
             store=self.feature_store)
 
+    def make_prepare_fetch_consume(self, loss_fn, *, counted: bool = True):
+        """``make_prepare_consume`` with the feature stage exposed as a
+        third, standalone callable — ``(prepare, fetch, consume)`` with
+        ``prepare`` built ``features=False`` so sampling, feature fetch,
+        and model compute can be jitted (and fenced) independently.
+        This is the binding the stage profiler (``repro.obs.profile``)
+        uses; the regular drivers want ``make_prepare_consume``.
+        """
+        from repro.pipeline import prefetch as _prefetch
+
+        plan, sampler = self.spec.plan, self.spec.sampler
+        return _prefetch.make_prepare_fetch_consume(
+            offsets=self.layout.offsets, num_parts=plan.num_parts,
+            fanouts=sampler.fanouts, loss_fn=loss_fn, scheme=plan.scheme,
+            graph_replicated=self.graph_replicated,
+            backend=sampler.backend,
+            counter=self.counter if counted else None,
+            features=False, plan=self.placement,
+            store=self.feature_store)
+
     def make_infer_prepare_consume(self, forward_fn, *,
                                    counted: bool = False):
         """Build the per-worker *prepare* / *consume* halves of the

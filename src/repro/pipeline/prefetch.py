@@ -50,6 +50,7 @@ from jax import lax
 
 from repro.core import dist
 from repro.core.sampler import resolve_backend
+from repro.obs import trace as _trace
 from repro.pipeline.specs import SEED_STREAMS
 
 
@@ -131,6 +132,8 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
                          plan=None,
                          store=None):
     """Build the per-worker *prepare* / *consume* halves of the step program.
+    (``make_prepare_fetch_consume`` additionally exposes the feature
+    stage between them; this is its 2-tuple form.)
 
     This is the prefetch boundary: ``consume(params, shard,
     prepare(shard, seeds, salt, cache), cache)`` is op-for-op the fused
@@ -174,6 +177,38 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
         ``consume(params, shard, batch, cache) -> (loss, grads, metrics)``.
         Both must run under the named worker axis ``dist.AXIS`` (vmap or
         shard_map); ``cache`` is ``None`` when no feature cache is attached.
+    """
+    prepare, _, consume = make_prepare_fetch_consume(
+        offsets=offsets, num_parts=num_parts, fanouts=fanouts,
+        loss_fn=loss_fn, scheme=scheme, graph_replicated=graph_replicated,
+        backend=backend, level_fn=level_fn, counter=counter,
+        vanilla_fused=vanilla_fused, features=features, plan=plan,
+        store=store)
+    return prepare, consume
+
+
+def make_prepare_fetch_consume(*, offsets: jnp.ndarray, num_parts: int,
+                               fanouts: Sequence[int], loss_fn: Callable,
+                               scheme: str = "hybrid",
+                               graph_replicated=None,
+                               backend: str | None = None,
+                               level_fn: Callable | None = None,
+                               counter: dist.RoundCounter | None = None,
+                               vanilla_fused: bool | None = None,
+                               features: bool = True,
+                               plan=None,
+                               store=None):
+    """``make_prepare_consume`` with the feature stage exposed as its own
+    callable.
+
+    Returns ``(prepare, fetch, consume)`` where ``fetch(shard, batch,
+    cache=None) -> PreparedBatch`` fills ``h_src``/``hits``/feature bytes
+    for a batch prepared without its feature stage (``features=False``)
+    and is the identity on a batch that already carries ``h_src``.
+    ``consume`` starts by calling ``fetch``, so the 2-tuple composition
+    is unchanged op-for-op; the 3-tuple form exists for the stage
+    profiler (``repro.obs.profile``), which jits sampling / feature /
+    compute as three separately-fenced programs.
     """
     from repro.core.placement import plan_from_legacy
 
@@ -228,9 +263,15 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
                                        level_fn=lf,
                                        fused=vanilla_fused,
                                        counter=counter)
-        overflow = jnp.zeros((), jnp.int32)
-        for o in sink:
-            overflow = overflow + o.astype(jnp.int32)
+        # per-level attribution: the sink receives one count per level_fn
+        # call in sampling order (one per level for every scheme; any
+        # extra calls land on the last level)
+        L = len(fanouts)
+        overflow_per_level = jnp.zeros((L,), jnp.int32)
+        for i, o in enumerate(sink):
+            overflow_per_level = overflow_per_level.at[
+                min(i, L - 1)].add(o.astype(jnp.int32))
+        overflow = jnp.sum(overflow_per_level)
         me = lax.axis_index(dist.AXIS)
         local_seed = jnp.clip(seeds - offsets[me], 0,
                               shard.labels.shape[0] - 1)
@@ -248,22 +289,32 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
             feat_bytes = jnp.zeros((), jnp.float32)
         comm = {"sampling_utilized_bytes": samp_bytes,
                 "feature_utilized_bytes": feat_bytes,
-                "sampler_window_overflow": overflow}
+                "sampler_window_overflow": overflow,
+                "sampler_window_overflow_per_level": overflow_per_level}
         return PreparedBatch(mfgs=tuple(mfgs), h_src=h_src,
                              seed_labels=seed_labels, seed_valid=seed_valid,
                              hits=hits, comm=comm, staged=staged)
 
+    def fetch(shard: dist.WorkerShard, batch: PreparedBatch, cache=None):
+        """Fill the feature stage of a batch prepared without it
+        (``features=False`` / staged rows); identity when ``h_src`` is
+        already present."""
+        if batch.h_src is not None:
+            return batch
+        src = batch.mfgs[-1].src_nodes
+        h_src, hits = _fetch(src, shard, cache, batch.staged)
+        comm = dict(batch.comm,
+                    feature_utilized_bytes=_feature_bytes(src, hits,
+                                                          shard))
+        return dataclasses.replace(batch, h_src=h_src, hits=hits,
+                                   comm=comm)
+
     def consume(params, shard: dist.WorkerShard, batch: PreparedBatch,
                 cache=None):
+        batch = fetch(shard, batch, cache)
         mfgs = list(batch.mfgs)
         comm = dict(batch.comm)
-        if batch.h_src is not None:
-            h_src, hits = batch.h_src, batch.hits
-        else:
-            h_src, hits = _fetch(mfgs[-1].src_nodes, shard, cache,
-                                 batch.staged)
-            comm["feature_utilized_bytes"] = _feature_bytes(
-                mfgs[-1].src_nodes, hits, shard)
+        h_src, hits = batch.h_src, batch.hits
 
         def objective(p):
             return loss_fn(p, mfgs, h_src, batch.seed_labels,
@@ -290,10 +341,16 @@ def make_prepare_consume(*, offsets: jnp.ndarray, num_parts: int,
             "sampler_window_overflow": dist.psum_ordered(
                 comm.get("sampler_window_overflow",
                          jnp.zeros((), jnp.int32)).astype(jnp.float32)),
+            # the same truncation attributed per sampler level, (L,) —
+            # what the metrics registry's warn-once overflow watch names
+            "sampler_window_overflow_per_level": dist.psum_ordered(
+                comm.get("sampler_window_overflow_per_level",
+                         jnp.zeros((len(fanouts),), jnp.int32)
+                         ).astype(jnp.float32)),
         }
         return loss, grads, metrics
 
-    return prepare, consume
+    return prepare, fetch, consume
 
 
 def make_update_fn(*, lr: float = 1e-3, optimizer: str = "adamw",
@@ -445,8 +502,13 @@ class SyncDriver:
         Returns ``(params, opt_state, loss, metrics)``.
         """
         k = self._next if step_idx is None else int(step_idx)
-        seeds, salt = self._seeds_salt(k)
-        out = self._fn(params, opt_state, seeds, salt)
+        with _trace.span("driver/step", cat="driver", step=k,
+                         mode=self.mode):
+            with _trace.span("driver/seeds", cat="driver"):
+                seeds, salt = self._seeds_salt(k)
+            with _trace.span("driver/train_step", cat="driver"):
+                out = self._fn(params, opt_state, seeds, salt)
+                _trace.fence(out)
         self._next = k + 1
         if self._fence:
             jax.block_until_ready(out[2])
@@ -465,6 +527,12 @@ class SyncDriver:
         """
         if self.stager is not None and self._owns_stager:
             self.stager.close()
+
+    def __enter__(self) -> "SyncDriver":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class DoubleBufferDriver:
@@ -548,11 +616,18 @@ class DoubleBufferDriver:
         ``step_idx + depth``.
         """
         k = self._next if step_idx is None else int(step_idx)
-        if self._queue is None or k != self._next:
-            self._warmup(k)
-        params, opt_state, loss, metrics, self._queue = self._runner.step(
-            params, opt_state, self._queue,
-            *self._seeds_salt(k + self.depth))
+        with _trace.span("driver/step", cat="driver", step=k,
+                         mode=self.mode, depth=self.depth):
+            if self._queue is None or k != self._next:
+                with _trace.span("driver/warmup", cat="driver"):
+                    self._warmup(k)
+            with _trace.span("driver/seeds", cat="driver"):
+                nxt = self._seeds_salt(k + self.depth)
+            with _trace.span("driver/runner_step", cat="driver"):
+                params, opt_state, loss, metrics, self._queue = \
+                    self._runner.step(params, opt_state, self._queue,
+                                      *nxt)
+                _trace.fence(loss)
         self._next = k + 1
         if self._fence:
             jax.block_until_ready(loss)
@@ -572,6 +647,12 @@ class DoubleBufferDriver:
         """
         if self.stager is not None and self._owns_stager:
             self.stager.close()
+
+    def __enter__(self) -> "DoubleBufferDriver":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 _PREFETCHERS: dict[str, Callable] = {}

@@ -44,6 +44,8 @@ import threading
 import jax
 import numpy as np
 
+from repro.obs import trace as _trace
+
 
 class SeedStager:
     """Background staging of per-step seeds/salt with eager H2D transfer.
@@ -105,11 +107,17 @@ class SeedStager:
         process cannot address; ``jax.make_array_from_callback`` then
         assembles the global array from this rank's addressable rows
         (every rank computes the identical full ``(P, batch)`` host
-        table, so the rows are consistent by construction)."""
-        seeds_np = self.stream.seeds_host(k)
-        salt_np = np.uint32(self.stream.salt_int(k))
-        seeds = self._put(seeds_np)
-        salt = jax.device_put(salt_np)
+        table, so the rows are consistent by construction).
+
+        Spans recorded here land on this worker thread's own trace
+        track (the tracer's span stacks are thread-local)."""
+        with _trace.span("stager/produce", cat="stager", step=k):
+            with _trace.span("stager/seeds_host", cat="stager"):
+                seeds_np = self.stream.seeds_host(k)
+            salt_np = np.uint32(self.stream.salt_int(k))
+            with _trace.span("stager/h2d", cat="stager"):
+                seeds = self._put(seeds_np)
+                salt = jax.device_put(salt_np)
         return seeds, salt
 
     def _put(self, host_array):
@@ -170,10 +178,13 @@ class SeedStager:
 
         Serves the ring head when it is step ``k``; otherwise drains and
         refills from ``k`` (restart semantics).  Blocks until the slot is
-        staged; re-raises any error the worker thread hit.
+        staged; re-raises any error the worker thread hit.  The
+        ``stager/get`` span covers any such wait — a long one in a trace
+        means the ring is not riding far enough ahead (raise
+        ``PrefetchSpec.lead``).
         """
         k = int(k)
-        with self._cv:
+        with _trace.span("stager/get", cat="stager", step=k), self._cv:
             if self._closed:
                 raise RuntimeError("SeedStager is closed")
             head = self._ring[0][0] if self._ring else self._want
@@ -440,16 +451,22 @@ class FeatureStager(SeedStager):
         return rows
 
     def _produce(self, k: int):
-        seeds_np = self.stream.seeds_host(k)
-        salt_int = self.stream.salt_int(k)
-        frontier = np.stack([
-            _frontier_src_nodes_host(self._indptr_np, self._indices_np,
-                                     seeds_np[p], self._fanouts, salt_int)
-            for p in range(seeds_np.shape[0])])
-        rows_np = self._stage_rows(k, frontier)
-        seeds = self._put(seeds_np)
-        rows = self._put_rows(rows_np)
-        salt = jax.device_put(np.uint32(salt_int))
+        with _trace.span("stager/produce", cat="stager", step=k):
+            with _trace.span("stager/seeds_host", cat="stager"):
+                seeds_np = self.stream.seeds_host(k)
+            salt_int = self.stream.salt_int(k)
+            with _trace.span("stager/frontier_replay", cat="stager"):
+                frontier = np.stack([
+                    _frontier_src_nodes_host(
+                        self._indptr_np, self._indices_np, seeds_np[p],
+                        self._fanouts, salt_int)
+                    for p in range(seeds_np.shape[0])])
+            with _trace.span("stager/gather_rows", cat="stager"):
+                rows_np = self._stage_rows(k, frontier)
+            with _trace.span("stager/h2d", cat="stager"):
+                seeds = self._put(seeds_np)
+                rows = self._put_rows(rows_np)
+                salt = jax.device_put(np.uint32(salt_int))
         return seeds, salt, rows
 
     def _put_rows(self, rows_np: np.ndarray):

@@ -33,10 +33,18 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.obs import trace as _trace
 from repro.serve.batcher import (BucketSpec, MicroBatcher, Request,
                                  max_owner_count)
 from repro.serve.predictor import Predictor
 from repro.serve.recycler import RecyclingCache
+
+#: pid of the virtual-clock request lanes in exported traces.  The
+#: simulation's per-request phases live on the *virtual* timeline (see
+#: module docstring), so they are exported as explicit-timestamp events
+#: under this dedicated process rather than on the real monotonic clock;
+#: ``merge_traces`` keeps virtual pids rank-unique when ranks merge.
+SERVE_VPID = 100
 
 
 @dataclasses.dataclass
@@ -139,6 +147,9 @@ class GNNServer:
         arrival order (recycled rows are the recycled logits — compare
         against a fresh ``predictor.predict`` to measure staleness).
         """
+        tracer = _trace.active_tracer()
+        if tracer is not None:
+            tracer.name_process(SERVE_VPID, "serve (virtual clock)")
         if warmup:
             self.predictor.warmup(buckets=self.buckets.sizes)
         arrivals = [(float(t), int(s)) for t, s in arrivals]
@@ -161,9 +172,15 @@ class GNNServer:
                 return
             start = max(at, state["free"])
             seeds = [r.seed for r in reqs]
-            t0 = time.perf_counter()
-            logits = self.predictor.predict(seeds, salt=self._salt())
-            dt = time.perf_counter() - t0
+            # the real-clock span measures the fused sampled-inference
+            # program (sampling + feature fetch + forward in one jit);
+            # the per-request phase events below live on the virtual
+            # clock instead
+            with _trace.span("serve/predict", cat="serve",
+                             batch=len(reqs)):
+                t0 = time.perf_counter()
+                logits = self.predictor.predict(seeds, salt=self._salt())
+                dt = time.perf_counter() - t0
             done = start + dt
             state["free"] = done
             state["compute"] += dt
@@ -180,6 +197,20 @@ class GNNServer:
                 outputs[i] = row
                 if self.recycler is not None:
                     self.recycler.insert(r.seed, row, self.step)
+                if tracer is not None:
+                    # per-request phases on the virtual timeline, one
+                    # lane (tid) per request: waiting for batchmates,
+                    # then for the device, then in service
+                    tracer.event("serve/queue_wait", r.arrival,
+                                 max(0.0, at - r.arrival), tid=i,
+                                 pid=SERVE_VPID, cat="serve",
+                                 args={"seed": r.seed})
+                    tracer.event("serve/batch_delay", at,
+                                 max(0.0, start - at), tid=i,
+                                 pid=SERVE_VPID, cat="serve")
+                    tracer.event("serve/service", start, dt, tid=i,
+                                 pid=SERVE_VPID, cat="serve",
+                                 args={"bucket": b})
             self.step += 1
 
         for i, (t, seed) in enumerate(arrivals):
@@ -194,6 +225,10 @@ class GNNServer:
                     outputs[i] = hit
                     state["recycled"] += 1
                     state["last_done"] = max(state["last_done"], t + dt)
+                    if tracer is not None:
+                        tracer.event("serve/recycled_hit", t, dt, tid=i,
+                                     pid=SERVE_VPID, cat="serve",
+                                     args={"seed": seed})
                     continue
             req = Request(seed=seed, arrival=t)
             index_of[req.uid] = i

@@ -76,15 +76,22 @@ class GNNTrainer:
         epochs that re-use compiled programs report the last traced
         per-step count instead of an ever-growing cumulative total.
         """
+        from repro.obs.metrics import get_registry
+
+        registry = get_registry()
         t0 = time.perf_counter()
         rounds_before = self.counter.rounds
         losses, hit_rates = [], []
         for s in range(steps_per_epoch):
+            k = epoch * steps_per_epoch + s
             self.params, self.opt_state, loss, metrics = self.driver.step(
-                self.params, self.opt_state,
-                step_idx=epoch * steps_per_epoch + s)
+                self.params, self.opt_state, step_idx=k)
             losses.append(float(loss))
             hit_rates.append(float(metrics["cache_hit_rate"]))
+            # the loop already materialized this step's outputs (the
+            # float() above), so absorbing them — and running the
+            # warn-once sampler-overflow watch — costs no extra sync
+            registry.observe_step(metrics, step=k)
         traced = self.counter.rounds - rounds_before
         if traced:
             self._rounds_per_step = traced
@@ -113,6 +120,12 @@ class GNNTrainer:
         ``staging=True``) — call when done with a trainer in a long-lived
         process; safe to call on unstaged trainers too."""
         self.driver.close()
+
+    def __enter__(self) -> "GNNTrainer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def make_lm_train_step(cfg: ModelConfig, *, lr: float = 3e-4,

@@ -1,0 +1,453 @@
+"""Observability subsystem (``repro.obs``): tracer ring + export schema,
+cross-thread stager span ordering, metrics registry semantics, the
+warn-once sampler-overflow watch, driver/profiler/report integration,
+rank-trace merging, and the serving loop's virtual-clock lanes.
+
+The 2-rank *fleet* trace test (real processes exporting per-rank files
+the supervisor merges) is ``multihost``-marked like the rest of the
+fleet suite; ``tools/trace_smoke.py`` additionally drives the full
+``train_gnn --trace`` path in CI.
+"""
+import json
+import sys
+import textwrap
+import threading
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core.partition import build_layout, partition_graph
+from repro.data.synthetic_graph import make_power_law_graph
+from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.profile import STAGES, profile_stages
+from repro.obs.report import (render_share_table, span_summary,
+                              stage_shares)
+from repro.obs.trace import Tracer, merge_traces, validate_trace
+from repro.optim import init_opt_state
+from repro.pipeline import (Pipeline, PipelineSpec, PlanSpec,
+                            PrefetchSpec, SamplerSpec)
+
+P_ = 4
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = make_power_law_graph(1200, 6, num_features=8, num_classes=4,
+                              seed=0)
+    assign = partition_graph(ds.graph, P_, ds.labeled_mask, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P_)
+    cfg = GNNConfig(in_dim=8, hidden_dim=8, num_classes=4, num_layers=2,
+                    fanouts=(3, 3), dropout=0.0)
+    params = init_gnn_params(jax.random.key(1), cfg)
+    return ds, layout, cfg, params
+
+
+def _spec(scheme="hybrid", depth=0, **prefetch_kw):
+    return PipelineSpec(
+        plan=PlanSpec(num_parts=P_, scheme=scheme),
+        sampler=SamplerSpec(fanouts=(3, 3), backend="reference"),
+        prefetch=PrefetchSpec(depth=depth, **prefetch_kw))
+
+
+def _loss_fn(cfg):
+    def loss_fn(p, mfgs, h_src, labels, valid):
+        return gnn_loss(p, mfgs, h_src, labels, valid, cfg)
+    return loss_fn
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_tracer():
+    """Every test leaves the module-global tracer uninstalled."""
+    yield
+    obs_trace.stop(export=False)
+
+
+# --------------------------------------------------------------------------
+# tracer core
+# --------------------------------------------------------------------------
+
+def test_tracer_records_spans_with_cat_and_args():
+    t = Tracer(capacity=16)
+    with t.span("outer", cat="driver", step=3):
+        with t.span("inner", cat="driver"):
+            pass
+    assert t.num_recorded == 2 and t.dropped == 0
+    evs = [e for e in t.events() if e["ph"] == "X"]
+    # inner closes first: ring order is completion order
+    assert [e["name"] for e in evs] == ["inner", "outer"]
+    outer = evs[1]
+    assert outer["cat"] == "driver" and outer["args"] == {"step": 3}
+    assert outer["dur"] >= evs[0]["dur"]
+
+
+def test_tracer_ring_wraps_and_counts_drops(tmp_path):
+    t = Tracer(capacity=4)
+    for i in range(7):
+        with t.span(f"s{i}"):
+            pass
+    assert t.num_recorded == 4 and t.dropped == 3
+    names = [e["name"] for e in t.events() if e["ph"] == "X"]
+    assert names == ["s3", "s4", "s5", "s6"]     # oldest dropped
+    meta = [e for e in t.events() if e["name"] == "trace_ring_dropped"]
+    assert meta and meta[0]["args"]["dropped"] == 3
+    path = tmp_path / "wrap.json"
+    n = t.export(str(path))
+    assert validate_trace(str(path)) == n
+
+
+def test_module_level_span_is_noop_when_off():
+    assert obs_trace.active_tracer() is None
+    with obs_trace.span("ignored", cat="driver"):
+        pass                                     # must not raise
+    assert obs_trace.fence(42) == 42             # unfenced: identity
+    t = obs_trace.start(None, fenced=True)
+    assert obs_trace.fenced()
+    with obs_trace.span("seen"):
+        pass
+    assert obs_trace.stop(export=False) is t
+    assert t.num_recorded == 1
+
+
+def test_threads_get_their_own_tracks():
+    t = Tracer()
+    done = threading.Event()
+
+    def worker():
+        with t.span("worker-span"):
+            done.wait(1.0)
+
+    th = threading.Thread(target=worker, name="stager-test")
+    th.start()
+    with t.span("main-span"):
+        pass
+    done.set()
+    th.join()
+    evs = {e["name"]: e for e in t.events() if e["ph"] == "X"}
+    assert evs["worker-span"]["tid"] != evs["main-span"]["tid"]
+    tnames = {e["args"]["name"] for e in t.events()
+              if e["name"] == "thread_name"}
+    assert "stager-test" in tnames
+
+
+# --------------------------------------------------------------------------
+# stager integration: worker-thread spans, in order
+# --------------------------------------------------------------------------
+
+def test_stager_thread_spans_land_in_order(world):
+    from repro.pipeline.staging import SeedStager
+    from repro.pipeline.prefetch import SeedStream
+
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec(depth=1))
+    tracer = obs_trace.start(None)
+    stager = SeedStager(SeedStream(pipe, batch=8), depth=1, lead=2)
+    try:
+        for k in range(4):
+            stager.get(k)
+    finally:
+        stager.close()
+    obs_trace.stop(export=False)
+    produces = [e for e in tracer.events()
+                if e["ph"] == "X" and e["name"] == "stager/produce"]
+    assert len(produces) >= 4
+    # all on the stager thread's track, one track only
+    assert len({e["tid"] for e in produces}) == 1
+    main_gets = [e for e in tracer.events()
+                 if e["ph"] == "X" and e["name"] == "stager/get"]
+    assert main_gets and all(e["tid"] != produces[0]["tid"]
+                             for e in main_gets)
+    # the worker annotates its own timeline in step order
+    steps = [e["args"]["step"] for e in produces]
+    assert steps == sorted(steps)
+    ts = [e["ts"] for e in produces]
+    assert ts == sorted(ts)
+    # produce spans nest the argsort + H2D children on the same track
+    kids = {e["name"] for e in tracer.events()
+            if e["ph"] == "X" and e.get("tid") == produces[0]["tid"]}
+    assert "stager/seeds_host" in kids and "stager/h2d" in kids
+
+
+# --------------------------------------------------------------------------
+# metrics registry
+# --------------------------------------------------------------------------
+
+def test_registry_counter_gauge_histogram():
+    reg = MetricsRegistry()
+    reg.counter("bytes").add(10)
+    reg.counter("bytes").add(5)
+    reg.gauge("hit_rate").set(0.25)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        reg.histogram("lat").observe(v)
+    snap = reg.snapshot()
+    assert snap["bytes"] == 15
+    assert snap["hit_rate"] == 0.25
+    assert snap["lat"]["count"] == 4 and snap["lat"]["mean"] == 2.5
+    with pytest.raises(ValueError):
+        reg.counter("bytes").add(-1)             # counters are monotonic
+    with pytest.raises(TypeError):
+        reg.gauge("bytes")                       # name/type conflict
+
+
+def test_registry_delta_semantics():
+    reg = MetricsRegistry()
+    reg.counter("c").add(3)
+    since = reg.snapshot()
+    reg.counter("c").add(4)
+    reg.gauge("g").set(7.0)
+    d = reg.delta(since)
+    assert d["c"] == 4                           # counter: difference
+    assert d["g"] == 7.0                         # gauge: current value
+
+
+def test_observe_step_absorbs_and_warns_once():
+    reg = MetricsRegistry()
+    clean = {"sampling_utilized_bytes": np.float32(100.0),
+             "feature_utilized_bytes": np.float32(200.0),
+             "cache_hit_rate": np.float32(0.5),
+             "sampler_window_overflow": np.float32(0.0)}
+    reg.observe_step(clean, step=0)
+    snap = reg.snapshot()
+    assert snap["feature_utilized_bytes"] == 200.0
+    assert snap["steps_observed"] == 1
+
+    bad = dict(clean, sampler_window_overflow=np.float32(9.0))
+    bad["sampler_window_overflow_per_level"] = np.asarray([2.0, 7.0])
+    with pytest.warns(RuntimeWarning) as rec:
+        reg.observe_step(bad, step=3)
+    msg = str(rec[0].message)
+    assert "worst level 1" in msg and "7" in msg and "step 3" in msg
+    # ...and only once per registry, however often overflow recurs
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        reg.observe_step(bad, step=4)
+    assert reg.snapshot()["sampler_window_overflow"] == 18.0
+
+
+def test_median_wall_syncs_and_feeds_histogram():
+    reg = MetricsRegistry()
+    calls = []
+    dt = obs_metrics.median_wall(lambda: calls.append(1), warmup=1,
+                                 iters=3, histogram=reg.histogram("t"))
+    assert dt >= 0 and len(calls) == 4
+    assert reg.snapshot()["t"]["count"] == 3
+
+
+# --------------------------------------------------------------------------
+# driver + profiler + report integration
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [0, 1])
+def test_driver_steps_are_traced(world, depth):
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec(depth=depth))
+    tracer = obs_trace.start(None)
+    with pipe.train_driver(_loss_fn(cfg), batch=8, lr=0.01) as driver:
+        opt = init_opt_state(params, kind="adamw")
+        p = params
+        for k in range(3):
+            p, opt, loss, _ = driver.step(p, opt, k)
+    obs_trace.stop(export=False)
+    evs = [e for e in tracer.events() if e["ph"] == "X"]
+    steps = [e for e in evs if e["name"] == "driver/step"]
+    assert len(steps) == 3
+    assert [e["args"]["step"] for e in steps] == [0, 1, 2]
+    assert all(e["cat"] == "driver" for e in steps)
+    names = {e["name"] for e in evs}
+    if depth == 0:
+        assert "driver/train_step" in names
+    else:
+        assert {"prefetch/prepare", "prefetch/consume"} <= names
+    # live spans never use the report's fenced stage cats
+    assert not any(e.get("cat") in STAGES for e in evs)
+
+
+def test_fenced_driver_matches_unfenced_losses(world):
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec(depth=1))
+
+    def run():
+        with pipe.train_driver(_loss_fn(cfg), batch=8, lr=0.01) as d:
+            p, opt = params, init_opt_state(params, kind="adamw")
+            out = []
+            for k in range(3):
+                p, opt, loss, _ = d.step(p, opt, k)
+                out.append(float(loss))
+            return out
+
+    base = run()
+    obs_trace.start(None, fenced=True)
+    fenced = run()
+    obs_trace.stop(export=False)
+    assert fenced == base          # fencing changes timing, not results
+
+
+def test_profile_stages_share_and_report_round_trip(world, tmp_path):
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec())
+    path = tmp_path / "stages.json"
+    obs_trace.start(str(path), fenced=True)
+    prof = profile_stages(pipe, _loss_fn(cfg), params, batch=8, steps=2,
+                          warmup=1, arm="hybrid")
+    obs_trace.stop()
+    assert set(prof["share"]) == set(STAGES)
+    assert all(v > 0 for v in prof["share"].values())
+    assert abs(sum(prof["share"].values()) - 1.0) < 1e-9
+    assert prof["step_s"] == pytest.approx(
+        prof["sampling_s"] + prof["feature_s"] + prof["compute_s"])
+
+    validate_trace(str(path))
+    with open(path) as f:
+        trace = json.load(f)
+    groups = stage_shares(trace)
+    assert list(groups) == ["hybrid"]
+    g = groups["hybrid"]
+    assert g["spans"] == 2 * len(STAGES)
+    for st in STAGES:
+        assert g["share"][st] == pytest.approx(prof["share"][st],
+                                               abs=0.25)
+    table = render_share_table(groups)
+    assert "| hybrid |" in table and "sampling" in table
+    summary = span_summary(trace)
+    assert summary["profile/sampling"]["count"] == 2
+
+
+def test_profile_stages_rejects_external_row_stores(world):
+    ds, layout, cfg, params = world
+    spec = PipelineSpec(
+        plan=PlanSpec(num_parts=P_, scheme="hybrid",
+                      feature_store="staged"),
+        sampler=SamplerSpec(fanouts=(3, 3), backend="reference"),
+        prefetch=PrefetchSpec(depth=1))
+    pipe = Pipeline.from_layout(layout, spec)
+    with pytest.raises(ValueError, match="staged"):
+        profile_stages(pipe, _loss_fn(cfg), params, batch=8)
+
+
+def test_trainer_context_manager(world):
+    from repro.train.loop import GNNTrainer
+    ds, layout, cfg, params = world
+    with GNNTrainer(layout, cfg, scheme="hybrid", batch_per_worker=8,
+                    prefetch_depth=1) as tr:
+        out = tr.run_epoch(0, steps_per_epoch=2)
+        assert np.isfinite(out["loss"])
+
+
+# --------------------------------------------------------------------------
+# serve: virtual-clock request lanes
+# --------------------------------------------------------------------------
+
+def test_serve_emits_virtual_clock_lanes(world):
+    from repro.serve import GNNServer, Predictor
+    from repro.serve.server import SERVE_VPID
+
+    ds, layout, cfg, params = world
+    pipe = Pipeline.from_layout(layout, _spec())
+    predictor = Predictor(pipe, params, cfg, buckets=(1, 4))
+    tracer = obs_trace.start(None)
+    server = GNNServer(predictor, buckets=(1, 4), max_delay=1e-3)
+    arrivals = [(0.000, 3), (0.0005, 9), (0.002, 11)]
+    stats = server.run(arrivals, warmup=True)
+    obs_trace.stop(export=False)
+    assert stats.num_requests == 3
+    evs = tracer.events()
+    lanes = [e for e in evs if e["ph"] == "X" and e["pid"] == SERVE_VPID]
+    names = {e["name"] for e in lanes}
+    assert {"serve/queue_wait", "serve/batch_delay",
+            "serve/service"} <= names
+    # one lane (tid) per request, in arrival order
+    waits = sorted((e for e in lanes if e["name"] == "serve/queue_wait"),
+                   key=lambda e: e["tid"])
+    assert [e["tid"] for e in waits] == [0, 1, 2]
+    assert all(e["dur"] >= 0 for e in lanes)
+    # real-clock predict spans live on the real process, not the lanes
+    predicts = [e for e in evs if e["ph"] == "X"
+                and e["name"] == "serve/predict"]
+    assert predicts and all(e["pid"] != SERVE_VPID for e in predicts)
+    procs = {e["pid"]: e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert "virtual clock" in procs[SERVE_VPID]
+
+
+# --------------------------------------------------------------------------
+# merging rank traces
+# --------------------------------------------------------------------------
+
+def _rank_trace(path, pid, spans, virtual_pid=None):
+    t = Tracer(pid=pid, process_name=f"worker{pid}")
+    for name in spans:
+        with t.span(name, cat="driver"):
+            pass
+    if virtual_pid is not None:
+        t.name_process(virtual_pid, "lanes")
+        t.event("lane", 0.0, 1e-3, tid=0, pid=virtual_pid, cat="serve")
+    t.export(str(path))
+
+
+def test_merge_traces_rank_as_pid(tmp_path):
+    a, b = tmp_path / "a.json", tmp_path / "b.json"
+    _rank_trace(a, pid=0, spans=["driver/step"], virtual_pid=100)
+    _rank_trace(b, pid=0, spans=["driver/step", "driver/seeds"])
+    out = tmp_path / "fleet.json"
+    merged = merge_traces([str(a), str(b)], str(out))
+    validate_trace(str(out))
+    xs = [e for e in merged["traceEvents"] if e["ph"] == "X"]
+    by_pid = {}
+    for e in xs:
+        by_pid.setdefault(e["pid"], []).append(e["name"])
+    # rank files' primary pids remapped to 0 and 1
+    assert by_pid[0] == ["driver/step"]
+    assert sorted(by_pid[1][:2]) == ["driver/seeds", "driver/step"]
+    # rank 0's virtual pid 100 shifted into a rank-unique range >= 2
+    (vpid,) = [p for p in by_pid if p not in (0, 1)]
+    assert vpid >= 2 and by_pid[vpid] == ["lane"]
+    names = {e["args"]["name"] for e in merged["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"rank0", "rank1", "lanes"} <= names
+
+
+def test_merge_traces_rejects_corrupt_rank_file(tmp_path):
+    good, bad = tmp_path / "g.json", tmp_path / "b.json"
+    _rank_trace(good, pid=0, spans=["driver/step"])
+    bad.write_text(json.dumps({"traceEvents": [{"ph": "X"}]}))
+    with pytest.raises(ValueError, match="name"):
+        merge_traces([str(good), str(bad)], None)
+
+
+# --------------------------------------------------------------------------
+# 2-rank fleet: per-rank export + supervisor merge (multihost-marked)
+# --------------------------------------------------------------------------
+
+@pytest.mark.multihost
+def test_two_rank_fleet_merged_trace(tmp_path, subproc):
+    from repro.launch import multihost
+
+    base = str(tmp_path / "fleet.json")
+    script = textwrap.dedent(f"""
+        import jax, jax.numpy as jnp
+        from repro.launch import multihost
+        from repro.obs import trace as obs_trace
+
+        rank, num = multihost.init_from_env()
+        t = obs_trace.start(multihost.rank_trace_path({base!r}, rank),
+                            pid=rank, process_name=f"rank{{rank}}")
+        with obs_trace.span("driver/step", cat="driver", step=0):
+            out = jax.jit(lambda x: x * 2)(jnp.ones(4))
+            obs_trace.fence(out)
+        obs_trace.stop()
+        print("rank", rank, "done")
+    """)
+    multihost.launch([sys.executable, "-c", script], num_procs=2,
+                     timeout=300)
+    merged = multihost.merge_rank_traces(base, 2)
+    validate_trace(base)
+    step_pids = {e["pid"] for e in merged["traceEvents"]
+                 if e["ph"] == "X" and e["name"] == "driver/step"}
+    assert step_pids == {0, 1}
+    names = {e["args"]["name"] for e in merged["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"rank0", "rank1"} <= names

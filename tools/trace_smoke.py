@@ -1,0 +1,100 @@
+"""Traced-run smoke (CI): a handful of traced training steps through the
+real launcher, single-process and as a 2-rank multiprocess fleet, then
+validate every artifact against the Chrome trace-event schema and render
+it with the report CLI.
+
+Exercises the full observability path end to end:
+
+  1. ``train_gnn --trace`` (5 steps) — the exported trace validates,
+     contains the driver/prefetch span taxonomy, and
+     ``python -m repro.obs.report <trace> --summary`` renders it.
+  2. ``train_gnn --executor multiprocess --num-procs 2 --trace`` — each
+     rank exports its own file and the supervisor merges them; the
+     merged trace validates, carries BOTH ranks' events under distinct
+     pids, and names the rank process tracks (the rank-as-pid mapping
+     Perfetto groups by).
+
+  PYTHONPATH=src python tools/trace_smoke.py     (or: make trace-smoke)
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+sys.path.insert(0, SRC)
+
+STEPS = 5
+COMMON = ["--devices", "4", "--scheme", "hybrid", "--epochs", "1",
+          "--steps-per-epoch", str(STEPS), "--nodes", "2000",
+          "--batch", "64", "--prefetch-depth", "1"]
+
+
+def _run(extra, env):
+    cmd = [sys.executable, "-m", "repro.launch.train_gnn"] \
+        + COMMON + extra
+    print(f"$ {' '.join(cmd)}")
+    subprocess.run(cmd, check=True, env=env, cwd=ROOT, timeout=600)
+
+
+def _spans(trace, prefix):
+    return [ev for ev in trace["traceEvents"]
+            if ev.get("ph") == "X" and ev["name"].startswith(prefix)]
+
+
+def main() -> None:
+    from repro.obs.trace import validate_trace
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    with tempfile.TemporaryDirectory(prefix="trace-smoke-") as td:
+        # --- single process: 5 traced steps --------------------------
+        single = os.path.join(td, "single.json")
+        _run(["--trace", single], env)
+        n = validate_trace(single)
+        with open(single) as f:
+            trace = json.load(f)
+        steps = _spans(trace, "driver/step")
+        assert len(steps) == STEPS, \
+            f"expected {STEPS} driver/step spans, got {len(steps)}"
+        assert _spans(trace, "prefetch/"), "no prefetch spans recorded"
+        print(f"single-process trace OK: {n} events, "
+              f"{len(steps)} driver/step spans")
+
+        # the report CLI must render the artifact it just produced
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.obs.report", single,
+             "--summary"],
+            check=True, env=env, cwd=ROOT, capture_output=True,
+            text=True, timeout=120).stdout
+        assert "driver/step" in out, f"report render missing spans:\n{out}"
+        print("report render OK")
+
+        # --- 2-rank multiprocess fleet: merged rank-as-pid trace -----
+        fleet = os.path.join(td, "fleet.json")
+        _run(["--executor", "multiprocess", "--num-procs", "2",
+              "--trace", fleet], env)
+        n = validate_trace(fleet)
+        with open(fleet) as f:
+            merged = json.load(f)
+        for r in range(2):
+            path = f"{fleet}.rank{r}"
+            assert os.path.exists(path), f"missing rank trace {path}"
+            validate_trace(path)
+        step_pids = {ev["pid"] for ev in _spans(merged, "driver/step")}
+        assert step_pids == {0, 1}, \
+            f"merged trace must carry both ranks' steps, got {step_pids}"
+        names = {ev["args"]["name"] for ev in merged["traceEvents"]
+                 if ev.get("ph") == "M"
+                 and ev.get("name") == "process_name"}
+        assert {"rank0", "rank1"} <= names, \
+            f"merged trace missing rank process names, got {names}"
+        print(f"merged 2-rank trace OK: {n} events, pids {step_pids}")
+    print("trace smoke OK")
+
+
+if __name__ == "__main__":
+    main()
