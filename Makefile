@@ -28,8 +28,8 @@ docs-check:
 # multi-process executor scaling sweep (real jax.distributed fleets) +
 # the observability arms (tracing overhead + stage-share table)
 bench-smoke:
-	$(PYTHON) -m benchmarks.run cache schemes datasets staging \
-		feature_staging serve multihost obs
+	$(PYTHON) -m benchmarks.run cache schemes datasets partitioning \
+		staging feature_staging serve multihost obs
 
 # traced-run smoke: 5 traced training steps (single-process and 2-rank
 # multiprocess) + Chrome trace-event schema validation + report render

@@ -1,0 +1,12 @@
+"""Partitioner sweep (section ``partitioning``): edge-cut, expected
+rounds, and steps/s per ``repro.core.partition`` registry entry on the
+shared bench graphs.  The sweep itself lives next to the dataset sweep
+(``benchmarks.bench_datasets.partitioning_main``) so both run over the
+identical sources at the identical balance caps.
+
+  PYTHONPATH=src python -m benchmarks.run partitioning
+"""
+from benchmarks.bench_datasets import partitioning_main as main
+
+if __name__ == "__main__":
+    main()

@@ -26,7 +26,7 @@ import time
 import numpy as np
 
 from benchmarks.common import dataset_columns, emit
-from repro.core.cache import degree_hot_ids
+from repro.core.cache import resolve_hot_scorer
 from repro.core.partition import build_layout, partition_graph
 from repro.data.synthetic_graph import make_power_law_graph
 from repro.models.gnn import GNNConfig, init_gnn_params
@@ -64,7 +64,7 @@ def run(ds, P=4, requests=REQUESTS):
                     fanouts=(5, 5), dropout=0.0)
     params = init_gnn_params(__import__("jax").random.key(0), cfg)
     ds_cols = dataset_columns(ds)
-    hot_ids = degree_hot_ids(ds.graph, HOT_K)
+    hot_ids = resolve_hot_scorer("degree").top_ids(ds.graph, HOT_K)
 
     os.makedirs(OUT_DIR, exist_ok=True)
     claims = {}

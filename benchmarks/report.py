@@ -4,11 +4,15 @@ experiments/schemes/*.json (written by ``benchmarks.bench_schemes``) —
 the data-dependent accounting of where ``hybrid_partial`` lands between
 hybrid's 2 and vanilla's 2L rounds — and the dataset-sweep table from
 experiments/datasets/*.json (``benchmarks.bench_datasets``): expected
-rounds per scheme against each graph-source family's skew columns.
+rounds per scheme against each graph-source family's skew columns — and
+the partitioner-sweep table from experiments/partitioning/*.json
+(``benchmarks.bench_datasets.partitioning_main``): edge cut, expected
+rounds, and steps/s per partitioner at equal balance caps.
 
   PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun] \
       [--schemes-dir experiments/schemes] \
-      [--datasets-dir experiments/datasets]
+      [--datasets-dir experiments/datasets] \
+      [--partitioning-dir experiments/partitioning]
 """
 import argparse
 import glob
@@ -228,6 +232,26 @@ def datasets_table(recs):
     return "\n".join(rows)
 
 
+def partitioning_table(recs):
+    """Partitioner-sweep table (bench_datasets.partitioning_main
+    records): per graph-source family x partitioner at equal balance
+    caps, the locality metrics (edge cut, vanilla expected rounds) and
+    trained steps/s — the clustering-vs-streaming win at a glance."""
+    rows = ["| source | partitioner | n | nnz | skew (cv) "
+            "| edge cut | expected rounds (est) | steps/s |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("workload") != "partitioner-sweep":
+            continue
+        rows.append(
+            f"| {r['source']} | {r['partitioner']} | {r['num_nodes']} "
+            f"| {r['num_edges']} | {r['degree_skew']} "
+            f"| {100.0 * r['edge_cut_fraction']:.1f}% "
+            f"| {r['expected_rounds_estimate']:.2f} "
+            f"| {r['steps_per_s']:.2f} |")
+    return "\n".join(rows)
+
+
 def serve_table(recs):
     """Online-serving table (bench_serve records): p50/p99/QPS and
     recycler hit rate per (scheme, bucket config, recycling) arm, all
@@ -322,6 +346,8 @@ def main():
     ap.add_argument("--mesh", default="pod")
     ap.add_argument("--schemes-dir", default="experiments/schemes")
     ap.add_argument("--datasets-dir", default="experiments/datasets")
+    ap.add_argument("--partitioning-dir",
+                    default="experiments/partitioning")
     ap.add_argument("--staging-dir", default="experiments/staging")
     ap.add_argument("--feature-staging-dir",
                     default="experiments/feature_staging")
@@ -344,6 +370,12 @@ def main():
     if ds_recs:
         print("\n## Graph sources (expected rounds vs skew, equal nnz)\n")
         print(datasets_table(ds_recs))
+    pt_recs = load(args.partitioning_dir) \
+        if os.path.isdir(args.partitioning_dir) else []
+    if pt_recs:
+        print("\n## Partitioners (edge cut + expected rounds, "
+              "equal balance caps)\n")
+        print(partitioning_table(pt_recs))
     st_recs = load(args.staging_dir) if os.path.isdir(args.staging_dir) \
         else []
     if st_recs:

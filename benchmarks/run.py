@@ -19,6 +19,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      wall time per store on a skewed graph
   * bench_datasets — scheme x graph-source sweep (repro.data registry):
                      expected rounds vs dataset skew at equal nnz
+  * bench_partitioning — partitioner sweep (repro.core.partition
+                     registry): edge-cut, expected rounds, and steps/s
+                     per partitioner at equal balance caps
   * bench_serve    — online serving (repro.serve): p50/p99/QPS per
                      scheme x bucket config x recycling on/off
   * bench_multihost — multi-process executor scaling: steps/s for
@@ -37,9 +40,10 @@ import sys
 def main() -> None:
     from benchmarks import (bench_cache, bench_datasets, bench_epoch,
                             bench_feature_staging, bench_kernels,
-                            bench_multihost, bench_obs, bench_prefetch,
-                            bench_sampling, bench_schemes, bench_serve,
-                            bench_staging, bench_storage, bench_table1)
+                            bench_multihost, bench_obs, bench_partitioning,
+                            bench_prefetch, bench_sampling, bench_schemes,
+                            bench_serve, bench_staging, bench_storage,
+                            bench_table1)
     mods = {
         "table1": bench_table1,
         "storage": bench_storage,
@@ -52,6 +56,7 @@ def main() -> None:
         "staging": bench_staging,
         "feature_staging": bench_feature_staging,
         "datasets": bench_datasets,
+        "partitioning": bench_partitioning,
         "serve": bench_serve,
         "multihost": bench_multihost,
         "obs": bench_obs,

@@ -4,6 +4,13 @@
  cache frequently accessed remote node features in order to reduce
  communication volume"
 
+Two registries live here.  The ``HotSetScorer`` registry
+(``register_hot_scorer`` / ``resolve_hot_scorer``: "degree", "frequency",
+"blend(w)") is THE shared "who's hot" ranking — the cache policies below,
+``hybrid_partial``'s replication ranking, the ``pinned_hot`` pin set, the
+serving recycler's admission filter, and the hot-set traffic generator
+all resolve through it, with ``rank_by_score`` as the single tie-break.
+
 Cache *construction* is a registry of ``CachePolicy`` entries (mirroring
 ``repro.core.placement`` / ``repro.core.sampler``), selected by
 ``PlanSpec(cache_policy=...)``:
@@ -94,20 +101,201 @@ def _assemble_cache(layout: PartitionLayout, capacity: int,
                         rows=jnp.asarray(rows_out))
 
 
-def degree_hot_ids(graph, k: int | None = None) -> np.ndarray:
-    """Node ids ranked hottest-first by in-degree (ties broken by id asc).
+# --------------------------------------------------------------------------
+# hot-set scorer registry — THE shared "who's hot" ranking
+# --------------------------------------------------------------------------
+# Every consumer of a hot set resolves through here: the ``"degree"`` /
+# ``"frequency"`` cache policies below, ``hybrid_partial``'s replication
+# ranking (``repro.core.placement``), the ``pinned_hot`` store's pin set
+# (the cache IS the pin set), the serving recycler's admission filter
+# (``repro.serve.recycler``), and the hot-set-skewed traffic generator
+# (``repro.serve.traffic``).  One ranking definition means "hot" can never
+# drift between the training and serving sides.
 
-    The shared "who's hot" ranking: under uniform neighbor sampling a
-    node's access frequency is proportional to its in-degree, so this one
-    ordering drives the ``"degree"`` feature-cache policy, the serving
-    recycler's admission filter (``repro.serve.recycler``), and the
-    hot-set-skewed traffic generator (``repro.serve.traffic``).
+def rank_by_score(scores, k: int | None = None) -> np.ndarray:
+    """Node ids ranked hottest-first: score desc, ties broken by id asc.
 
-    Returns the top ``k`` ids (all nodes if ``k`` is None).
+    The single tie-break rule every scorer shares (``lexsort`` over
+    ``(ids, -scores)``), bit-identical to the stable ``argsort(-deg)``
+    the pre-registry call sites used.  Returns the top ``k`` ids (all
+    nodes if ``k`` is None).
     """
-    deg = np.asarray(graph.degrees())
-    ranked = np.argsort(-deg, kind="stable").astype(np.int32)
+    scores = np.asarray(scores)
+    ids = np.arange(scores.shape[0])
+    ranked = ids[np.lexsort((ids, -scores))].astype(np.int32)
     return ranked if k is None else ranked[:k]
+
+
+class HotSetScorer:
+    """Base class of registry entries: maps a graph to per-node hotness
+    scores; ``top_ids`` applies the shared ``rank_by_score`` tie-break.
+
+    ``observe`` folds an access batch into dynamic scorers (frequency /
+    blend) and is a no-op for static ones, so serving loops can feed any
+    scorer uniformly."""
+
+    name: str = "?"
+
+    def scores(self, graph) -> np.ndarray:
+        """(num_nodes,) hotness scores, higher = hotter."""
+        raise NotImplementedError
+
+    def top_ids(self, graph, k: int | None = None) -> np.ndarray:
+        """Top-``k`` hottest node ids (all nodes if ``k`` is None)."""
+        return rank_by_score(self.scores(graph), k)
+
+    def observe(self, ids) -> None:
+        """Fold an access batch into the scorer (no-op when static)."""
+
+
+class DegreeScorer(HotSetScorer):
+    """Static: hotness = in-degree (under uniform neighbor sampling a
+    node's access frequency is proportional to its in-degree)."""
+
+    name = "degree"
+
+    def scores(self, graph) -> np.ndarray:
+        return np.asarray(graph.degrees())
+
+
+class FrequencyScorer(HotSetScorer):
+    """Dynamic: hotness = the ``FrequencyTracker``'s decayed observed
+    access counts.  The tracker is created lazily on the first
+    ``scores(graph)`` call (or pass one in to share it with a serving
+    loop); with zero observations every score is 0 and ``top_ids`` falls
+    back to plain id order."""
+
+    name = "frequency"
+
+    def __init__(self, tracker: "FrequencyTracker | None" = None, *,
+                 decay: float = 1.0):
+        self.tracker = tracker
+        self._decay = float(decay)
+
+    def _ensure(self, num_nodes: int) -> "FrequencyTracker":
+        if self.tracker is None:
+            self.tracker = FrequencyTracker(num_nodes, decay=self._decay)
+        if self.tracker.num_nodes != num_nodes:
+            raise ValueError(
+                f"frequency scorer's tracker covers "
+                f"{self.tracker.num_nodes} nodes, graph has {num_nodes}")
+        return self.tracker
+
+    def observe(self, ids) -> None:
+        if self.tracker is None:
+            raise ValueError(
+                "frequency scorer has no tracker yet: call scores()/"
+                "top_ids() once, or construct with FrequencyScorer("
+                "FrequencyTracker(num_nodes))")
+        self.tracker.observe(ids)
+
+    def scores(self, graph) -> np.ndarray:
+        return self._ensure(graph.num_nodes).counts
+
+
+class BlendScorer(HotSetScorer):
+    """Composable: ``w * degree + (1 - w) * frequency``, each normalized
+    to [0, 1] by its max.  With no observations yet the frequency term is
+    zero, so ``blend(w)`` for any ``w > 0`` starts at the degree ranking
+    and drifts toward the observed distribution as accesses arrive."""
+
+    name = "blend"
+
+    def __init__(self, weight: float = 0.5, *extra,
+                 tracker: "FrequencyTracker | None" = None,
+                 decay: float = 1.0):
+        if extra:
+            raise ValueError(f"blend takes at most one parameter "
+                             f"(the degree weight), got {(weight,) + extra}")
+        weight = float(weight)
+        if not 0.0 <= weight <= 1.0:
+            raise ValueError(f"blend weight must be in [0, 1], got {weight}")
+        self.weight = weight
+        self.degree = DegreeScorer()
+        self.frequency = FrequencyScorer(tracker, decay=decay)
+
+    def observe(self, ids) -> None:
+        self.frequency.observe(ids)
+
+    def scores(self, graph) -> np.ndarray:
+        d = self.degree.scores(graph).astype(np.float64)
+        f = np.asarray(self.frequency.scores(graph), np.float64)
+        if d.size and d.max() > 0:
+            d = d / d.max()
+        if f.size and f.max() > 0:
+            f = f / f.max()
+        return self.weight * d + (1.0 - self.weight) * f
+
+
+_HOT_SCORERS: dict[str, Callable[..., HotSetScorer]] = {}
+
+
+def register_hot_scorer(name: str, factory: Callable[..., HotSetScorer],
+                        *, overwrite: bool = False) -> None:
+    """Register ``factory(*params) -> HotSetScorer`` under ``name``
+    (``params`` are the floats of the inline form ``"blend(0.7)"``)."""
+    if not overwrite and name in _HOT_SCORERS \
+            and _HOT_SCORERS[name] is not factory:
+        raise ValueError(f"hot-set scorer {name!r} already registered; "
+                         f"pass overwrite=True to replace it")
+    _HOT_SCORERS[name] = factory
+
+
+def available_hot_scorers() -> tuple[str, ...]:
+    """Sorted names of registered hot-set scorers.
+
+    Examples
+    --------
+    >>> set(available_hot_scorers()) >= {"degree", "frequency", "blend"}
+    True
+    """
+    return tuple(sorted(_HOT_SCORERS))
+
+
+def resolve_hot_scorer(name: str) -> HotSetScorer:
+    """Instantiate the scorer registered under ``name`` (inline float
+    parameters parse via the shared ``repro.data.naming`` grammar, e.g.
+    ``"blend(0.7)"`` or ``"frequency(0.9)"`` for a decay).  Raises
+    ``KeyError`` listing the available names when unknown."""
+    from repro.data.naming import parse_param_name
+    base, params = parse_param_name(name, "hot-set scorer")
+    try:
+        factory = _HOT_SCORERS[base]
+    except KeyError:
+        raise KeyError(f"unknown hot-set scorer {name!r}; "
+                       f"available: {available_hot_scorers()}") from None
+    return factory(*params)
+
+
+def _degree_factory(*params):
+    if params:
+        raise ValueError(f"scorer 'degree' takes no parameters, "
+                         f"got {params}")
+    return DegreeScorer()
+
+
+def _frequency_factory(*params):
+    if len(params) > 1:
+        raise ValueError(f"scorer 'frequency' takes at most one parameter "
+                         f"(the decay), got {params}")
+    return FrequencyScorer(decay=params[0] if params else 1.0)
+
+
+register_hot_scorer("degree", _degree_factory)
+register_hot_scorer("frequency", _frequency_factory)
+register_hot_scorer("blend", lambda *p: BlendScorer(*p))
+
+
+def degree_hot_ids(graph, k: int | None = None) -> np.ndarray:
+    """Deprecated alias of the ``"degree"`` hot-set scorer — prefer
+    ``resolve_hot_scorer("degree").top_ids(graph, k)`` (bit-identical
+    ranking; same tie-break via ``rank_by_score``)."""
+    warnings.warn(
+        "repro.core.cache.degree_hot_ids is deprecated; use "
+        "resolve_hot_scorer('degree').top_ids(graph, k) from the hot-set "
+        "scorer registry",
+        DeprecationWarning, stacklevel=2)
+    return resolve_hot_scorer("degree").top_ids(graph, k)
 
 
 class FrequencyTracker:
@@ -141,10 +329,9 @@ class FrequencyTracker:
         self.total_observed += ids.size
 
     def topk(self, k: int) -> np.ndarray:
-        """Top-``k`` ids by decayed count desc, ties by id asc."""
-        ids = np.arange(self.num_nodes)
-        ranked = ids[np.lexsort((ids, -self.counts))]
-        return ranked[:k].astype(np.int32)
+        """Top-``k`` ids by decayed count desc, ties by id asc (the
+        shared ``rank_by_score`` tie-break)."""
+        return rank_by_score(self.counts, k)
 
     def is_hot(self, ids, k: int) -> np.ndarray:
         """Boolean mask: is each id currently in the top-``k`` set?"""
@@ -163,7 +350,7 @@ def degree_caches(layout: PartitionLayout, capacity: int,
     offsets = np.asarray(layout.offsets)
     P = layout.num_parts
 
-    all_ids = degree_hot_ids(layout.graph)
+    all_ids = resolve_hot_scorer("degree").top_ids(layout.graph)
     # loop-invariant: ownership of the degree-ranked ids
     owner = np.searchsorted(offsets, all_ids, side="right") - 1
     picks = [all_ids[owner != p][:capacity] for p in range(P)]
@@ -211,9 +398,9 @@ def frequency_caches(layout: PartitionLayout, capacity: int, *,
     for p in range(P):
         c = counts[p].copy()
         c[owner == p] = 0                      # local rows are free anyway
-        accessed = np.nonzero(c > 0)[0]
-        # deterministic order: by observed frequency desc, then id asc
-        ranked = accessed[np.lexsort((accessed, -c[accessed]))]
+        # shared rank_by_score tie-break, restricted to accessed nodes
+        ranked = rank_by_score(c)
+        ranked = ranked[c[ranked] > 0]
         picks.append(ranked[:capacity])
     return _assemble_cache(layout, capacity, picks)
 

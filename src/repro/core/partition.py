@@ -2,13 +2,42 @@
 
 The paper uses METIS for edge-cut partitioning with three balance targets:
 nodes, edges, and *labeled nodes* per partition (so every machine draws the
-same number of seeds per epoch).  METIS is unavailable offline; we implement
-a BFS-ordered linear deterministic greedy (LDG) streaming partitioner with
-the same invariants, which tests enforce:
+same number of seeds per epoch).  Partitioning is a ``Partitioner``
+registry (``register_partitioner`` / ``resolve_partitioner``, mirroring
+the placement-scheme and graph-source registries) selected by
+``repro.pipeline.PlanSpec(partitioner=...)``:
+
+  ``"ldg"``        BFS-ordered linear deterministic greedy — the default.
+                   One entry covers both the in-memory pass
+                   (``partition_graph``) and the single-pass edge-stream
+                   variant (``partition_graph_streaming``) via
+                   ``assign`` / ``assign_stream``.
+  ``"metis"``      the paper's METIS, when the optional ``pymetis``
+                   package is importable (a clean ``ImportError``
+                   otherwise); caps repaired + a refinement sweep so the
+                   labeled balance target holds.
+  ``"labelprop"``  pure-numpy clustering fallback, no optional deps:
+                   LDG-initialized capacity-constrained label propagation
+                   accepting only strictly cut-reducing moves — edge cut
+                   is monotonically non-increasing from the LDG start.
+                   ``"labelprop(K)"`` sets the sweep budget.
+  ``"random"`` / ``"hash"``   hash-shuffled round-robin baseline: the
+                   locality floor every clustering claim is measured
+                   against (perfect node + labeled balance, edge-cut
+                   ≈ 1 - 1/P).
+
+Every entry produces the same ``assign`` contract consumed by
+``build_layout`` — ``(num_nodes,) int32`` in ``[0, num_parts)`` — and the
+registry boundary (``Partitioner.assign`` / ``assign_stream``) enforces
+the invariants the tests rely on:
 
   * every node assigned to exactly one partition,
-  * node counts balanced within a slack factor,
-  * labeled-node counts balanced within a slack factor,
+  * node counts balanced within the slack cap,
+  * labeled-node counts balanced best-effort (hard-capped where jointly
+    feasible — see ``_LDGState.place``),
+  * deterministic in ``(graph, num_parts, labeled_mask, seed)`` — a
+    contract each entry keeps (pure numpy / seeded METIS), re-checked
+    per entry by ``tests/test_partitioners.py``,
   * edge-cut reported (minimized best-effort, not optimality-guaranteed).
 
 After partitioning we RELABEL nodes so partition p owns the contiguous id
@@ -27,6 +56,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -213,6 +243,403 @@ def edge_cut(graph: CSCGraph, assign: np.ndarray) -> int:
     indices = np.asarray(graph.indices)
     dsts = csr_view(graph).dsts
     return int(np.sum(assign[dsts] != assign[indices]))
+
+
+# --------------------------------------------------------------------------
+# partitioner registry
+# --------------------------------------------------------------------------
+
+def _validate_assign(assign: np.ndarray, num_nodes: int, num_parts: int,
+                     slack: float, who: str) -> np.ndarray:
+    """The registry-boundary half of the ``assign`` contract: totality,
+    range, dtype, and the node balance cap.  (The labeled cap is
+    best-effort by design — see the module docstring — and determinism is
+    a per-entry contract re-checked by the test suite.)"""
+    assign = np.asarray(assign)
+    if assign.shape != (num_nodes,):
+        raise ValueError(f"partitioner {who!r} returned shape "
+                         f"{assign.shape}, expected ({num_nodes},)")
+    if not np.issubdtype(assign.dtype, np.integer):
+        raise ValueError(f"partitioner {who!r} returned dtype "
+                         f"{assign.dtype}, expected an integer type")
+    if assign.size and (assign.min() < 0 or assign.max() >= num_parts):
+        raise ValueError(f"partitioner {who!r} assigned ids outside "
+                         f"[0, {num_parts})")
+    counts = np.bincount(assign, minlength=num_parts)
+    cap = slack * num_nodes / num_parts + 1
+    if counts.max() > cap:
+        raise ValueError(
+            f"partitioner {who!r} violated the node balance cap: max "
+            f"partition holds {int(counts.max())} nodes, cap is {cap:.1f} "
+            f"(slack={slack}, n={num_nodes}, P={num_parts})")
+    return assign.astype(np.int32)
+
+
+class Partitioner:
+    """Base class of registry entries: one named edge-cut placement
+    strategy producing the ``assign`` contract ``build_layout`` consumes.
+
+    Subclasses implement ``_assign`` (in-memory) and optionally
+    ``_assign_stream`` (single-pass over an edge-chunk iterable, for COO
+    that never fits in memory — set ``supports_streaming = True``).  The
+    public ``assign`` / ``assign_stream`` wrappers are the registry
+    boundary: they normalize the labeled mask and validate the contract
+    (totality, range, node balance cap) on every result, so a
+    mis-behaving third-party entry fails loudly instead of corrupting the
+    layout.  Entries must be deterministic in
+    ``(graph, num_parts, labeled_mask, seed)``.
+    """
+
+    name: str = "?"
+    supports_streaming: bool = False
+
+    def assign(self, graph: CSCGraph, num_parts: int, labeled_mask,
+               *, seed: int = 0, slack: float = 1.05,
+               labeled_slack: float | None = None) -> np.ndarray:
+        """Partition ``graph``; returns validated (n,) int32 in [0, P)."""
+        labeled = np.asarray(labeled_mask).astype(bool)
+        out = self._assign(graph, num_parts, labeled, seed=seed,
+                           slack=slack, labeled_slack=labeled_slack)
+        return _validate_assign(out, graph.num_nodes, num_parts, slack,
+                                self.name)
+
+    def assign_stream(self, edge_chunks, num_nodes: int, num_parts: int,
+                      labeled_mask, *, seed: int = 0, slack: float = 1.05,
+                      labeled_slack: float | None = None) -> np.ndarray:
+        """Partition from an edge-chunk stream (``(dst, src)`` pairs, see
+        ``repro.data.ingest``); same validated contract as ``assign``."""
+        if not self.supports_streaming:
+            raise NotImplementedError(
+                f"partitioner {self.name!r} has no streaming variant; "
+                f"materialize the graph (repro.data.csc_from_edge_stream) "
+                f"and call assign, or use 'ldg'")
+        labeled = np.asarray(labeled_mask).astype(bool)
+        out = self._assign_stream(edge_chunks, num_nodes, num_parts,
+                                  labeled, seed=seed, slack=slack,
+                                  labeled_slack=labeled_slack)
+        return _validate_assign(out, num_nodes, num_parts, slack, self.name)
+
+    # -- subclass hooks -----------------------------------------------------
+    def _assign(self, graph, num_parts, labeled, *, seed, slack,
+                labeled_slack) -> np.ndarray:
+        raise NotImplementedError
+
+    def _assign_stream(self, edge_chunks, num_nodes, num_parts, labeled,
+                       *, seed, slack, labeled_slack) -> np.ndarray:
+        raise NotImplementedError
+
+
+class LDGPartitioner(Partitioner):
+    """The repo's default: BFS-ordered linear deterministic greedy, with
+    the chunked single-pass variant behind the same entry (the streaming
+    result depends on chunk granularity — NOT bit-equal to in-memory)."""
+
+    name = "ldg"
+    supports_streaming = True
+
+    def _assign(self, graph, num_parts, labeled, *, seed, slack,
+                labeled_slack):
+        return partition_graph(graph, num_parts, labeled, seed=seed,
+                               slack=slack, labeled_slack=labeled_slack)
+
+    def _assign_stream(self, edge_chunks, num_nodes, num_parts, labeled,
+                       *, seed, slack, labeled_slack):
+        # the streaming pass is order-determined: seed has nothing to vary
+        return partition_graph_streaming(edge_chunks, num_nodes, num_parts,
+                                         labeled, slack=slack,
+                                         labeled_slack=labeled_slack)
+
+
+def _hash_assign(num_nodes: int, num_parts: int, labeled: np.ndarray,
+                 seed: int) -> np.ndarray:
+    """Hash-shuffled round-robin: labeled and unlabeled nodes are dealt
+    separately, so BOTH balance targets hold within one node per
+    partition — the locality-free baseline."""
+    salt = np.uint64((int(seed) * 0x9E3779B97F4A7C15
+                      + 0x632BE59BD9B4E019) % (2 ** 64))
+    key = mix64(np.arange(num_nodes, dtype=np.uint64) + salt)
+    order = np.argsort(key, kind="stable")
+    assign = np.empty(num_nodes, np.int32)
+    lab_order = order[labeled[order]]
+    unlab_order = order[~labeled[order]]
+    assign[lab_order] = np.arange(lab_order.size) % num_parts
+    # deal the unlabeled remainder against per-partition quotas so TOTAL
+    # counts stay within one of n/P even when labels are nearly all nodes
+    sizes = np.full(num_parts, num_nodes // num_parts, np.int64)
+    sizes[: num_nodes % num_parts] += 1
+    lab_counts = np.bincount(assign[lab_order], minlength=num_parts) \
+        if lab_order.size else np.zeros(num_parts, np.int64)
+    quota = sizes - lab_counts
+    while (quota < 0).any():         # labeled ceil landed on a floor slot
+        quota[int(np.argmin(quota))] += 1
+        quota[int(np.argmax(quota))] -= 1
+    seq = np.repeat(np.arange(num_parts, dtype=np.int32), quota)
+    assign[unlab_order] = seq[: unlab_order.size]
+    return assign
+
+
+class HashPartitioner(Partitioner):
+    """``random`` / ``hash`` baseline: ignores topology entirely.  Its
+    edge cut (≈ 1 - 1/P) is the floor every locality-aware entry is
+    measured against; streaming is trivial (edges are never read)."""
+
+    name = "random"
+    supports_streaming = True
+
+    def _assign(self, graph, num_parts, labeled, *, seed, slack,
+                labeled_slack):
+        return _hash_assign(graph.num_nodes, num_parts, labeled, seed)
+
+    def _assign_stream(self, edge_chunks, num_nodes, num_parts, labeled,
+                       *, seed, slack, labeled_slack):
+        return _hash_assign(num_nodes, num_parts, labeled, seed)
+
+
+def refine_partition(graph: CSCGraph, assign: np.ndarray, num_parts: int,
+                     labeled_mask, *, slack: float = 1.05,
+                     labeled_slack: float | None = None,
+                     sweeps: int = 10) -> np.ndarray:
+    """Capacity-constrained label-propagation refinement.
+
+    Sweeps nodes in id order; a node moves to the partition holding the
+    most of its (in + out) neighbors iff the move STRICTLY reduces the
+    edge cut and the target partition is below both the node cap and
+    (for labeled nodes) the labeled cap — so the refined assignment's
+    edge cut is monotonically non-increasing from the start point and
+    every balance invariant of the input is preserved.  Deterministic
+    (fixed sweep order, ties keep the lowest partition id); stops early
+    when a sweep moves nothing.
+    """
+    if labeled_slack is None:
+        labeled_slack = slack
+    n = graph.num_nodes
+    indptr = np.asarray(graph.indptr)
+    indices = np.asarray(graph.indices)
+    view = csr_view(graph)
+    out_indptr, out_indices = view.indptr, view.indices
+    labeled = np.asarray(labeled_mask).astype(bool)
+    assign = np.asarray(assign, np.int32).copy()
+    cap_nodes = slack * n / num_parts
+    cap_labeled = max(1.0, labeled_slack * labeled.sum() / num_parts)
+    load_nodes = np.bincount(assign, minlength=num_parts).astype(float)
+    load_labeled = np.bincount(assign[labeled],
+                               minlength=num_parts).astype(float)
+    for _ in range(int(sweeps)):
+        moved = 0
+        for v in range(n):
+            nb = np.concatenate(
+                [indices[indptr[v]:indptr[v + 1]],
+                 out_indices[out_indptr[v]:out_indptr[v + 1]]])
+            if nb.size == 0:
+                continue
+            cur = int(assign[v])
+            score = np.bincount(assign[nb], minlength=num_parts)
+            ok = load_nodes < cap_nodes
+            if labeled[v]:
+                ok &= load_labeled < cap_labeled
+            ok[cur] = False
+            gain = np.where(ok, score - score[cur], -1)
+            best = int(np.argmax(gain))
+            if gain[best] > 0:
+                assign[v] = best
+                load_nodes[cur] -= 1
+                load_nodes[best] += 1
+                if labeled[v]:
+                    load_labeled[cur] -= 1
+                    load_labeled[best] += 1
+                moved += 1
+        if moved == 0:
+            break
+    return assign
+
+
+class LabelPropPartitioner(Partitioner):
+    """Pure-numpy clustering entry, no optional deps: seed with the LDG
+    placement, then run ``refine_partition`` sweeps.  Because refinement
+    only accepts strictly cut-reducing, cap-respecting moves, this
+    entry's edge cut is <= LDG's on every graph — the fallback that
+    carries the "clustering beats streaming placement" claim when METIS
+    is unavailable.  ``"labelprop(K)"`` sets the sweep budget."""
+
+    name = "labelprop"
+
+    def __init__(self, sweeps: float = 10, *extra):
+        if extra:
+            raise ValueError(
+                f"labelprop takes at most one parameter (sweeps), got "
+                f"{(sweeps,) + extra}")
+        sweeps = int(sweeps)
+        if sweeps < 1:
+            raise ValueError(f"labelprop sweeps must be >= 1, got {sweeps}")
+        self.sweeps = sweeps
+
+    def _assign(self, graph, num_parts, labeled, *, seed, slack,
+                labeled_slack):
+        base = partition_graph(graph, num_parts, labeled, seed=seed,
+                               slack=slack, labeled_slack=labeled_slack)
+        return refine_partition(graph, base, num_parts, labeled,
+                                slack=slack, labeled_slack=labeled_slack,
+                                sweeps=self.sweeps)
+
+
+class MetisPartitioner(Partitioner):
+    """The paper's partitioner, importable only when the optional
+    ``pymetis`` package is installed (the CI optional-deps leg; this
+    container's tests skip).  METIS balances nodes but knows nothing of
+    the labeled target, so its result is cap-repaired and then passed
+    through one ``refine_partition`` budget with both caps active."""
+
+    name = "metis"
+
+    def __init__(self):
+        try:
+            import pymetis
+        except ImportError:
+            raise ImportError(
+                "partitioner 'metis' needs the optional dependency "
+                "pymetis (pip install pymetis); use 'labelprop' for a "
+                "pure-numpy clustering partitioner") from None
+        self._pymetis = pymetis
+
+    def _assign(self, graph, num_parts, labeled, *, seed, slack,
+                labeled_slack):
+        n = graph.num_nodes
+        indices = np.asarray(graph.indices, np.int64)
+        dsts = csr_view(graph).dsts.astype(np.int64)
+        # METIS wants a symmetric, loop-free adjacency
+        u = np.concatenate([dsts, indices])
+        w = np.concatenate([indices, dsts])
+        keep = u != w
+        pairs = np.unique(np.stack([u[keep], w[keep]], axis=1), axis=0)
+        xadj = np.zeros(n + 1, np.int64)
+        np.cumsum(np.bincount(pairs[:, 0], minlength=n), out=xadj[1:])
+        kwargs = {}
+        options = getattr(self._pymetis, "Options", None)
+        if options is not None:
+            try:
+                kwargs["options"] = options(seed=int(seed))
+            except TypeError:       # older pymetis: unseedable, still
+                pass                # deterministic for fixed inputs
+        try:
+            _, membership = self._pymetis.part_graph(
+                num_parts, xadj=xadj, adjncy=pairs[:, 1], **kwargs)
+        except TypeError:           # build without the options kwarg
+            _, membership = self._pymetis.part_graph(
+                num_parts, xadj=xadj, adjncy=pairs[:, 1])
+        assign = _repair_caps(graph, np.asarray(membership, np.int32),
+                              num_parts, labeled, slack, labeled_slack)
+        return refine_partition(graph, assign, num_parts, labeled,
+                                slack=slack, labeled_slack=labeled_slack,
+                                sweeps=2)
+
+
+def _repair_caps(graph: CSCGraph, assign: np.ndarray, num_parts: int,
+                 labeled: np.ndarray, slack: float,
+                 labeled_slack: float | None) -> np.ndarray:
+    """Evict lowest-degree nodes from over-cap partitions into the
+    least-loaded open ones until both balance targets hold (used on
+    partitioners, like METIS, whose native balancing ignores our caps)."""
+    if labeled_slack is None:
+        labeled_slack = slack
+    n = graph.num_nodes
+    assign = np.asarray(assign, np.int32).copy()
+    deg = np.asarray(graph.degrees())
+    cap_nodes = slack * n / num_parts
+    cap_labeled = max(1.0, labeled_slack * labeled.sum() / num_parts)
+    load_nodes = np.bincount(assign, minlength=num_parts).astype(float)
+    load_labeled = np.bincount(assign[labeled],
+                               minlength=num_parts).astype(float)
+
+    def evict(p: int, need_labeled: bool) -> None:
+        members = np.flatnonzero(assign == p)
+        if need_labeled:
+            members = members[labeled[members]]
+        members = members[np.argsort(deg[members], kind="stable")]
+        for v in members:
+            ok = load_nodes < cap_nodes
+            if labeled[v]:
+                ok &= load_labeled < cap_labeled
+            ok[p] = False
+            if not ok.any():
+                break
+            q = int(np.argmin(np.where(ok, load_nodes, np.inf)))
+            assign[v] = q
+            load_nodes[p] -= 1
+            load_nodes[q] += 1
+            if labeled[v]:
+                load_labeled[p] -= 1
+                load_labeled[q] += 1
+            over = load_labeled[p] > cap_labeled if need_labeled \
+                else load_nodes[p] > cap_nodes
+            if not over:
+                break
+
+    for p in range(num_parts):
+        if load_nodes[p] > cap_nodes:
+            evict(p, need_labeled=False)
+    for p in range(num_parts):
+        if load_labeled[p] > cap_labeled:
+            evict(p, need_labeled=True)
+    return assign
+
+
+_PARTITIONERS: dict[str, Callable[..., Partitioner]] = {}
+
+
+def register_partitioner(name: str, factory: Callable[..., Partitioner],
+                         *, overwrite: bool = False) -> None:
+    """Register ``factory(*params) -> Partitioner`` under ``name``
+    (``params`` are the floats of the inline form ``"name(p1,p2)"``)."""
+    if not overwrite and name in _PARTITIONERS \
+            and _PARTITIONERS[name] is not factory:
+        raise ValueError(f"partitioner {name!r} already registered; "
+                         f"pass overwrite=True to replace it")
+    _PARTITIONERS[name] = factory
+
+
+def available_partitioners() -> tuple[str, ...]:
+    """Sorted names of registered partitioners.
+
+    Examples
+    --------
+    >>> set(available_partitioners()) >= {"ldg", "labelprop", "random"}
+    True
+    """
+    return tuple(sorted(_PARTITIONERS))
+
+
+def resolve_partitioner(name: str) -> Partitioner:
+    """Instantiate the partitioner registered under ``name``.
+
+    ``name`` may carry inline float parameters (``"labelprop(4)"``),
+    parsed by the shared ``repro.data.naming`` grammar.  Raises
+    ``KeyError`` listing the available names when unknown;
+    ``"metis"`` raises ``ImportError`` when ``pymetis`` is absent.
+    """
+    from repro.data.naming import parse_param_name
+    base, params = parse_param_name(name, "partitioner")
+    try:
+        factory = _PARTITIONERS[base]
+    except KeyError:
+        raise KeyError(f"unknown partitioner {name!r}; "
+                       f"available: {available_partitioners()}") from None
+    return factory(*params)
+
+
+def _no_params(cls):
+    def factory(*params):
+        if params:
+            raise ValueError(f"partitioner {cls.name!r} takes no "
+                             f"parameters, got {params}")
+        return cls()
+    return factory
+
+
+register_partitioner("ldg", _no_params(LDGPartitioner))
+register_partitioner("labelprop", lambda *p: LabelPropPartitioner(*p))
+register_partitioner("metis", _no_params(MetisPartitioner))
+register_partitioner("random", _no_params(HashPartitioner))
+register_partitioner("hash", _no_params(HashPartitioner))
 
 
 # --------------------------------------------------------------------------

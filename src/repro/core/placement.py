@@ -89,6 +89,14 @@ class PlacementPlan:
     num_parts: int
     local_indptr: jnp.ndarray | None = None
     local_indices: jnp.ndarray | None = None
+    # fraction of edges whose source lives on a different partition than
+    # their destination — the first-order probability that an exchanged
+    # frontier request actually leaves its worker.  1.0 (the conservative
+    # structural value) for plans built without a layout; set from the
+    # actual partitioning by ``scheme.build(layout)``, which is what makes
+    # ``expected_rounds`` a measured function of the PARTITIONER, not just
+    # the scheme.
+    remote_source_fraction: float = 1.0
 
     # -- convenience delegation --------------------------------------------
     def sample(self, shard, seeds, fanouts, salt, *, level_fn=None,
@@ -122,6 +130,27 @@ class PlacementPlan:
     def replicated_graph(self) -> CSCGraph | None:
         """Fully-replicated topology, when the scheme has one (hybrid)."""
         return None
+
+
+def _remote_edge_mass(layout, src_mask: np.ndarray | None = None) -> float:
+    """Fraction of the layout's edges whose source is owned by a
+    different partition than their destination (optionally restricted to
+    edges whose source satisfies ``src_mask``) — the probability mass of
+    frontier draws that must cross the fabric during an exchange round.
+    Pure numpy over the relabeled CSC; no CSR view is materialized."""
+    graph = layout.graph
+    indptr = np.asarray(graph.indptr)
+    indices = np.asarray(graph.indices)
+    if indices.size == 0:
+        return 0.0
+    offsets = np.asarray(layout.offsets)
+    node_owner = (np.searchsorted(offsets, np.arange(graph.num_nodes),
+                                  side="right") - 1)
+    owner_dst = np.repeat(node_owner, np.diff(indptr))
+    remote = node_owner[indices] != owner_dst
+    if src_mask is not None:
+        remote &= src_mask[indices]
+    return float(np.mean(remote))
 
 
 def _placeholder_topology(num_parts: int):
@@ -160,8 +189,12 @@ class PartialPlacementPlan(PlacementPlan):
         Number of hot nodes (``complete`` when == n).
     cold_source_fraction : float
         Fraction of edges whose *source* is cold — the probability mass of
-        frontier draws that must fall back to the exchange protocol, which
-        drives the expected-round estimate.
+        frontier draws that must fall back to the exchange protocol.
+    cold_remote_source_fraction : float
+        Fraction of edges whose source is cold AND owned by a different
+        partition than the destination — the cold request mass that
+        actually crosses the fabric, which drives the expected-round
+        estimate (and is where the partitioner choice shows up).
     replicated_edges : int
         In-edges replicated per worker (the memory cost knob).
     replicated_edge_fraction : float
@@ -172,6 +205,7 @@ class PartialPlacementPlan(PlacementPlan):
     frac: float = 0.0
     hot_count: int = 0
     cold_source_fraction: float = 1.0
+    cold_remote_source_fraction: float = 1.0
     replicated_edges: int = 0
     replicated_edge_fraction: float = 0.0
 
@@ -245,7 +279,9 @@ class VanillaScheme(PlacementScheme):
         return PlacementPlan(scheme=self, offsets=layout.offsets,
                              num_parts=layout.num_parts,
                              local_indptr=vplan.local_indptr,
-                             local_indices=vplan.local_indices)
+                             local_indices=vplan.local_indices,
+                             remote_source_fraction=_remote_edge_mass(
+                                 layout))
 
     def sample(self, plan, shard, seeds, fanouts, salt, *, level_fn=None,
                fused: bool = False, counter=None):
@@ -255,6 +291,17 @@ class VanillaScheme(PlacementScheme):
 
     def trace_sampling_rounds(self, num_layers: int, plan=None) -> int:
         return 2 * (num_layers - 1)
+
+    def expected_sampling_rounds(self, plan, num_layers: int) -> float:
+        """Each of the 2(L-1) structural exchange rounds is *utilized* in
+        proportion to the request mass that actually leaves its worker —
+        first order, the partitioner's cross-partition edge mass.  A
+        better partitioner therefore lowers this estimate at an unchanged
+        structural count."""
+        if plan is None:
+            return float(self.trace_sampling_rounds(num_layers))
+        return (2.0 * (num_layers - 1)
+                * float(plan.remote_source_fraction))
 
 
 class HybridScheme(PlacementScheme):
@@ -316,7 +363,13 @@ class HybridPartialScheme(PlacementScheme):
             raise ValueError(f"replicate_frac must be in [0, 1], got {frac}")
         self.frac = frac
 
+    # hot-set scorer registry name ranking the replication candidates
+    # (``repro.core.cache.resolve_hot_scorer``); "degree" reproduces the
+    # pre-registry stable in-degree argsort bit-identically
+    hot_scorer = "degree"
+
     def build(self, layout) -> PartialPlacementPlan:
+        from repro.core.cache import resolve_hot_scorer
         from repro.core.partition import build_vanilla
 
         graph = layout.graph
@@ -326,7 +379,7 @@ class HybridPartialScheme(PlacementScheme):
         deg = np.diff(indptr)
 
         k = int(np.round(self.frac * n))
-        hot_ids = np.argsort(-deg, kind="stable")[:k]
+        hot_ids = resolve_hot_scorer(self.hot_scorer).top_ids(graph, k)
         hot_mask = np.zeros(n, bool)
         hot_mask[hot_ids] = True
 
@@ -342,6 +395,7 @@ class HybridPartialScheme(PlacementScheme):
 
         num_edges = max(int(indices.size), 1)
         cold_src = float(np.mean(~hot_mask[indices])) if indices.size else 0.0
+        cold_remote = _remote_edge_mass(layout, src_mask=~hot_mask)
         replicated = int(hot_deg.sum())
 
         # workers keep their vanilla partition slice to serve cold requests
@@ -351,10 +405,12 @@ class HybridPartialScheme(PlacementScheme):
             num_parts=layout.num_parts,
             local_indptr=vplan.local_indptr,
             local_indices=vplan.local_indices,
+            remote_source_fraction=_remote_edge_mass(layout),
             hot_graph=hot_graph,
             hot_mask=jnp.asarray(hot_mask),
             frac=self.frac, hot_count=k,
             cold_source_fraction=cold_src,
+            cold_remote_source_fraction=cold_remote,
             replicated_edges=replicated,
             replicated_edge_fraction=replicated / num_edges)
 
@@ -415,12 +471,16 @@ class HybridPartialScheme(PlacementScheme):
     def expected_sampling_rounds(self, plan, num_layers: int) -> float:
         """First-order utilized-round estimate: each of the 2(L-1)
         exchange rounds is utilized in proportion to the cold request
-        mass (the fraction of frontier draws whose node is cold)."""
+        mass that actually crosses partitions (cold source AND remote
+        owner) — at ``frac=0`` this degenerates to the vanilla estimate
+        on the same layout, and a lower-edge-cut partitioner lowers it
+        for every ``frac``."""
         if plan is None:
             return 0.0 if self.frac >= 1.0 else 2.0 * (num_layers - 1)
         if plan.complete:
             return 0.0
-        return 2.0 * (num_layers - 1) * float(plan.cold_source_fraction)
+        return (2.0 * (num_layers - 1)
+                * float(plan.cold_remote_source_fraction))
 
 
 # --------------------------------------------------------------------------

@@ -17,7 +17,7 @@ import tempfile
 import numpy as np
 
 from repro.core.graph import validate_csc
-from repro.core.partition import partition_graph_streaming
+from repro.core.partition import resolve_partitioner
 from repro.data import (available_sources, csc_from_edge_stream,
                         dataset_stats, iter_edge_chunks, load_dataset,
                         resolve_source, save_dataset, stats_label,
@@ -73,9 +73,10 @@ def check_family(name: str, num_nodes: int, avg_degree: int,
         lambda: stream_edges(loaded, chunk_edges=311), ds.graph.num_nodes)
     _eq(g_disk.indices, ds.graph.indices, f"{name} disk stream indices")
 
-    # streaming partitioner holds the balance invariants on this family
+    # streaming partitioner (via the registry) holds the balance
+    # invariants on this family
     P = 4
-    assign = partition_graph_streaming(
+    assign = resolve_partitioner("ldg").assign_stream(
         iter_edge_chunks(ds.graph, chunk_edges=509),
         ds.graph.num_nodes, P, np.asarray(ds.labels) >= 0)
     counts = np.bincount(assign, minlength=P)

@@ -30,6 +30,11 @@ def main():
                     choices=[256, 512])
     ap.add_argument("--scheme", default="both",
                     choices=["vanilla", "hybrid", "both"])
+    ap.add_argument("--partitioner", default="ldg",
+                    help="partitioner registry name recorded with the "
+                         "dry-run (validated against "
+                         "repro.core.partition; the abstract-shapes "
+                         "trace itself is partition-independent)")
     ap.add_argument("--nodes-per-worker", type=int, default=2000)
     ap.add_argument("--batch", type=int, default=1000)   # paper's batch
     ap.add_argument("--features", type=int, default=128) # papers100M width
@@ -83,7 +88,8 @@ def main():
         else [args.scheme]
     for scheme in schemes:
         spec = PipelineSpec.from_scheme(scheme, num_parts=W,
-                                        fanouts=cfg.fanouts)
+                                        fanouts=cfg.fanouts,
+                                        partitioner=args.partitioner)
         counter = dist.RoundCounter()
         # hybrid needs concrete replicated topology at trace time only for
         # shapes — pass structs through a wrapper that treats it as arg
@@ -117,6 +123,7 @@ def main():
         rec = {
             "workload": "gnn-distributed-train",
             "scheme": scheme, "workers": W,
+            "partitioner": spec.plan.partitioner,
             "executor": "shard_map", "prefetch_depth": 0,
             "rounds_traced": counter.rounds,
             "sampling_rounds_traced": counter.sampling_rounds,

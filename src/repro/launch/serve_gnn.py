@@ -40,8 +40,12 @@ def main():
                     help="traffic pattern registry name "
                          "(uniform | hotset)")
     ap.add_argument("--hot-k", type=int, default=64,
-                    help="hot-set size for hotset traffic (top in-degree "
-                         "nodes, shared with the degree cache policy)")
+                    help="hot-set size for hotset traffic (ranked by "
+                         "--hot-scorer, shared with the cache policies)")
+    ap.add_argument("--hot-scorer", default="degree",
+                    help="hot-set scorer registry name ranking the "
+                         "traffic/recycler hot set (repro.core.cache: "
+                         "degree | frequency | blend(w))")
     ap.add_argument("--hot-prob", type=float, default=0.9,
                     help="probability a hotset arrival draws from the "
                          "hot set")
@@ -83,7 +87,7 @@ def main():
     if args.trace:
         obs_trace.start(args.trace, process_name="serve_gnn")
 
-    from repro.core.cache import degree_hot_ids
+    from repro.core.cache import resolve_hot_scorer
     from repro.data import DataSpec, dataset_stats, stats_label
     from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
     from repro.optim import init_opt_state
@@ -125,7 +129,8 @@ def main():
     rate = args.rate
     if rate <= 0:
         probe = np.asarray([int(i) for i in
-                            degree_hot_ids(ds.graph, 8)])
+                            resolve_hot_scorer("degree")
+                            .top_ids(ds.graph, 8)])
         t0 = time.perf_counter()
         for s in probe:
             predictor.predict([int(s)])
@@ -134,7 +139,8 @@ def main():
         print(f"calibrated: single-request service {t1*1e3:.2f} ms "
               f"-> open-loop rate {rate:.0f} req/s")
 
-    hot_ids = degree_hot_ids(ds.graph, args.hot_k)
+    hot_ids = resolve_hot_scorer(args.hot_scorer).top_ids(
+        ds.graph, args.hot_k)
     arrivals = resolve_arrival(args.arrival)(
         args.requests, rate, ds.graph.num_nodes, seed=args.seed,
         hot_ids=hot_ids, hot_prob=args.hot_prob)

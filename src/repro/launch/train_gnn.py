@@ -41,6 +41,15 @@ def main():
                          "or any registered placement scheme, e.g. "
                          "'hybrid_partial(0.25)' for degree-aware partial "
                          "replication")
+    ap.add_argument("--partitioner", default="ldg",
+                    help="partitioner registry name "
+                         "(repro.core.partition): ldg (streaming "
+                         "greedy, the default) | labelprop (LDG + "
+                         "label-propagation refinement, lower edge "
+                         "cut) | metis (needs pymetis) | random "
+                         "(locality-free baseline); parameterized "
+                         "forms like 'labelprop(20)' set the sweep "
+                         "count")
     ap.add_argument("--cache-capacity", type=int, default=0,
                     help="per-worker hot-remote-feature cache entries "
                          "(0 = off); composes with any scheme")
@@ -174,6 +183,7 @@ def main():
         args.scheme, num_parts=args.devices, fanouts=fanouts,
         cache_capacity=args.cache_capacity,
         cache_policy=args.cache_policy,
+        partitioner=args.partitioner,
         executor=executor,
         prefetch_depth=args.prefetch_depth, staging=args.staging,
         staging_lead=args.staging_lead,
@@ -186,7 +196,7 @@ def main():
     cfg = GNNConfig(in_dim=ds.features.shape[1], hidden_dim=256,
                     num_classes=ds.num_classes, num_layers=len(fanouts),
                     fanouts=fanouts, dropout=0.0)
-    say(f"partitioned into {args.devices}: "
+    say(f"partitioned into {args.devices} by {args.partitioner!r}: "
         f"edge-cut {pipe.edge_cut_fraction:.1%}")
     if local_parts is not None:
         say(f"rank-local build: each rank materializes "

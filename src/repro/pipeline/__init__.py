@@ -15,10 +15,13 @@ each swappable without touching the others.
                     features partitioned), "hybrid_partial" (top-``frac``
                     highest-degree in-edge lists replicated, vanilla
                     exchange fallback for the cold rest), or any entry
-                    third parties add with ``register_scheme`` — plus an
-                    optional hot-remote feature cache (``cache_capacity``
-                    built by the ``cache_policy`` registry entry: "degree"
-                    or "frequency") and partitioner balance slacks.
+                    third parties add with ``register_scheme`` — plus a
+                    *partitioner registry name* (``repro.core.partition``:
+                    "ldg", "labelprop", "metis", "random") deciding node
+                    placement, an optional hot-remote feature cache
+                    (``cache_capacity`` built by the ``cache_policy``
+                    registry entry: "degree" or "frequency"), and
+                    partitioner balance slacks.
   ``SamplerSpec``   how a level is sampled: fanouts + a *level-backend
                     name* resolved through the registry in
                     ``repro.core.sampler`` ("reference", "unfused",
@@ -83,8 +86,13 @@ imported the ``VanillaPlan`` / ``HybridPlan`` dataclasses from
 ``repro.core.placement.resolve_scheme(name).build(layout)`` (the old
 dataclasses remain as thin legacy containers).
 """
-from repro.core.cache import (available_cache_policies,
-                              register_cache_policy, resolve_cache_policy)
+from repro.core.cache import (HotSetScorer, available_cache_policies,
+                              available_hot_scorers, register_cache_policy,
+                              register_hot_scorer, resolve_cache_policy,
+                              resolve_hot_scorer)
+from repro.core.partition import (Partitioner, available_partitioners,
+                                  register_partitioner,
+                                  resolve_partitioner)
 from repro.core.feature_store import (FeatureStore,
                                       available_feature_stores,
                                       register_feature_store,
@@ -116,8 +124,12 @@ __all__ = [
     "register_executor", "resolve_executor", "available_executors",
     "PlacementScheme", "PlacementPlan",
     "register_scheme", "resolve_scheme", "available_schemes",
+    "Partitioner", "register_partitioner", "resolve_partitioner",
+    "available_partitioners",
     "register_cache_policy", "resolve_cache_policy",
     "available_cache_policies",
+    "HotSetScorer", "register_hot_scorer", "resolve_hot_scorer",
+    "available_hot_scorers",
     "FeatureStore", "register_feature_store", "resolve_feature_store",
     "available_feature_stores",
     "PreparedBatch", "SeedStream", "SeedStager", "FeatureStager",

@@ -68,17 +68,24 @@ class Pipeline:
     @classmethod
     def build(cls, graph: CSCGraph, features, labels,
               spec: PipelineSpec, *, labeled_mask=None,
-              local_parts=None) -> "Pipeline":
+              local_parts=None, partition_chunk_edges=None) -> "Pipeline":
         """Partition ``graph`` and assemble every stage the spec asks for.
 
-        ``labeled_mask`` defaults to ``labels >= 0``.  ``local_parts``
-        (a ``(lo, hi)`` partition range) builds a rank-local pipeline for
-        the multi-process executor: only this rank's partitions get their
-        feature rows materialized (see
-        ``repro.core.partition.build_layout``); the partitioning itself
-        is deterministic, so every rank derives the identical assignment.
+        The node-placement algorithm resolves by registry name from
+        ``spec.plan.partitioner`` (``repro.core.partition``: ldg |
+        labelprop | metis | random).  ``labeled_mask`` defaults to
+        ``labels >= 0``.  ``local_parts`` (a ``(lo, hi)`` partition
+        range) builds a rank-local pipeline for the multi-process
+        executor: only this rank's partitions get their feature rows
+        materialized (see ``repro.core.partition.build_layout``); the
+        partitioning itself is deterministic, so every rank derives the
+        identical assignment.  ``partition_chunk_edges`` routes a
+        streaming-capable partitioner through its one-pass edge-chunk
+        variant (chunks of that many edges in CSC order) instead of the
+        in-memory walk — the billion-edge ingest shape, usable here on
+        any resident graph.
         """
-        from repro.core.partition import build_layout, partition_graph
+        from repro.core.partition import build_layout, resolve_partitioner
 
         plan = spec.plan
         # fail before the (possibly hours-long) partitioning: a cache
@@ -94,11 +101,22 @@ class Pipeline:
         labels = np.asarray(labels)
         if labeled_mask is None:
             labeled_mask = labels >= 0
-        assign = partition_graph(graph, plan.num_parts,
-                                 np.asarray(labeled_mask),
-                                 seed=plan.partition_seed,
-                                 slack=plan.node_slack,
-                                 labeled_slack=plan.labeled_slack)
+        partitioner = resolve_partitioner(plan.partitioner)
+        if partition_chunk_edges is not None:
+            from repro.data.ingest import iter_edge_chunks
+            assign = partitioner.assign_stream(
+                iter_edge_chunks(graph, chunk_edges=partition_chunk_edges),
+                graph.num_nodes, plan.num_parts,
+                np.asarray(labeled_mask),
+                seed=plan.partition_seed,
+                slack=plan.node_slack,
+                labeled_slack=plan.labeled_slack)
+        else:
+            assign = partitioner.assign(graph, plan.num_parts,
+                                        np.asarray(labeled_mask),
+                                        seed=plan.partition_seed,
+                                        slack=plan.node_slack,
+                                        labeled_slack=plan.labeled_slack)
         layout = build_layout(graph, np.asarray(features), labels, assign,
                               plan.num_parts, local_parts=local_parts)
         # the build chain shared one memoized CSR view of the input graph;
@@ -110,7 +128,8 @@ class Pipeline:
     @classmethod
     def build_from_source(cls, source=None, spec: PipelineSpec = None,
                           *, mmap: bool = True,
-                          local_parts=None) -> "Pipeline":
+                          local_parts=None,
+                          partition_chunk_edges=None) -> "Pipeline":
         """``Pipeline.build`` with the dataset resolved by the
         ``repro.data`` graph-source subsystem.
 
@@ -131,6 +150,9 @@ class Pipeline:
         local_parts : (lo, hi), optional
             Rank-local build for the multi-process executor (see
             ``Pipeline.build``).
+        partition_chunk_edges : int, optional
+            Partition through the streaming edge-chunk variant of the
+            spec'd partitioner (see ``Pipeline.build``).
 
         The resulting pipeline is **bit-identical** to calling
         ``Pipeline.build(ds.graph, ds.features, ds.labels, spec)`` on the
@@ -151,7 +173,8 @@ class Pipeline:
             raise ValueError("build_from_source needs a PipelineSpec")
         ds = resolve_dataset(source, spec.data, mmap=mmap)
         pipe = cls.build(ds.graph, ds.features, ds.labels, spec,
-                         local_parts=local_parts)
+                         local_parts=local_parts,
+                         partition_chunk_edges=partition_chunk_edges)
         pipe.dataset = ds
         return pipe
 
@@ -590,10 +613,12 @@ class Pipeline:
     @property
     def expected_rounds_estimate(self) -> float:
         """Data-dependent estimate of *utilized* rounds per step: feature
-        rounds (2) + the scheme's expected sampling rounds.  Equals the
-        structural count for vanilla/hybrid; for ``hybrid_partial`` it
-        lands strictly between 2 and 2L in proportion to the cold request
-        mass of the actual graph."""
+        rounds (2) + the scheme's expected sampling rounds.  Vanilla's
+        sampling term scales with the layout's remote edge mass (so a
+        lower-edge-cut partitioner lowers it); hybrid is exactly 2; for
+        ``hybrid_partial`` the term scales with the cold request mass
+        that actually crosses partitions, landing strictly between 2 and
+        2L for 0 < frac < 1."""
         if self.placement is not None:
             return self.placement.expected_rounds(
                 self.spec.sampler.num_layers)

@@ -63,6 +63,14 @@ class PlanSpec:
                     step by a ``FeatureStager`` — requires prefetch
                     depth >= 1).  Like the scheme, a registry axis: all
                     stores serve bit-identical rows.
+    partitioner:    partitioner registry name
+                    (``repro.core.partition``): "ldg" (streaming greedy,
+                    the default), "labelprop" (LDG + label-propagation
+                    refinement — lower edge cut, same caps), "metis"
+                    (requires the optional ``pymetis``), or "random" /
+                    "hash" (locality-free baseline).  Parameterized
+                    forms like ``"labelprop(20)"`` set entry-specific
+                    knobs (sweep count).
     node_slack / labeled_slack: partitioner balance targets (labeled_slack
                     defaults to node_slack when None).
     """
@@ -75,6 +83,7 @@ class PlanSpec:
     cache_policy: str = "degree"
     replicate_frac: float | None = None
     feature_store: str = "exchange"
+    partitioner: str = "ldg"
 
     def __post_init__(self):
         from repro.core.cache import available_cache_policies
@@ -121,6 +130,11 @@ class PlanSpec:
                 f"feature store {self.feature_store!r} serves hits from "
                 f"the pinned device cache; set cache_capacity > 0 (and a "
                 f"cache_policy) or use the 'exchange' store")
+        # instantiating validates the name, its parameters, and (for
+        # "metis") that the optional dependency is importable — all at
+        # spec-construction time rather than mid-build
+        from repro.core.partition import resolve_partitioner
+        resolve_partitioner(self.partitioner)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -308,6 +322,7 @@ class PipelineSpec:
                     fused_backend: str = "fused_pallas",
                     unfused_backend: str = "unfused",
                     partition_seed: int = 0,
+                    partitioner: str = "ldg",
                     prefetch_depth: int = 0,
                     staging: bool = False,
                     staging_lead: int = 1,
@@ -333,7 +348,9 @@ class PipelineSpec:
         ``staging_lead`` ring slots beyond the prefetch depth.
         ``feature_store`` selects the feature-serving strategy
         (``repro.core.feature_store`` registry: exchange | pinned_hot |
-        staged).
+        staged); ``partitioner`` selects the node-placement algorithm
+        (``repro.core.partition`` registry: ldg | labelprop | metis |
+        random).
         """
         from repro.core.placement import available_schemes, parse_scheme_name
 
@@ -356,6 +373,7 @@ class PipelineSpec:
                           cache_capacity=cache_capacity,
                           cache_policy=cache_policy,
                           partition_seed=partition_seed,
+                          partitioner=partitioner,
                           feature_store=feature_store),
             sampler=SamplerSpec(fanouts=tuple(fanouts), backend=backend),
             executor=executor,

@@ -16,9 +16,11 @@ explicit staleness contract:
 
 Admission is pluggable: by default every computed seed is admitted (LRU
 evicted at capacity); passing ``admit`` restricts the cache to a known
-hot set — e.g. ``repro.core.cache.degree_hot_ids`` for degree-skewed
-traffic, or an online ``repro.core.cache.FrequencyTracker`` — sharing the
-"who's hot" machinery with the feature-cache policies.
+hot set — e.g. a ``repro.core.cache`` hot-set scorer
+(``resolve_hot_scorer("degree")``) for degree-skewed traffic, or an
+online ``frequency`` scorer — sharing the "who's hot" machinery with the
+feature-cache policies, ``hybrid_partial`` replication, and the hotset
+traffic generator.
 
 The cache stores FINAL logits keyed by seed id: with fixed params and the
 predictor's default fixed salt, a hit is bit-identical to recomputation,
@@ -140,6 +142,7 @@ class RecyclingCache:
 
 def hot_set_admit(hot_ids) -> Callable[[int], bool]:
     """Admission filter keeping only a fixed hot set (e.g. the output of
-    ``repro.core.cache.degree_hot_ids``)."""
+    a ``repro.core.cache`` hot-set scorer:
+    ``resolve_hot_scorer("degree").top_ids(graph, k)``)."""
     hot = set(int(i) for i in np.asarray(hot_ids).ravel())
     return lambda seed: int(seed) in hot

@@ -12,8 +12,9 @@ Two seed distributions:
     recycling/caching scheme.
   * ``hotset``  — with probability ``hot_prob`` the seed is drawn from a
     small hot set (by default the top in-degree nodes via the shared
-    ``repro.core.cache.degree_hot_ids`` ranking), else uniform.  The
-    read-heavy skew LazyGNN-style recycling exploits.
+    ``repro.core.cache`` hot-set scorer registry,
+    ``resolve_hot_scorer("degree")``), else uniform.  The read-heavy
+    skew LazyGNN-style recycling exploits.
 
 Generators are registered by name (the registry pattern used across the
 repo) so the CLI/benchmark select them declaratively.
@@ -48,20 +49,23 @@ def uniform_arrivals(num_requests: int, rate: float, num_nodes: int, *,
 
 def hotset_arrivals(num_requests: int, rate: float, num_nodes: int, *,
                     seed: int = 0, hot_ids=None, graph=None,
-                    hot_k: int = 64, hot_prob: float = 0.9, **_ignored):
+                    hot_k: int = 64, hot_prob: float = 0.9,
+                    scorer: str = "degree", **_ignored):
     """Poisson arrivals, seeds skewed toward a hot set.
 
-    Pass ``hot_ids`` explicitly, or ``graph`` to rank the hot set by
-    in-degree (``repro.core.cache.degree_hot_ids(graph, hot_k)`` — the
-    same "who's hot" ranking the degree feature-cache policy uses).
+    Pass ``hot_ids`` explicitly, or ``graph`` to rank the hot set
+    through the shared scorer registry
+    (``repro.core.cache.resolve_hot_scorer(scorer).top_ids(graph,
+    hot_k)`` — the same "who's hot" ranking the feature-cache policies,
+    ``hybrid_partial`` replication, and recycler admission use).
     """
     if not 0.0 <= hot_prob <= 1.0:
         raise ValueError(f"hot_prob must be in [0, 1], got {hot_prob}")
     if hot_ids is None:
         if graph is None:
             raise ValueError("hotset traffic needs hot_ids= or graph=")
-        from repro.core.cache import degree_hot_ids
-        hot_ids = degree_hot_ids(graph, hot_k)
+        from repro.core.cache import resolve_hot_scorer
+        hot_ids = resolve_hot_scorer(scorer).top_ids(graph, hot_k)
     hot_ids = np.asarray(hot_ids).ravel()
     rng = np.random.default_rng(seed)
     times = _arrival_times(num_requests, rate, rng)

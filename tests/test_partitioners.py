@@ -1,0 +1,427 @@
+"""Partitioner registry (``repro.core.partition``) and hot-set scorer
+registry (``repro.core.cache``): the assign contract enforced at the
+registry boundary, bit-equivalence of the registered LDG entry with the
+direct functions (in-memory and streaming), the clustering fallback's
+edge-cut win, partitioner x scheme build-and-train smoke on both
+executors, and the scorer-unification regressions (hybrid_partial's
+replication ranking == the shared degree scorer; ``degree_hot_ids``
+deprecation shim)."""
+import textwrap
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cache import (FrequencyTracker, available_hot_scorers,
+                              degree_hot_ids, rank_by_score,
+                              register_hot_scorer, resolve_hot_scorer)
+from repro.core.partition import (Partitioner, available_partitioners,
+                                  build_layout, edge_cut, partition_graph,
+                                  partition_graph_streaming,
+                                  register_partitioner,
+                                  resolve_partitioner)
+from repro.data import iter_edge_chunks, resolve_source
+from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+from repro.pipeline import Pipeline, PipelineSpec, PlanSpec, SamplerSpec
+
+P = 4
+SLACK = 1.05
+# every no-optional-deps entry; "hash" aliases "random"
+BUILTINS = ("ldg", "labelprop", "random", "hash")
+
+
+def _gen(name="powerlaw(1.8)", n=500, d=5, seed=3):
+    return resolve_source(name).generate(n, d, num_features=8,
+                                         num_classes=4, seed=seed)
+
+
+def _owners(layout):
+    offsets = np.asarray(layout.offsets)
+    return (np.searchsorted(offsets,
+                            np.arange(layout.graph.num_nodes),
+                            side="right") - 1)
+
+
+# --------------------------------------------------------------------------
+# registry + assign contract
+# --------------------------------------------------------------------------
+
+def test_partitioner_registry_builtins():
+    assert {"ldg", "labelprop", "metis", "random", "hash"} \
+        <= set(available_partitioners())
+    assert resolve_partitioner("ldg").name == "ldg"
+    assert resolve_partitioner("labelprop(3)").sweeps == 3
+    with pytest.raises(KeyError, match="no-such-partitioner"):
+        resolve_partitioner("no-such-partitioner")
+    with pytest.raises(ValueError, match="parameter"):
+        resolve_partitioner("ldg(3)")
+    with pytest.raises(ValueError, match="sweeps"):
+        resolve_partitioner("labelprop(0)")
+
+
+@pytest.mark.parametrize("name", BUILTINS)
+@pytest.mark.parametrize("source", ("powerlaw(1.8)",
+                                    "rmat(0.57,0.19,0.19,0.05)"))
+def test_assign_contract_every_partitioner(name, source):
+    """Totality, dtype, range, and the node balance cap hold for every
+    registered entry; the assignment is deterministic (same inputs ->
+    bit-identical output)."""
+    ds = _gen(source, n=400, d=5)
+    lab = np.asarray(ds.labels) >= 0
+    part = resolve_partitioner(name)
+    a = part.assign(ds.graph, P, lab, seed=2, slack=SLACK)
+    b = resolve_partitioner(name).assign(ds.graph, P, lab, seed=2,
+                                         slack=SLACK)
+    n = ds.graph.num_nodes
+    assert a.shape == (n,) and a.dtype == np.int32
+    assert a.min() >= 0 and a.max() < P
+    counts = np.bincount(a, minlength=P)
+    assert counts.sum() == n
+    assert counts.max() <= SLACK * n / P + 1
+    np.testing.assert_array_equal(a, b)
+
+
+def test_registry_ldg_bit_equal_to_direct_functions():
+    """The registered LDG entry is the same placer: in-memory assign ==
+    ``partition_graph`` and the streaming variant ==
+    ``partition_graph_streaming``, bit for bit."""
+    ds = _gen(n=600, d=5)
+    lab = np.asarray(ds.labels) >= 0
+    part = resolve_partitioner("ldg")
+    np.testing.assert_array_equal(
+        part.assign(ds.graph, P, lab, seed=0),
+        partition_graph(ds.graph, P, lab, seed=0))
+    np.testing.assert_array_equal(
+        part.assign_stream(iter_edge_chunks(ds.graph, chunk_edges=257),
+                           ds.graph.num_nodes, P, lab),
+        partition_graph_streaming(
+            iter_edge_chunks(ds.graph, chunk_edges=257),
+            ds.graph.num_nodes, P, lab))
+
+
+def test_streaming_unsupported_raises():
+    with pytest.raises(NotImplementedError, match="streaming"):
+        resolve_partitioner("labelprop").assign_stream(
+            iter(()), 10, 2, np.zeros(10, bool))
+
+
+def test_labelprop_cut_never_worse_than_ldg():
+    """Refinement only accepts strictly cut-reducing moves from the LDG
+    start, so labelprop's edge cut is <= LDG's on every family — and
+    strictly lower on the skewed bench families (the acceptance
+    criterion the partitioning sweep records)."""
+    for source, strict in (("powerlaw(1.8)", True),
+                           ("rmat(0.57,0.19,0.19,0.05)", True),
+                           ("uniform", False)):
+        ds = _gen(source, n=600, d=6)
+        lab = np.asarray(ds.labels) >= 0
+        cut_ldg = edge_cut(
+            ds.graph, resolve_partitioner("ldg").assign(ds.graph, P, lab))
+        cut_lp = edge_cut(
+            ds.graph,
+            resolve_partitioner("labelprop").assign(ds.graph, P, lab))
+        assert cut_lp <= cut_ldg, source
+        if strict:
+            assert cut_lp < cut_ldg, source
+
+
+def test_random_partitioner_seed_sensitivity():
+    ds = _gen(n=400)
+    lab = np.asarray(ds.labels) >= 0
+    part = resolve_partitioner("random")
+    a0 = part.assign(ds.graph, P, lab, seed=0)
+    a1 = part.assign(ds.graph, P, lab, seed=1)
+    assert not np.array_equal(a0, a1)
+    # labeled nodes stay balanced too (dealt round-robin)
+    labc = np.bincount(a0[lab], minlength=P)
+    assert labc.max() - labc.min() <= 1
+
+
+def test_registry_boundary_rejects_broken_partitioner():
+    """The validate step at the registry boundary catches contract
+    violations third-party entries might ship: out-of-range ids and
+    balance-cap violations."""
+    class OutOfRange(Partitioner):
+        name = "t-oor"
+
+        def _assign(self, graph, num_parts, labeled_mask, seed, slack,
+                    labeled_slack):
+            return np.full(graph.num_nodes, num_parts, np.int64)
+
+    class Lopsided(Partitioner):
+        name = "t-lop"
+
+        def _assign(self, graph, num_parts, labeled_mask, seed, slack,
+                    labeled_slack):
+            return np.zeros(graph.num_nodes, np.int64)
+
+    ds = _gen(n=200)
+    lab = np.asarray(ds.labels) >= 0
+    with pytest.raises(ValueError, match="outside"):
+        OutOfRange().assign(ds.graph, P, lab)
+    with pytest.raises(ValueError, match="balance"):
+        Lopsided().assign(ds.graph, P, lab)
+
+
+def test_register_partitioner_duplicate_and_custom_entry():
+    class Everything0(Partitioner):
+        name = "test-zeros"
+
+        def _assign(self, graph, num_parts, labeled_mask, seed, slack,
+                    labeled_slack):
+            # balanced round-robin: satisfies the boundary invariants
+            return np.arange(graph.num_nodes, dtype=np.int64) % num_parts
+
+    register_partitioner("test-zeros", Everything0, overwrite=True)
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            register_partitioner("ldg", Everything0)
+        ds = _gen(n=200)
+        a = resolve_partitioner("test-zeros").assign(
+            ds.graph, P, np.asarray(ds.labels) >= 0)
+        assert a.max() < P
+        # the new entry threads through the spec layer untouched
+        PlanSpec(num_parts=P, partitioner="test-zeros")
+    finally:
+        from repro.core.partition import _PARTITIONERS
+        _PARTITIONERS.pop("test-zeros", None)
+
+
+def test_metis_entry_contract():
+    pytest.importorskip("pymetis")
+    ds = _gen(n=400, d=5)
+    lab = np.asarray(ds.labels) >= 0
+    a = resolve_partitioner("metis").assign(ds.graph, P, lab, seed=0)
+    n = ds.graph.num_nodes
+    counts = np.bincount(a, minlength=P)
+    assert counts.sum() == n
+    assert counts.max() <= SLACK * n / P + 1
+
+
+def test_metis_missing_raises_clean_importerror():
+    try:
+        import pymetis                                    # noqa: F401
+        pytest.skip("pymetis installed; the missing-dep path is moot")
+    except ImportError:
+        pass
+    with pytest.raises(ImportError, match="pymetis"):
+        resolve_partitioner("metis")
+
+
+# --------------------------------------------------------------------------
+# spec / pipeline threading
+# --------------------------------------------------------------------------
+
+def test_plan_spec_validates_partitioner():
+    PlanSpec(num_parts=2, partitioner="labelprop(5)")
+    with pytest.raises(KeyError, match="unknown partitioner"):
+        PlanSpec(num_parts=2, partitioner="no-such")
+
+
+def _spec(partitioner, scheme="vanilla", executor="vmap"):
+    return PipelineSpec(
+        plan=PlanSpec(num_parts=2, scheme=scheme, partitioner=partitioner),
+        sampler=SamplerSpec(fanouts=(3, 3), backend="unfused"),
+        executor=executor)
+
+
+def test_pipeline_build_routes_through_registry():
+    """``Pipeline.build`` with the default spec produces the identical
+    layout to the pre-registry direct ``partition_graph`` path, and the
+    streaming-chunk build matches a manual ``assign_stream``."""
+    ds = _gen(n=400, d=5)
+    lab = np.asarray(ds.labels) >= 0
+    pipe = Pipeline.build(ds.graph, ds.features, ds.labels,
+                          _spec("ldg"))
+    direct = partition_graph(ds.graph, 2, lab, seed=0)
+    np.testing.assert_array_equal(_owners(pipe.layout),
+                                  direct[np.asarray(pipe.layout.perm)])
+
+    pipe_s = Pipeline.build(ds.graph, ds.features, ds.labels,
+                            _spec("ldg"), partition_chunk_edges=123)
+    streamed = resolve_partitioner("ldg").assign_stream(
+        iter_edge_chunks(ds.graph, chunk_edges=123),
+        ds.graph.num_nodes, 2, lab)
+    np.testing.assert_array_equal(_owners(pipe_s.layout),
+                                  streamed[np.asarray(pipe_s.layout.perm)])
+
+
+@pytest.mark.parametrize("partitioner", ("ldg", "labelprop", "random"))
+@pytest.mark.parametrize("scheme", ("vanilla", "hybrid",
+                                    "hybrid_partial(0.5)"))
+def test_partitioner_x_scheme_train_smoke(partitioner, scheme):
+    """Every partitioner x scheme cell builds and takes a finite train
+    step on the vmap executor (shard_map runs in the subprocess test)."""
+    ds = _gen(n=300, d=4)
+    cfg = GNNConfig(in_dim=8, hidden_dim=8, num_classes=4, num_layers=2,
+                    fanouts=(3, 3), dropout=0.0)
+
+    def loss_fn(p, mfgs, h, y, v):
+        return gnn_loss(p, mfgs, h, y, v, cfg)
+
+    params = init_gnn_params(jax.random.key(0), cfg)
+    pipe = Pipeline.build(ds.graph, ds.features, ds.labels,
+                          _spec(partitioner, scheme=scheme))
+    loss, grads, _ = pipe.step_fn(loss_fn)(params, pipe.seeds(8, 1),
+                                           jnp.uint32(5))
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(g)).all()
+               for g in jax.tree.leaves(grads))
+
+
+PARTITIONER_EXECUTOR_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.data import DataSpec
+    from repro.models.gnn import GNNConfig, gnn_loss, init_gnn_params
+    from repro.pipeline import Pipeline, PipelineSpec, PlanSpec, SamplerSpec
+
+    cfg = GNNConfig(in_dim=8, hidden_dim=8, num_classes=4, num_layers=2,
+                    fanouts=(3, 3), dropout=0.0)
+    def loss_fn(p, mfgs, h, y, v):
+        return gnn_loss(p, mfgs, h, y, v, cfg)
+    params = init_gnn_params(jax.random.key(0), cfg)
+
+    for partitioner in ("labelprop", "random"):
+        ref = None
+        for executor in ("vmap", "shard_map"):
+            spec = PipelineSpec(
+                plan=PlanSpec(num_parts=2, scheme="vanilla",
+                              partitioner=partitioner),
+                sampler=SamplerSpec(fanouts=(3, 3), backend="unfused"),
+                executor=executor,
+                data=DataSpec(source="powerlaw(1.8)",
+                              num_nodes=400, avg_degree=5,
+                              num_features=8, num_classes=4))
+            pipe = Pipeline.build_from_source(spec=spec)
+            loss, grads, _ = pipe.step_fn(loss_fn)(
+                params, pipe.seeds(8, 1), jnp.uint32(5))
+            if ref is None:
+                ref = (float(loss), grads)
+            else:
+                assert float(loss) == ref[0], (partitioner, executor)
+                for a, b in zip(jax.tree.leaves(ref[1]),
+                                jax.tree.leaves(grads)):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+    print("PARTITIONER_EXECUTORS_OK")
+""")
+
+
+def test_partitioners_bit_identical_across_executors_subprocess(subproc):
+    subproc.run_code(PARTITIONER_EXECUTOR_SCRIPT,
+                     expect="PARTITIONER_EXECUTORS_OK")
+
+
+# --------------------------------------------------------------------------
+# hot-set scorer registry
+# --------------------------------------------------------------------------
+
+def test_hot_scorer_registry_builtins():
+    assert {"degree", "frequency", "blend"} <= set(available_hot_scorers())
+    with pytest.raises(KeyError, match="no-such-scorer"):
+        resolve_hot_scorer("no-such-scorer")
+    with pytest.raises(ValueError, match="parameter"):
+        resolve_hot_scorer("degree(2)")
+    assert resolve_hot_scorer("blend(0.7)").weight == 0.7
+    with pytest.raises(ValueError, match="weight"):
+        resolve_hot_scorer("blend(1.5)")
+
+
+def test_rank_by_score_stable_tie_break():
+    scores = np.array([2.0, 5.0, 2.0, 5.0])
+    np.testing.assert_array_equal(rank_by_score(scores),
+                                  np.array([1, 3, 0, 2], np.int32))
+    np.testing.assert_array_equal(rank_by_score(scores, k=2),
+                                  np.array([1, 3], np.int32))
+
+
+def test_degree_scorer_matches_legacy_ranking():
+    """The shared ranking is bit-identical to the old stable
+    ``argsort(-deg)`` every former private copy used."""
+    ds = _gen(n=400, d=5)
+    deg = np.asarray(ds.graph.degrees())
+    legacy = np.argsort(-deg, kind="stable")
+    got = resolve_hot_scorer("degree").top_ids(ds.graph)
+    np.testing.assert_array_equal(got, legacy.astype(np.int32))
+
+
+def test_hybrid_partial_hot_set_is_degree_scorer_topk():
+    """Scorer-unification regression: the replication set
+    ``hybrid_partial`` builds == the degree scorer's top-k."""
+    ds = _gen(n=400, d=5)
+    lab = np.asarray(ds.labels) >= 0
+    assign = partition_graph(ds.graph, P, lab, seed=0)
+    layout = build_layout(ds.graph, ds.features, ds.labels, assign, P)
+    from repro.core.placement import resolve_scheme
+    plan = resolve_scheme("hybrid_partial(0.25)").build(layout)
+    k = int(np.round(0.25 * layout.graph.num_nodes))
+    expect = resolve_hot_scorer("degree").top_ids(layout.graph, k)
+    hot_mask = np.asarray(plan.hot_mask)
+    assert hot_mask.sum() == k
+    assert hot_mask[expect].all()
+
+
+def test_frequency_scorer_and_tracker_agree():
+    import types
+    tracker = FrequencyTracker(10)
+    tracker.observe(np.array([3, 3, 7, 7, 7, 1]))
+    scorer = resolve_hot_scorer("frequency")
+    scorer.tracker = tracker
+    fake_graph = types.SimpleNamespace(num_nodes=10)
+    np.testing.assert_array_equal(scorer.top_ids(fake_graph, 3),
+                                  tracker.topk(3))
+    np.testing.assert_array_equal(tracker.topk(3),
+                                  rank_by_score(tracker.counts, 3))
+    # a tracker sized for a different graph is rejected, not misread
+    with pytest.raises(ValueError, match="covers"):
+        scorer.scores(types.SimpleNamespace(num_nodes=11))
+
+
+def test_blend_scorer_degenerates_to_degree():
+    ds = _gen(n=300, d=4)
+    full = resolve_hot_scorer("blend(1.0)")   # all weight on degree
+    np.testing.assert_array_equal(full.top_ids(ds.graph, 10),
+                                  resolve_hot_scorer("degree")
+                                  .top_ids(ds.graph, 10))
+
+
+def test_register_hot_scorer_duplicate_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        register_hot_scorer("degree", lambda: None)
+
+
+def test_degree_hot_ids_deprecation_shim():
+    ds = _gen(n=200, d=4)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        ids = degree_hot_ids(ds.graph, 7)
+    assert any(issubclass(w.category, DeprecationWarning) and
+               "resolve_hot_scorer" in str(w.message) for w in caught)
+    np.testing.assert_array_equal(
+        ids, resolve_hot_scorer("degree").top_ids(ds.graph, 7))
+
+
+# --------------------------------------------------------------------------
+# satellite regression: edge_cut_fraction memoization
+# --------------------------------------------------------------------------
+
+def test_edge_cut_fraction_memoized(monkeypatch):
+    ds = _gen(n=300, d=4)
+    pipe = Pipeline.build(ds.graph, ds.features, ds.labels, _spec("ldg"))
+    calls = {"n": 0}
+    import repro.core.partition as partition_mod
+    real = partition_mod.edge_cut
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(partition_mod, "edge_cut", counting)
+    first = pipe.edge_cut_fraction
+    second = pipe.edge_cut_fraction
+    assert first == second
+    assert calls["n"] <= 1          # second access served from the memo

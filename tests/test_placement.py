@@ -228,8 +228,10 @@ def test_trace_round_counts_under_prefetch(world, scheme):
 
 def test_partial_expected_rounds_strictly_between(world):
     """The data-dependent estimate interpolates: for 0 < frac < 1 the
-    expected (utilized) rounds land strictly between hybrid (2) and
-    vanilla (2L), monotonically decreasing in frac."""
+    expected (utilized) rounds land strictly between hybrid (2) and the
+    structural ceiling (2L), monotonically decreasing in frac, and the
+    degenerate ends meet hybrid (frac=1) and vanilla-on-the-same-layout
+    (frac=0 — both scale by the layout's remote edge mass)."""
     ds, layout, cfg, params = world
     estimates = []
     for frac in (0.1, 0.5, 0.9):
@@ -240,15 +242,21 @@ def test_partial_expected_rounds_strictly_between(world):
         estimates.append(est)
         plan = pipe.placement
         assert 0.0 < plan.cold_source_fraction < 1.0
+        assert 0.0 < plan.cold_remote_source_fraction \
+            <= plan.cold_source_fraction
         assert 0 < plan.replicated_edges < layout.graph.num_edges
     assert estimates == sorted(estimates, reverse=True)
-    # degenerate ends agree with the structural counts
+    # degenerate ends: full replication hits the hybrid floor; zero
+    # replication recovers vanilla's partition-aware estimate exactly
     assert Pipeline.from_layout(
         layout, _spec(scheme="hybrid_partial(1.0)")
     ).expected_rounds_estimate == 2.0
+    vanilla_est = Pipeline.from_layout(
+        layout, _spec(scheme="vanilla")).expected_rounds_estimate
+    assert 2.0 < vanilla_est <= 2.0 * L_
     assert Pipeline.from_layout(
         layout, _spec(scheme="hybrid_partial(0.0)")
-    ).expected_rounds_estimate == 2.0 * L_
+    ).expected_rounds_estimate == pytest.approx(vanilla_est)
 
 
 def test_utilized_bytes_interpolate(world):

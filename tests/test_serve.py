@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.cache import FrequencyTracker, degree_hot_ids
+from repro.core.cache import (FrequencyTracker, degree_hot_ids,
+                              resolve_hot_scorer)
 from repro.core.partition import build_layout, partition_graph
 from repro.data.synthetic_graph import make_power_law_graph
 from repro.models.gnn import GNNConfig, gnn_forward, init_gnn_params
@@ -100,7 +101,8 @@ def test_served_bits_equal_direct_predict_with_recycling_off(world):
     pred = Predictor(pipe, params, cfg, buckets=(1, 4, 16))
     arrivals = hotset_arrivals(60, rate=5000.0,
                                num_nodes=ds.graph.num_nodes,
-                               hot_ids=degree_hot_ids(ds.graph, 16),
+                               hot_ids=resolve_hot_scorer("degree")
+                               .top_ids(ds.graph, 16),
                                seed=2)
     server = GNNServer(pred, max_delay=1e-3)
     stats, outputs = server.run(arrivals, collect_outputs=True)
@@ -115,7 +117,8 @@ def test_recycled_bits_equal_fresh_under_fixed_salt(world):
     pred = Predictor(pipe, params, cfg, buckets=(1, 4, 16))
     arrivals = hotset_arrivals(80, rate=5000.0,
                                num_nodes=ds.graph.num_nodes,
-                               hot_ids=degree_hot_ids(ds.graph, 8),
+                               hot_ids=resolve_hot_scorer("degree")
+                               .top_ids(ds.graph, 8),
                                hot_prob=0.95, seed=4)
     server = GNNServer(pred, max_delay=1e-3,
                        recycler=RecyclingCache(capacity=64, tau=1000))
@@ -257,7 +260,8 @@ def test_recycler_validation():
 def test_degree_hot_ids_ranking(world):
     ds, *_ = world
     deg = np.asarray(ds.graph.degrees())
-    hot = degree_hot_ids(ds.graph, 10)
+    with pytest.warns(DeprecationWarning, match="resolve_hot_scorer"):
+        hot = degree_hot_ids(ds.graph, 10)
     assert len(hot) == 10
     ranked = np.sort(deg)[::-1]
     np.testing.assert_array_equal(deg[hot], ranked[:10])
